@@ -1,0 +1,142 @@
+"""Roofline report: merge dry-run JSON records with the analytic model.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun),
+computes the three roofline terms per (arch × shape × mesh):
+
+    compute   — analytic step FLOPs / (chips × 197 TFLOP/s)
+    memory    — analytic HBM traffic / (chips × 819 GB/s)
+    collective— trip-count-aware HLO collective bytes × wire factor / 50 GB/s
+
+and emits the §Roofline markdown table + a machine-readable summary JSON.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod1]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.configs.base import SHAPES, get_config
+from repro.models import lm
+from repro.tools.analytic import analytic_roofline
+
+RESULTS_DIR = os.path.join("benchmarks", "results", "dryrun")
+
+_PCACHE = {}
+
+
+def _counts(arch):
+    if arch not in _PCACHE:
+        cfg = get_config(arch)
+        _PCACHE[arch] = (cfg, lm.param_count(cfg), lm.active_param_count(cfg))
+    return _PCACHE[arch]
+
+
+def load_records(mesh_filter=None, include_variants=False):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        if os.path.basename(path).startswith("summary"):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        if not isinstance(r, dict) or "cell" not in r:
+            continue
+        parts = r["cell"].split("__")
+        if len(parts) > 3 and not include_variants:
+            continue  # hillclimb variants handled separately
+        if mesh_filter and (len(parts) < 3 or parts[2] != mesh_filter):
+            continue
+        recs.append(r)
+    return recs
+
+
+def enrich(rec):
+    """Attach analytic roofline terms to one dry-run record."""
+    if rec.get("status") != "ok":
+        return rec
+    cfg, n_params, n_active = _counts(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    mesh_shape = rec["mesh"]
+    model_par = mesh_shape[-1]
+    ar = analytic_roofline(
+        cfg,
+        shape,
+        chips=rec["chips"],
+        collective_bytes_by_kind=rec["collectives"]["bytes_by_kind"],
+        model_par=model_par,
+        fsdp=rec["layout"].get("fsdp", False),
+        remat=rec["run"].get("remat", "dots"),
+        fused_xent=False,
+        params=n_params,
+        active_params=n_active,
+    )
+    rec["analytic"] = ar.to_json()
+    return rec
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(recs):
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | dominant | "
+        "useful | roofline-frac | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        cell = r["cell"].split("__")
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {cell[0]} | {cell[1]} | {cell[2]} | — | — | — | — | — | — | "
+                f"SKIP: sub-quadratic rule |"
+            )
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {cell[0]} | {cell[1]} | {cell[2]} | — | — | — | — | — | — | "
+                f"ERROR {r.get('error','')[:60]} |"
+            )
+            continue
+        a = r["analytic"]
+        lines.append(
+            "| {arch} | {shape} | {mesh} | {c} | {m} | {x} | **{dom}** | "
+            "{useful:.2f} | {rf:.1%} | |".format(
+                arch=cell[0], shape=cell[1], mesh=cell[2],
+                c=fmt_s(a["compute_s"]), m=fmt_s(a["memory_s"]),
+                x=fmt_s(a["collective_s"]), dom=a["dominant"],
+                useful=min(a["useful_ratio"], 9.99), rf=a["roofline_fraction"],
+            )
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--json-out", default=os.path.join(RESULTS_DIR, "summary.json"))
+    args = ap.parse_args()
+    recs = [enrich(r) for r in load_records(args.mesh)]
+    recs.sort(key=lambda r: r["cell"])
+    print(table(recs))
+    with open(args.json_out, "w") as f:
+        json.dump(recs, f, indent=1)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["analytic"]["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["analytic"]["collective_s"]
+                   / max(r["analytic"]["step_time_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['cell']} "
+              f"({worst['analytic']['roofline_fraction']:.1%})", file=sys.stderr)
+        print(f"most collective-bound:  {coll['cell']}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Benchmark harness — one entry per paper table/figure + framework microbenches.
+
+Emits ``name,us_per_call,derived`` CSV rows (derived = %speedup or context).
+
+  fig1.*       — the paper's Figure 1 protocol: autotuned vs default across
+                 input sizes (benchmarks/fig1_autotune.py)
+  search.*     — Orio-style search-strategy comparison
+  kernel.*     — Pallas-kernel interpret-mode correctness-at-speed spot check
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, repeats=3):
+    out = jax.jit(fn)(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.jit(fn)(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--budget", type=int, default=None)
+    args = ap.parse_args()
+    budget = args.budget or (8 if args.quick else 14)
+
+    rows = []
+
+    # --- Figure 1 analogue ------------------------------------------------
+    from benchmarks import fig1_autotune
+
+    fig1 = fig1_autotune.bench(budget=budget, quick=args.quick)
+    for site, site_rows in fig1.items():
+        for r in site_rows:
+            rows.append(
+                (f"fig1.{site}.size{r['size']}.baseline", r["baseline_s"] * 1e6, ""),
+            )
+            rows.append(
+                (
+                    f"fig1.{site}.size{r['size']}.tuned",
+                    r["tuned_s"] * 1e6,
+                    f"+{r['speedup_pct']:.0f}%",
+                )
+            )
+
+    # --- search strategies --------------------------------------------------
+    from benchmarks import search_convergence
+
+    for r in search_convergence.bench(budget=max(8, budget)):
+        rows.append(
+            (
+                f"search.{r['algorithm']}",
+                r["best_s"] * 1e6,
+                f"evals_to_best={r['evals_to_best']}",
+            )
+        )
+
+    # --- kernels (interpret-mode; correctness-weighted spot check) ---------
+    from repro.kernels import ref
+    from repro.kernels.rmsnorm import rmsnorm_pallas
+
+    rs = np.random.RandomState(0)
+    x = jnp.asarray(rs.randn(256, 512), jnp.float32)
+    w = jnp.asarray(rs.randn(512), jnp.float32)
+    t_ref = _time(ref.rmsnorm, x, w)
+    rows.append(("kernel.rmsnorm.ref_jnp", t_ref * 1e6, ""))
+    out = rmsnorm_pallas(x, w, block_rows=64, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref.rmsnorm(x, w))))
+    rows.append(("kernel.rmsnorm.pallas_interp_maxerr", err, "correctness"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Search-strategy comparison (Orio ships multiple strategies; this is the
+table justifying which one the framework defaults to).
+
+Each algorithm gets the same budget on the same wall-clock objective
+(chunked attention at one shape); we report best-found time and the
+evaluation count at which it was first reached.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ALGORITHMS, WallClockEvaluator, make_search
+from repro.core.search.base import Trial
+from repro.models.tunables import ATTN_CHUNK_SPACE, attention_chunked
+
+RESULTS = os.path.join("benchmarks", "results")
+
+
+def bench(budget=16, seed=0):
+    rs = np.random.RandomState(0)
+    s = 512
+    q = jnp.asarray(rs.randn(1, 4, s, 32) * 0.3, jnp.float32)
+    k = jnp.asarray(rs.randn(1, 2, s, 32) * 0.3, jnp.float32)
+    v = jnp.asarray(rs.randn(1, 2, s, 32), jnp.float32)
+    ev = WallClockEvaluator(repeats=3, warmup=1)
+
+    rows = []
+    for name in sorted(ALGORITHMS):
+        measured = {}
+
+        def objective(cfg):
+            key = tuple(sorted(cfg.items()))
+            if key not in measured:
+                m = ev.evaluate(attention_chunked.variant(**cfg), (q, k, v))
+                measured[key] = m
+            m = measured[key]
+            return Trial(config=cfg, objective=m.objective, ok=m.ok)
+
+        res = make_search(name, budget=budget, seed=seed).run(
+            ATTN_CHUNK_SPACE, objective
+        )
+        # first index reaching the best
+        best = res.best_objective
+        first = next(
+            (i + 1 for i, t in enumerate(res.trials) if t.objective <= best * 1.001),
+            res.evaluations,
+        )
+        rows.append(
+            {
+                "algorithm": name,
+                "best_s": best,
+                "evals": res.evaluations,
+                "evals_to_best": first,
+            }
+        )
+        print(
+            f"  {name:12s} best {best*1e3:7.2f}ms in {res.evaluations:3d} evals "
+            f"(first hit at {first})"
+        )
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "search_convergence.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    bench()

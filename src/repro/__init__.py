@@ -1,0 +1,4 @@
+"""repro — annotation-based autotuning for sustainable performance
+portability (Mametjanov & Norris, 2013) rebuilt as a production JAX/Pallas
+training + serving framework for TPU pods."""
+__version__ = "1.0.0"

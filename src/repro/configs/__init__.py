@@ -1,0 +1,12 @@
+from .base import (
+    ARCH_NAMES,
+    SHAPES,
+    ArchConfig,
+    LayerSpec,
+    Segment,
+    ShapeSpec,
+    all_configs,
+    cell_is_runnable,
+    get_config,
+    input_specs,
+)

@@ -1,0 +1,270 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is an :class:`ArchConfig` instance in its own
+module (``repro/configs/<id>.py``); ``get_config(name)`` resolves them.
+``SHAPES`` carries the four assigned input-shape cells; ``input_specs``
+builds the ShapeDtypeStruct stand-ins the multi-pod dry-run lowers against
+(no allocation, per the brief).
+
+`reduced()` produces the family-preserving smoke-test config: same block
+pattern / attention kinds / MoE topology, tiny dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"          # attn | mamba | mlstm | slstm
+    window: int = 0              # 0 = full attention; >0 = sliding window
+    ffn: str = "dense"           # dense | moe | moe+dense | none
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: Tuple[LayerSpec, ...]
+    repeats: int
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    ffn_kind: str = "swiglu"     # swiglu | geglu | gelu | relu2
+    qkv_bias: bool = False
+    # attention pattern
+    window: int = 0                        # SWA window for swa layers
+    local_global_ratio: int = 0            # k local layers per 1 global
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1                     # MoE FFN every k-th layer
+    moe_residual_dense: bool = False       # arctic: dense FFN ∥ MoE
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    attn_every: int = 0                    # jamba: attention every k-th layer
+    ssm_pattern: Tuple[str, ...] = ()      # xlstm: ("mlstm", "slstm")
+    mamba_expand: int = 2
+    mamba_d_state: int = 16
+    # frontend stubs
+    frontend: Optional[str] = None         # audio_frames | vision_patches
+    num_prefix: int = 0                    # paligemma: 256 patch embeddings
+    # numerics
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    sub_quadratic: bool = False            # may run long_500k
+    notes: str = ""
+
+    # ---------------------------------------------------------------- helpers
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def segments(self) -> Tuple[Segment, ...]:
+        """Decompose num_layers into scan-able homogeneous segments."""
+        L = self.num_layers
+
+        def ffn_for(layer_idx: int) -> str:
+            if self.num_experts == 0:
+                return "dense" if self.d_ff > 0 else "none"
+            if (layer_idx % self.moe_every) == (self.moe_every - 1):
+                return "moe+dense" if self.moe_residual_dense else "moe"
+            return "dense"
+
+        if self.ssm_pattern:  # xlstm: alternating recurrent blocks, no FFN
+            pat = tuple(LayerSpec(mixer=m, ffn="none") for m in self.ssm_pattern)
+            assert L % len(pat) == 0
+            return (Segment(pat, L // len(pat)),)
+
+        if self.attn_every:  # jamba: 1 attn + (attn_every-1) mamba per block
+            k = self.attn_every
+            assert L % k == 0
+            pat = tuple(
+                LayerSpec(
+                    mixer=("attn" if i == 0 else "mamba"),
+                    ffn=ffn_for(i),
+                )
+                for i in range(k)
+            )
+            return (Segment(pat, L // k),)
+
+        if self.local_global_ratio:  # gemma3: 5 local : 1 global
+            r = self.local_global_ratio
+            blk = r + 1
+            full_blocks, extra = divmod(L, blk)
+            pat = tuple(
+                LayerSpec(mixer="attn", window=(self.window if i < r else 0),
+                          ffn=ffn_for(i))
+                for i in range(blk)
+            )
+            segs = [Segment(pat, full_blocks)]
+            if extra:
+                tail = tuple(
+                    LayerSpec(mixer="attn", window=self.window, ffn=ffn_for(i))
+                    for i in range(extra)
+                )
+                segs.append(Segment(tail, 1))
+            return tuple(segs)
+
+        # homogeneous dense / moe / swa archs
+        spec = LayerSpec(mixer="attn", window=self.window, ffn=ffn_for(0))
+        if self.num_experts and self.moe_every > 1:
+            pat = tuple(LayerSpec(mixer="attn", window=self.window, ffn=ffn_for(i))
+                        for i in range(self.moe_every))
+            assert L % self.moe_every == 0
+            return (Segment(pat, L // self.moe_every),)
+        return (Segment((spec,), L),)
+
+    def reduced(self) -> "ArchConfig":
+        """Family-preserving tiny config for CPU smoke tests."""
+        scale = {
+            "d_model": 64,
+            "d_ff": 128 if self.d_ff > 0 else 0,
+            "num_heads": 4,
+            "num_kv_heads": max(1, min(self.num_kv_heads, 2)),
+            "head_dim": 16,
+            "vocab_size": 256,
+            "num_experts": min(self.num_experts, 4),
+            "experts_per_token": min(self.experts_per_token, 2),
+            "num_prefix": min(self.num_prefix, 4),
+            "window": min(self.window, 8) if self.window else 0,
+        }
+        # keep the layer pattern but few repeats
+        seg_len = 1
+        if self.ssm_pattern:
+            seg_len = len(self.ssm_pattern)
+        elif self.attn_every:
+            seg_len = self.attn_every
+        elif self.local_global_ratio:
+            seg_len = self.local_global_ratio + 1
+        elif self.num_experts and self.moe_every > 1:
+            seg_len = self.moe_every
+        layers = seg_len * 2
+        return dataclasses.replace(
+            self, num_layers=layers, dtype="float32", **scale
+        )
+
+
+# ---------------------------------------------------------------------------
+# Shapes (the four assigned cells)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """The brief's skip rule: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            f"{cfg.name} is a quadratic-attention arch; long_500k requires "
+            "sub-quadratic attention (skip noted per brief)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell.
+
+    train/prefill: the full token batch (plus stub frontend embeddings);
+    decode: one new token per sequence (cache specs come from the model).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    f = jnp.dtype(cfg.dtype)
+    i = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio_frames":
+            return {
+                "embeds": sd((B, S, cfg.d_model), f),
+                "labels": sd((B, S), i),
+            }
+        if cfg.frontend == "vision_patches":
+            P = cfg.num_prefix
+            return {
+                "embeds": sd((B, P, cfg.d_model), f),
+                "tokens": sd((B, S - P), i),
+                "labels": sd((B, S), i),
+                "loss_mask": sd((B, S), jnp.float32),
+            }
+        return {"tokens": sd((B, S), i), "labels": sd((B, S), i)}
+    # decode: one token against a seq_len-deep cache
+    return {"tokens": sd((B, 1), i), "pos": sd((), i)}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_NAMES = (
+    "minitron_4b",
+    "qwen2_5_3b",
+    "qwen2_0_5b",
+    "gemma3_27b",
+    "xlstm_1_3b",
+    "musicgen_large",
+    "arctic_480b",
+    "mixtral_8x7b",
+    "paligemma_3b",
+    "jamba_1_5_large",
+)
+
+_ALIASES = {
+    "minitron-4b": "minitron_4b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "gemma3-27b": "gemma3_27b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "musicgen-large": "musicgen_large",
+    "arctic-480b": "arctic_480b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "paligemma-3b": "paligemma_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    if mod_name not in ARCH_NAMES:
+        raise KeyError(f"unknown arch {name!r}; have {list(ARCH_NAMES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get_config(n) for n in ARCH_NAMES}

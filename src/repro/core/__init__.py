@@ -1,0 +1,45 @@
+"""repro.core — annotation-based empirical autotuning (the paper's contribution).
+
+Public API:
+
+    from repro.core import (
+        tunable, ParamSpace, PowerOfTwoParam, EnumParam, IntParam, BoolParam,
+        Constraint, autotune, tune_or_lookup, TuningDatabase, default_db,
+        make_search, WallClockEvaluator, CostModelEvaluator, detect_platform,
+    )
+"""
+from .params import (
+    BoolParam,
+    Config,
+    Constraint,
+    EnumParam,
+    IntParam,
+    Param,
+    ParamSpace,
+    PowerOfTwoParam,
+)
+from .annotate import Tunable, get_tunable, registered, tunable
+from .database import Record, TuningDatabase, default_db, make_key, set_default_db, shape_bucket
+from .evaluate import (
+    CostModelEvaluator,
+    Evaluator,
+    Measurement,
+    RooflineTerms,
+    WallClockEvaluator,
+    collective_stats,
+    correctness_gate,
+    roofline_from_compiled,
+)
+from .platform import CPU_HOST, PROFILES, TPU_V4, TPU_V5E, HardwareProfile, detect_platform
+from .search import (
+    ALGORITHMS,
+    CoordinateDescent,
+    ExhaustiveSearch,
+    GeneticSearch,
+    RandomSearch,
+    SearchAlgorithm,
+    SearchResult,
+    SimulatedAnnealing,
+    make_search,
+)
+from .tuner import TuningResult, autotune, tune_or_lookup

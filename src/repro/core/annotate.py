@@ -1,0 +1,100 @@
+"""The annotation layer — `@tunable` is our "pragma".
+
+In the paper, a single-line comment annotation turns a plain loop into a
+tuning site without changing program semantics. Here, decorating a function
+with :func:`tunable` declares its knob space and default config; the function
+itself *is* the transformation: it must accept the knobs as keyword-only
+arguments and produce the same math for every valid config. Undecorated
+callers see the default config, so — exactly as in the paper — the annotated
+program still runs as the reference implementation.
+
+    @tunable("matmul", space=ParamSpace([...]), reference=ref.matmul)
+    def matmul(x, w, *, bm, bn, bk): ...
+
+    matmul(x, w)                  # default config (the 'unannotated' program)
+    matmul.variant(bm=128, ...)   # one concrete variant (a transformed code)
+    matmul.tune(x, w)             # run the autotuner -> best variant
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence
+
+from .params import Config, ParamSpace
+
+_REGISTRY: Dict[str, "Tunable"] = {}
+
+
+class Tunable:
+    def __init__(
+        self,
+        name: str,
+        fn: Callable,
+        space: ParamSpace,
+        reference: Optional[Callable] = None,
+        default: Optional[Config] = None,
+        heuristic: Optional[Callable[..., Config]] = None,
+    ):
+        self.name = name
+        self.fn = fn
+        self.space = space
+        self.reference = reference
+        self._default = default
+        # Shape-aware default: maps concrete args -> a good starting config
+        # (the 'vendor library' baseline the tuner must beat).
+        self.heuristic = heuristic
+        functools.update_wrapper(self, fn)
+
+    # -- variants -------------------------------------------------------------
+    def default_config(self, *args) -> Config:
+        if self.heuristic is not None and args:
+            cfg = self.heuristic(*args)
+            if self.space.is_valid(cfg):
+                return cfg
+        if self._default is not None:
+            return dict(self._default)
+        return self.space.default()
+
+    def variant(self, **config) -> Callable:
+        """Bind one concrete config — a 'code variant' in the paper's terms."""
+        why = self.space.why_invalid(config)
+        if why is not None:
+            raise ValueError(f"invalid config for {self.name}: {why}")
+        return functools.partial(self.fn, **config)
+
+    def __call__(self, *args, **overrides):
+        cfg = self.default_config(*args)
+        cfg.update(overrides)
+        return self.fn(*args, **cfg)
+
+    # -- tuning ----------------------------------------------------------------
+    def tune(self, *args, **kwargs):
+        from .tuner import autotune  # late import: tuner imports annotate
+
+        return autotune(self, args, **kwargs)
+
+    def __repr__(self) -> str:
+        return f"<tunable {self.name} over {self.space!r}>"
+
+
+def tunable(
+    name: str,
+    space: ParamSpace,
+    reference: Optional[Callable] = None,
+    default: Optional[Config] = None,
+    heuristic: Optional[Callable[..., Config]] = None,
+) -> Callable[[Callable], Tunable]:
+    def deco(fn: Callable) -> Tunable:
+        t = Tunable(name, fn, space, reference, default, heuristic)
+        _REGISTRY[name] = t
+        return t
+
+    return deco
+
+
+def get_tunable(name: str) -> Tunable:
+    return _REGISTRY[name]
+
+
+def registered() -> Dict[str, Tunable]:
+    return dict(_REGISTRY)

@@ -1,0 +1,166 @@
+"""Persistent tuning database — the 'sustainable' half of the paper's title.
+
+A tuning run is expensive (compile + run per variant); its *result* is a tiny
+record. Persisting records keyed by ``(platform, kernel, shape-bucket,
+dtype)`` is what turns one-off tuning into performance *portability*: ship
+the generic code plus per-platform databases, and every installation looks up
+(or lazily re-derives) its own specialization. A new machine ⇒ a new platform
+key ⇒ a fresh tuning pass, never a silently-wrong reuse of another machine's
+winners.
+
+Shape bucketing: Figure 1 of the paper shows the best variant depends on the
+input size, so records are keyed by shape — but exact-shape keys would never
+hit in serving where shapes vary. We bucket each dim to the next power of two
+(dims ≤ 8 kept exact), trading a little optimality for high hit rates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+SCHEMA_VERSION = 2
+
+
+def shape_bucket(shape: Sequence[int]) -> Tuple[int, ...]:
+    out = []
+    for d in shape:
+        d = int(d)
+        if d <= 8:
+            out.append(d)
+        else:
+            p = 1
+            while p < d:
+                p <<= 1
+            out.append(p)
+    return tuple(out)
+
+
+def make_key(
+    kernel: str,
+    platform: str,
+    shapes: Sequence[Sequence[int]],
+    dtype: str,
+    extra: str = "",
+) -> str:
+    sh = "/".join("x".join(map(str, shape_bucket(s))) for s in shapes)
+    key = f"{kernel}|{platform}|{sh}|{dtype}"
+    if extra:
+        key += f"|{extra}"
+    return key
+
+
+@dataclasses.dataclass
+class Record:
+    key: str
+    config: Dict[str, Any]
+    objective: float                  # seconds (lower is better)
+    evaluator: str                    # 'wallclock' | 'costmodel'
+    evaluations: int                  # search cost that produced this record
+    timestamp: float
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "Record":
+        return Record(**d)
+
+
+class TuningDatabase:
+    """JSON-file-backed store with atomic writes and an in-memory cache.
+
+    Concurrency model: many readers, single writer per process (a lock guards
+    mutation); cross-process safety comes from write-to-temp + atomic rename,
+    the same discipline the checkpoint writer uses.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._lock = threading.Lock()
+        self._records: Dict[str, Record] = {}
+        if path and os.path.exists(path):
+            self._load()
+
+    # -- io -----------------------------------------------------------------
+    def _load(self) -> None:
+        with open(self.path) as f:
+            blob = json.load(f)
+        if blob.get("schema", 0) != SCHEMA_VERSION:
+            # Old schema: start fresh rather than misread stale records.
+            self._records = {}
+            return
+        self._records = {
+            k: Record.from_json(v) for k, v in blob.get("records", {}).items()
+        }
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        blob = {
+            "schema": SCHEMA_VERSION,
+            "records": {k: r.to_json() for k, r in self._records.items()},
+        }
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    # -- access ---------------------------------------------------------------
+    def lookup(self, key: str) -> Optional[Record]:
+        return self._records.get(key)
+
+    def put(self, record: Record, save: bool = True) -> None:
+        with self._lock:
+            prev = self._records.get(record.key)
+            # Keep the better record — a re-tune that regressed (noise) must
+            # not clobber a good stored winner.
+            if prev is None or record.objective <= prev.objective:
+                self._records[record.key] = record
+            if save:
+                self.save()
+
+    def keys(self) -> Iterable[str]:
+        return list(self._records)
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def platforms(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for k in self._records:
+            plat = k.split("|")[1] if "|" in k else "?"
+            out[plat] = out.get(plat, 0) + 1
+        return out
+
+
+_default_db: Optional[TuningDatabase] = None
+
+
+def default_db() -> TuningDatabase:
+    """Process-wide database at $REPRO_TUNING_DB (or .repro_tuning.json)."""
+    global _default_db
+    if _default_db is None:
+        path = os.environ.get("REPRO_TUNING_DB", ".repro_tuning.json")
+        _default_db = TuningDatabase(path)
+    return _default_db
+
+
+def set_default_db(db: TuningDatabase) -> None:
+    global _default_db
+    _default_db = db
+
+
+def now() -> float:
+    return time.time()

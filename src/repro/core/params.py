@@ -1,0 +1,235 @@
+"""Tunable parameter spaces — the search-space half of the paper's "performance
+directives".
+
+In Orio, an annotation like ``@PerfTuning(unroll_factor in [1..8], ...)``
+declares a cartesian product of discrete knobs plus validity constraints.
+This module is that declaration language for JAX/Pallas: each
+:class:`Param` is one knob, a :class:`ParamSpace` is the cartesian product
+with cross-knob :class:`Constraint`s (e.g. "tile working set must fit VMEM").
+
+Spaces are deliberately *discrete and finite* — empirical autotuning compiles
+and runs variants, so the space must be enumerable (exhaustively for small
+spaces, by guided search for large ones; see ``core/search``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import random
+from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+
+Config = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A single named knob with a finite ordered domain."""
+
+    name: str
+    choices: Tuple[Any, ...]
+
+    def __post_init__(self):
+        if not self.choices:
+            raise ValueError(f"param {self.name!r} has an empty domain")
+        if len(set(map(repr, self.choices))) != len(self.choices):
+            raise ValueError(f"param {self.name!r} has duplicate choices")
+
+    # Domain helpers -------------------------------------------------------
+    @property
+    def cardinality(self) -> int:
+        return len(self.choices)
+
+    def index_of(self, value: Any) -> int:
+        try:
+            return self.choices.index(value)
+        except ValueError:
+            raise KeyError(
+                f"value {value!r} not in domain of param {self.name!r}"
+            ) from None
+
+    def neighbors(self, value: Any) -> List[Any]:
+        """Adjacent choices in domain order (the coordinate-descent moves)."""
+        i = self.index_of(value)
+        out = []
+        if i > 0:
+            out.append(self.choices[i - 1])
+        if i + 1 < len(self.choices):
+            out.append(self.choices[i + 1])
+        return out
+
+    def sample(self, rng: random.Random) -> Any:
+        return rng.choice(self.choices)
+
+
+def IntParam(name: str, choices: Sequence[int]) -> Param:
+    return Param(name, tuple(int(c) for c in choices))
+
+
+def PowerOfTwoParam(name: str, lo: int, hi: int) -> Param:
+    """Powers of two in [lo, hi] inclusive — the canonical tile-size domain."""
+    if lo <= 0 or hi < lo:
+        raise ValueError(f"bad power-of-two range [{lo}, {hi}]")
+    start = 1 << max(0, math.ceil(math.log2(lo)))
+    vals = []
+    v = start
+    while v <= hi:
+        vals.append(v)
+        v <<= 1
+    if not vals:
+        raise ValueError(f"no powers of two in [{lo}, {hi}]")
+    return Param(name, tuple(vals))
+
+
+def EnumParam(name: str, choices: Sequence[Any]) -> Param:
+    return Param(name, tuple(choices))
+
+
+def BoolParam(name: str) -> Param:
+    return Param(name, (False, True))
+
+
+# ---------------------------------------------------------------------------
+# Constraints
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    """A validity predicate over a full config (Orio's `constraint=` clause).
+
+    ``fn`` receives the config dict and must return truthiness. ``reason`` is
+    used in diagnostics when a search space turns out to be empty.
+    """
+
+    fn: Callable[[Config], bool]
+    reason: str = "constraint"
+
+    def __call__(self, config: Config) -> bool:
+        return bool(self.fn(config))
+
+
+# ---------------------------------------------------------------------------
+# Space
+# ---------------------------------------------------------------------------
+
+
+class ParamSpace:
+    """Cartesian product of :class:`Param`s filtered by :class:`Constraint`s."""
+
+    def __init__(
+        self,
+        params: Sequence[Param],
+        constraints: Sequence[Constraint] = (),
+    ):
+        names = [p.name for p in params]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate param names: {names}")
+        self.params: Tuple[Param, ...] = tuple(params)
+        self.constraints: Tuple[Constraint, ...] = tuple(constraints)
+        self._by_name = {p.name: p for p in self.params}
+
+    # -- basic introspection ------------------------------------------------
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(p.name for p in self.params)
+
+    def __getitem__(self, name: str) -> Param:
+        return self._by_name[name]
+
+    @property
+    def cardinality(self) -> int:
+        """Size of the *unconstrained* product (upper bound on variants)."""
+        n = 1
+        for p in self.params:
+            n *= p.cardinality
+        return n
+
+    # -- validity -----------------------------------------------------------
+    def is_valid(self, config: Config) -> bool:
+        if set(config) != set(self.names):
+            return False
+        for p in self.params:
+            if config[p.name] not in p.choices:
+                return False
+        return all(c(config) for c in self.constraints)
+
+    def why_invalid(self, config: Config) -> Optional[str]:
+        if set(config) != set(self.names):
+            return f"keys {sorted(config)} != space {sorted(self.names)}"
+        for p in self.params:
+            if config[p.name] not in p.choices:
+                return f"{p.name}={config[p.name]!r} not in domain"
+        for c in self.constraints:
+            if not c(config):
+                return c.reason
+        return None
+
+    # -- enumeration / sampling ----------------------------------------------
+    def enumerate(self) -> Iterator[Config]:
+        """All valid configs, in deterministic lexicographic order."""
+        for combo in itertools.product(*(p.choices for p in self.params)):
+            cfg = dict(zip(self.names, combo))
+            if all(c(cfg) for c in self.constraints):
+                yield cfg
+
+    def sample(self, rng: random.Random, max_tries: int = 1000) -> Config:
+        """One uniformly-ish random valid config (rejection sampling)."""
+        for _ in range(max_tries):
+            cfg = {p.name: p.sample(rng) for p in self.params}
+            if all(c(cfg) for c in self.constraints):
+                return cfg
+        # Fall back to scanning — guarantees progress on tight constraints.
+        valid = list(itertools.islice(self.enumerate(), 10000))
+        if not valid:
+            raise RuntimeError(
+                "search space is empty: "
+                + "; ".join(c.reason for c in self.constraints)
+            )
+        return rng.choice(valid)
+
+    def neighbors(self, config: Config) -> List[Config]:
+        """Valid one-knob-step neighbors (the hillclimb/annealing move set)."""
+        out: List[Config] = []
+        for p in self.params:
+            for v in p.neighbors(config[p.name]):
+                cand = dict(config)
+                cand[p.name] = v
+                if all(c(cand) for c in self.constraints):
+                    out.append(cand)
+        return out
+
+    def random_neighbor(self, config: Config, rng: random.Random) -> Config:
+        nbrs = self.neighbors(config)
+        return rng.choice(nbrs) if nbrs else dict(config)
+
+    def crossover(self, a: Config, b: Config, rng: random.Random) -> Config:
+        """Uniform crossover (genetic search); falls back to `a` if invalid."""
+        for _ in range(32):
+            child = {
+                name: (a if rng.random() < 0.5 else b)[name] for name in self.names
+            }
+            if all(c(child) for c in self.constraints):
+                return child
+        return dict(a)
+
+    # -- canonical keys -------------------------------------------------------
+    @staticmethod
+    def config_key(config: Config) -> str:
+        """Stable string key for a config (database + dedup)."""
+        return ",".join(f"{k}={config[k]}" for k in sorted(config))
+
+    def default(self) -> Config:
+        """First valid config in enumeration order — the 'untuned' baseline."""
+        for cfg in self.enumerate():
+            return cfg
+        raise RuntimeError("search space is empty")
+
+    def __repr__(self) -> str:
+        ps = ", ".join(f"{p.name}[{p.cardinality}]" for p in self.params)
+        return f"ParamSpace({ps}; |product|={self.cardinality})"

@@ -1,0 +1,77 @@
+"""Hardware profiles and platform keys.
+
+Performance portability (the paper's C4) requires tuning results to be keyed
+by *platform*: the same generic code specializes differently per machine.
+A :class:`HardwareProfile` carries the peaks the analytic evaluator needs
+(roofline terms) plus the capacity constraints (VMEM) that prune kernel tile
+spaces.
+
+Constants for TPU v5e follow the brief: 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI, 16 GiB HBM, 128 MiB VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str                      # platform key for the tuning database
+    peak_flops_bf16: float         # FLOP/s per chip
+    hbm_bandwidth: float           # bytes/s per chip
+    ici_bandwidth: float           # bytes/s per link
+    hbm_bytes: int                 # per-chip HBM capacity
+    vmem_bytes: int                # per-core VMEM (tile working-set budget)
+    mxu_dim: int = 128             # systolic array native tile edge
+    lanes: int = 128               # VPU lane count (last-dim alignment)
+    sublanes: int = 8              # second-to-last-dim alignment (fp32)
+
+
+TPU_V5E = HardwareProfile(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_bandwidth=50e9,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+)
+
+TPU_V4 = HardwareProfile(
+    name="tpu-v4",
+    peak_flops_bf16=275e12,
+    hbm_bandwidth=1228e9,
+    ici_bandwidth=100e9,
+    hbm_bytes=32 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+)
+
+# The host CPU is a legitimate tuning platform (the paper's own Figure 1 is a
+# CPU result): wall-clock evaluation happens here. Peaks are rough single-core
+# numbers; they only matter for cost-model scoring, which on CPU we do not use.
+CPU_HOST = HardwareProfile(
+    name="cpu-host",
+    peak_flops_bf16=100e9,
+    hbm_bandwidth=20e9,
+    ici_bandwidth=10e9,
+    hbm_bytes=32 * 1024**3,
+    vmem_bytes=32 * 1024**2,   # ~L2/L3 budget analogue for tile pruning
+)
+
+PROFILES = {p.name: p for p in (TPU_V5E, TPU_V4, CPU_HOST)}
+
+
+def detect_platform() -> HardwareProfile:
+    """Key for *this* process's backend.
+
+    On a real v5e pod ``jax.devices()[0].platform == 'tpu'``; in this
+    container it is 'cpu'. Tuning records are stored under the detected key,
+    so a database produced here never shadows a TPU database — that isolation
+    is what makes shipping per-platform DBs safe.
+    """
+    plat = jax.devices()[0].platform
+    if plat == "tpu":
+        kind = getattr(jax.devices()[0], "device_kind", "").lower()
+        return TPU_V4 if "v4" in kind else TPU_V5E
+    return CPU_HOST

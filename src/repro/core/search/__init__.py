@@ -1,0 +1,23 @@
+from .base import INVALID, SearchAlgorithm, SearchResult, Trial
+from .exhaustive import ExhaustiveSearch
+from .random_search import RandomSearch
+from .coordinate import CoordinateDescent
+from .anneal import SimulatedAnnealing
+from .genetic import GeneticSearch
+
+ALGORITHMS = {
+    a.name: a
+    for a in (
+        ExhaustiveSearch,
+        RandomSearch,
+        CoordinateDescent,
+        SimulatedAnnealing,
+        GeneticSearch,
+    )
+}
+
+
+def make_search(name: str, **kwargs) -> SearchAlgorithm:
+    if name not in ALGORITHMS:
+        raise KeyError(f"unknown search algorithm {name!r}; have {sorted(ALGORITHMS)}")
+    return ALGORITHMS[name](**kwargs)

@@ -1,0 +1,54 @@
+"""Simulated annealing over one-knob-step neighborhoods (Orio's `Annealing`)."""
+from __future__ import annotations
+
+import math
+
+from ..params import ParamSpace
+from .base import INVALID, SearchAlgorithm, SearchResult, ObjectiveFn, _Memo, make_rng
+
+
+class SimulatedAnnealing(SearchAlgorithm):
+    name = "anneal"
+
+    def __init__(
+        self,
+        budget: int = 64,
+        seed: int = 0,
+        t0: float = 1.0,
+        cooling: float = 0.92,
+    ):
+        super().__init__(budget, seed)
+        self.t0 = t0
+        self.cooling = cooling
+
+    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+        rng = make_rng(self.seed)
+        memo = _Memo(objective)
+
+        current = space.sample(rng)
+        cur = memo(current)
+        t = self.t0
+        proposals = 0
+        # proposals cap: neighborhoods are finite, so once every neighbor is
+        # memoized `evaluations` stops growing — bound total work explicitly.
+        while memo.evaluations < self.budget and proposals < self.budget * 20:
+            proposals += 1
+            cand_cfg = space.random_neighbor(current, rng)
+            if not cand_cfg:
+                break
+            cand = memo(cand_cfg)
+            # Accept: always if better; with Boltzmann probability if worse.
+            # Relative delta keeps the temperature scale unit-free (objectives
+            # span microseconds to seconds across kernels).
+            if cand.objective < cur.objective:
+                current, cur = cand_cfg, cand
+            elif cur.objective < INVALID and cand.objective < INVALID:
+                rel = (cand.objective - cur.objective) / max(cur.objective, 1e-12)
+                if rng.random() < math.exp(-rel / max(t, 1e-6)):
+                    current, cur = cand_cfg, cand
+            t *= self.cooling
+            if t < 1e-4:  # reheat: escape basins late in the budget
+                t = self.t0 / 2
+                current = space.sample(rng)
+                cur = memo(current)
+        return self._mk_result(memo.trials)

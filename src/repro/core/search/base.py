@@ -1,0 +1,96 @@
+"""Search-strategy interface (Orio's `search` module analogue).
+
+A strategy proposes configs; the tuner evaluates them (compile + run +
+correctness gate) and reports the measured objective back. Strategies are
+*budgeted* (max evaluations) because each evaluation costs a compile+run,
+exactly as in the paper.
+
+The objective convention throughout is **lower is better** (seconds, or the
+dominant roofline term in seconds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..params import Config, ParamSpace
+
+INVALID = math.inf  # objective assigned to failed/incorrect variants
+
+
+@dataclasses.dataclass
+class Trial:
+    config: Config
+    objective: float          # seconds; INVALID if variant failed
+    ok: bool                  # compiled, ran and passed the correctness gate
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: Optional[Trial]
+    trials: List[Trial]
+    evaluations: int
+
+    @property
+    def best_config(self) -> Config:
+        if self.best is None:
+            raise RuntimeError("search found no valid variant")
+        return self.best.config
+
+    @property
+    def best_objective(self) -> float:
+        if self.best is None:
+            return INVALID
+        return self.best.objective
+
+
+ObjectiveFn = Callable[[Config], Trial]
+
+
+class SearchAlgorithm:
+    """Base class: drive `objective` for at most `budget` evaluations."""
+
+    name = "base"
+
+    def __init__(self, budget: int = 64, seed: int = 0):
+        self.budget = int(budget)
+        self.seed = int(seed)
+
+    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+        raise NotImplementedError
+
+    # Shared bookkeeping ----------------------------------------------------
+    @staticmethod
+    def _mk_result(trials: List[Trial]) -> SearchResult:
+        ok = [t for t in trials if t.ok and t.objective < INVALID]
+        best = min(ok, key=lambda t: t.objective) if ok else None
+        return SearchResult(best=best, trials=trials, evaluations=len(trials))
+
+
+class _Memo:
+    """Dedup wrapper so no strategy re-evaluates (re-compiles) a config."""
+
+    def __init__(self, objective: ObjectiveFn):
+        self._objective = objective
+        self.cache: Dict[str, Trial] = {}
+        self.trials: List[Trial] = []
+
+    def __call__(self, config: Config) -> Trial:
+        key = ParamSpace.config_key(config)
+        if key in self.cache:
+            return self.cache[key]
+        t = self._objective(config)
+        self.cache[key] = t
+        self.trials.append(t)
+        return t
+
+    @property
+    def evaluations(self) -> int:
+        return len(self.trials)
+
+
+def make_rng(seed: int) -> random.Random:
+    return random.Random(seed)

@@ -1,0 +1,17 @@
+"""Exhaustive search — ground truth for small spaces (Orio's `Exhaustive`)."""
+from __future__ import annotations
+
+from ..params import ParamSpace
+from .base import SearchAlgorithm, SearchResult, ObjectiveFn, _Memo
+
+
+class ExhaustiveSearch(SearchAlgorithm):
+    name = "exhaustive"
+
+    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+        memo = _Memo(objective)
+        for cfg in space.enumerate():
+            if memo.evaluations >= self.budget:
+                break
+            memo(cfg)
+        return self._mk_result(memo.trials)

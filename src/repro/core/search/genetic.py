@@ -1,0 +1,61 @@
+"""Genetic/evolutionary search (Orio's `Msimplex`/GA analogue).
+
+Tournament selection + uniform crossover + one-knob mutation. Useful when
+the space has interacting knobs (e.g. sharding layouts where dim assignments
+must co-vary) where coordinate descent stalls on ridges.
+"""
+from __future__ import annotations
+
+from ..params import ParamSpace
+from .base import INVALID, SearchAlgorithm, SearchResult, ObjectiveFn, _Memo, make_rng
+
+
+class GeneticSearch(SearchAlgorithm):
+    name = "genetic"
+
+    def __init__(
+        self,
+        budget: int = 64,
+        seed: int = 0,
+        population: int = 8,
+        mutation_rate: float = 0.3,
+        elite: int = 2,
+    ):
+        super().__init__(budget, seed)
+        self.population = population
+        self.mutation_rate = mutation_rate
+        self.elite = elite
+
+    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+        rng = make_rng(self.seed)
+        memo = _Memo(objective)
+
+        pop = []
+        for _ in range(self.population):
+            if memo.evaluations >= self.budget:
+                break
+            cfg = space.sample(rng)
+            pop.append((memo(cfg).objective, cfg))
+
+        def tournament():
+            a, b = rng.choice(pop), rng.choice(pop)
+            return a[1] if a[0] <= b[0] else b[1]
+
+        proposals = 0
+        # proposals cap: children may all be memo hits (evaluations stalls) —
+        # bound total work explicitly.
+        while memo.evaluations < self.budget and pop and proposals < self.budget * 20:
+            pop.sort(key=lambda t: t[0])
+            next_pop = pop[: self.elite]
+            while (
+                len(next_pop) < self.population
+                and memo.evaluations < self.budget
+                and proposals < self.budget * 20
+            ):
+                proposals += 1
+                child = space.crossover(tournament(), tournament(), rng)
+                if rng.random() < self.mutation_rate:
+                    child = space.random_neighbor(child, rng)
+                next_pop.append((memo(child).objective, child))
+            pop = next_pop
+        return self._mk_result(memo.trials)

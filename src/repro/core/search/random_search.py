@@ -1,0 +1,23 @@
+"""Uniform random search — the no-structure baseline (Orio's `Random`).
+
+Surprisingly strong on tile spaces because good regions are wide; it is the
+control every guided strategy must beat in ``benchmarks/search_convergence``.
+"""
+from __future__ import annotations
+
+from ..params import ParamSpace
+from .base import SearchAlgorithm, SearchResult, ObjectiveFn, _Memo, make_rng
+
+
+class RandomSearch(SearchAlgorithm):
+    name = "random"
+
+    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+        rng = make_rng(self.seed)
+        memo = _Memo(objective)
+        tries = 0
+        # Allow a few duplicates' worth of extra draws, then stop.
+        while memo.evaluations < self.budget and tries < self.budget * 4:
+            tries += 1
+            memo(space.sample(rng))
+        return self._mk_result(memo.trials)

@@ -1,0 +1,155 @@
+"""Tuner orchestration: space × search × evaluator → best correct variant.
+
+This is the paper's §2 loop end-to-end:
+
+  1. the reference implementation runs once to produce reference outputs;
+  2. the search strategy proposes configs;
+  3. each config is bound to a variant, compiled, executed and measured;
+  4. outputs are compared with the reference (gate), failures pruned;
+  5. the best surviving variant is recorded in the per-platform database.
+
+`tune_or_lookup` is the deployment entry point used by `kernels/ops.py`:
+database hit ⇒ zero-cost specialization (performance portability); miss ⇒
+either tune now (`allow_tune=True`) or fall back to the shape heuristic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+
+from .annotate import Tunable
+from .database import Record, TuningDatabase, default_db, make_key, now
+from .evaluate import Evaluator, WallClockEvaluator
+from .params import Config
+from .platform import detect_platform
+from .search import SearchAlgorithm, SearchResult, Trial, CoordinateDescent
+from .search.base import INVALID
+
+log = logging.getLogger("repro.tuner")
+
+
+@dataclasses.dataclass
+class TuningResult:
+    best_config: Config
+    best_objective: float
+    default_objective: float          # the untuned baseline (paper's '-O3')
+    evaluations: int
+    search: SearchResult
+    from_database: bool = False
+
+    @property
+    def speedup(self) -> float:
+        if self.best_objective <= 0:
+            return 1.0
+        return self.default_objective / self.best_objective
+
+
+def _args_key(tunable: Tunable, args: Sequence[Any], platform: str, extra: str = "") -> str:
+    shapes = []
+    dtype = "f32"
+    for a in args:
+        if hasattr(a, "shape"):
+            shapes.append(tuple(a.shape))
+            dtype = str(getattr(a, "dtype", "f32"))
+    return make_key(tunable.name, platform, shapes, dtype, extra)
+
+
+def autotune(
+    tunable: Tunable,
+    args: Sequence[Any],
+    search: Optional[SearchAlgorithm] = None,
+    evaluator: Optional[Evaluator] = None,
+    db: Optional[TuningDatabase] = None,
+    key_extra: str = "",
+    save: bool = True,
+) -> TuningResult:
+    """Full tuning pass for `tunable` on concrete `args`."""
+    search = search or CoordinateDescent(budget=48)
+    evaluator = evaluator or WallClockEvaluator()
+    platform = detect_platform().name
+
+    # 1. Reference outputs (the correctness oracle).
+    reference = None
+    if tunable.reference is not None:
+        reference = jax.jit(tunable.reference)(*args)
+        jax.block_until_ready(reference)
+
+    # 2-4. Search with compile+run+gate per proposed config.
+    def objective(config: Config) -> Trial:
+        variant = tunable.variant(**config)
+        m = evaluator.evaluate(variant, args, reference=reference)
+        if not m.ok:
+            log.debug("variant %s pruned: %s", config, m.error)
+        return Trial(config=config, objective=m.objective, ok=m.ok, meta=m.meta)
+
+    t0 = time.perf_counter()
+    result = search.run(tunable.space, objective)
+    elapsed = time.perf_counter() - t0
+    if result.best is None:
+        raise RuntimeError(
+            f"autotuning {tunable.name}: no valid variant found "
+            f"({result.evaluations} evaluations)"
+        )
+
+    # Baseline: the default (heuristic) config = the 'unannotated' program.
+    default_cfg = tunable.default_config(*args)
+    base = evaluator.evaluate(tunable.variant(**default_cfg), args, reference=reference)
+    default_obj = base.objective if base.ok else INVALID
+
+    # 5. Persist.
+    if db is None:
+        db = default_db()
+    key = _args_key(tunable, args, platform, key_extra)
+    db.put(
+        Record(
+            key=key,
+            config=result.best_config,
+            objective=result.best_objective,
+            evaluator=evaluator.name,
+            evaluations=result.evaluations,
+            timestamp=now(),
+            meta={
+                "search": search.name,
+                "default_objective": default_obj,
+                "search_seconds": elapsed,
+            },
+        ),
+        save=save,
+    )
+    log.info(
+        "tuned %s: %.3gs -> %.3gs (%.2fx) in %d evals",
+        key, default_obj, result.best_objective,
+        (default_obj / result.best_objective if result.best_objective else 1.0),
+        result.evaluations,
+    )
+    return TuningResult(
+        best_config=result.best_config,
+        best_objective=result.best_objective,
+        default_objective=default_obj,
+        evaluations=result.evaluations,
+        search=result,
+    )
+
+
+def tune_or_lookup(
+    tunable: Tunable,
+    args: Sequence[Any],
+    db: Optional[TuningDatabase] = None,
+    allow_tune: bool = False,
+    key_extra: str = "",
+    **tune_kwargs,
+) -> Config:
+    """Deployment-time config resolution (DB hit > tune-now > heuristic)."""
+    db = db or default_db()
+    platform = detect_platform().name
+    key = _args_key(tunable, args, platform, key_extra)
+    rec = db.lookup(key)
+    if rec is not None and tunable.space.is_valid(rec.config):
+        return dict(rec.config)
+    if allow_tune:
+        return autotune(tunable, args, db=db, key_extra=key_extra, **tune_kwargs).best_config
+    return tunable.default_config(*args)

@@ -1,0 +1,1 @@
+from .sharding import Layout, batch_spec, cache_shardings, data_specs, param_shardings, spec_for_dims

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the hot spots, each with a pure-jnp oracle.
+
+Modules:
+  matmul.py    — blocked MXU matmul, tunable (bm, bn, bk)
+  attention.py — flash attention (causal/SWA/GQA), tunable (block_q, block_k)
+  rmsnorm.py   — fused RMSNorm, tunable block_rows
+  xent.py      — fused large-vocab cross entropy, tunable (block_rows, block_v)
+  ops.py       — deployment dispatch via the tuning database
+  ref.py       — reference oracles (correctness gate + dry-run lowering path)
+"""
+from . import ops, ref
+from .attention import ATTENTION_SPACE, flash_attention, flash_attention_pallas
+from .matmul import MATMUL_SPACE, matmul, matmul_pallas
+from .rmsnorm import RMSNORM_SPACE, rmsnorm, rmsnorm_pallas
+from .xent import XENT_SPACE, softmax_xent, softmax_xent_pallas

@@ -1,0 +1,215 @@
+"""Flash attention (causal / sliding-window, GQA) — Pallas kernel.
+
+TPU adaptation of the memory-hierarchy insight: never materialize the
+[s_q, s_k] score matrix in HBM; stream K/V blocks through VMEM with an
+online-softmax accumulator. Tunables are the (block_q, block_k) VMEM tiles —
+the direct analogue of the paper's per-platform tile/pragma knobs (the best
+blocks depend on seq_len and head_dim exactly as Figure 1's best variant
+depends on input size).
+
+Grid: (batch·heads, s_q/block_q, s_k/block_k); k-dim sequential (carries the
+running max / denominator / output accumulator in VMEM scratch). Causal and
+sliding-window masking prune fully-masked K/V blocks via `pl.when`, so SWA
+cost scales with window, not seq_len.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core import Constraint, ParamSpace, PowerOfTwoParam, tunable
+from ..core.platform import TPU_V5E
+from . import ref
+
+_NEG_INF = -1e30  # avoid nan from (-inf) - (-inf) in fully-masked rows
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    k_steps: int,
+    q_offset: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Block-level pruning: with causality, K blocks strictly in the future of
+    # the whole Q block contribute nothing; with SWA, K blocks entirely
+    # before the window do not either.
+    q_hi = (qi + 1) * block_q - 1 + q_offset    # last absolute q position
+    q_lo = qi * block_q + q_offset              # first absolute q position
+    k_lo = ki * block_k
+    k_hi = (ki + 1) * block_k - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_hi
+    if window > 0:
+        live &= k_hi > q_lo - window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # [block_q, d]
+        k = k_ref[0].astype(jnp.float32)          # [block_k, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                  # [block_q, block_k]
+
+        if causal or window > 0:
+            q_ids = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_ids = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = jnp.bool_(True)
+            if causal:
+                mask &= q_ids >= k_ids
+            if window > 0:
+                mask &= (q_ids - k_ids) < window
+            s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]                        # [block_q, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                     # [block_q, block_k]
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == k_steps - 1)
+    def _done():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # [b, h, s_q, d]
+    k: jax.Array,  # [b, kv, s_k, d]
+    v: jax.Array,  # [b, kv, s_k, d]
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s_q, d = q.shape
+    _, kv, s_k, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    block_q = min(block_q, s_q)
+    block_k = min(block_k, s_k)
+    assert s_q % block_q == 0 and s_k % block_k == 0, (s_q, s_k, block_q, block_k)
+    k_steps = s_k // block_k
+    grid = (b * h, s_q // block_q, k_steps)
+    # Decode/suffix alignment: q positions occupy the *end* of the k axis.
+    q_offset = s_k - s_q
+
+    qr = q.reshape(b * h, s_q, d)
+    # GQA: map flattened (b*h) program index to its kv head.
+    def kv_index(bh, qi, ki):
+        bb = bh // h
+        hh = bh % h
+        return (bb * kv + hh // group, ki, 0)
+
+    kr = k.reshape(b * kv, s_k, d)
+    vr = v.reshape(b * kv, s_k, d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            window=window,
+            block_q=block_q,
+            block_k=block_k,
+            k_steps=k_steps,
+            q_offset=q_offset,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s_q, d)
+
+
+def _attn_vmem_bytes(cfg, d: int = 128, dtype_bytes: int = 2) -> int:
+    bq, bk = cfg["block_q"], cfg["block_k"]
+    return (
+        bq * d * dtype_bytes            # q tile
+        + 2 * bk * d * dtype_bytes      # k, v tiles
+        + bq * bk * 4                   # scores
+        + bq * (d + 2) * 4              # acc + m + l scratch
+    )
+
+
+ATTENTION_SPACE = ParamSpace(
+    [
+        PowerOfTwoParam("block_q", 128, 2048),
+        PowerOfTwoParam("block_k", 128, 2048),
+    ],
+    [
+        Constraint(
+            lambda c: _attn_vmem_bytes(c) <= TPU_V5E.vmem_bytes // 2,
+            "attention tile working set exceeds VMEM budget",
+        )
+    ],
+)
+
+
+def _attn_heuristic(q, k, v):
+    s_q, s_k = q.shape[2], k.shape[2]
+    blk = lambda s: min(512, max(128, 1 << (int(s) - 1).bit_length() if s < 128 else 128))
+    return {"block_q": min(512, max(128, min(s_q, 512))) if s_q >= 128 else 128,
+            "block_k": 512 if s_k >= 512 else 128}
+
+
+@tunable(
+    "flash_attention",
+    space=ATTENTION_SPACE,
+    reference=functools.partial(ref.attention, causal=True),
+    heuristic=_attn_heuristic,
+)
+def flash_attention(
+    q, k, v, *, block_q: int, block_k: int,
+    causal: bool = True, window: int = 0,
+    scale: Optional[float] = None, interpret: Optional[bool] = None,
+):
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    return flash_attention_pallas(
+        q, k, v, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, scale=scale, interpret=interpret,
+    )

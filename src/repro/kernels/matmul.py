@@ -1,0 +1,124 @@
+"""Blocked MXU matmul — Pallas kernel with tunable VMEM tiling.
+
+The paper's SIMD-pragma knob becomes the BlockSpec tile (bm, bn, bk): it
+fixes the VMEM working set ``bm·bk + bk·bn + bm·bn(out) + bm·bn·4(acc)``
+bytes and the MXU utilization (tiles should be multiples of 128 on the
+contracting/lane dims). The k grid dim carries the fp32 accumulator and is
+sequential ('arbitrary'); m/n are parallel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core import Constraint, ParamSpace, PowerOfTwoParam, tunable
+from ..core.platform import TPU_V5E
+from . import ref
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, mults) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """[m, k] @ [k, n] -> [m, n] with explicit (bm, bn, bk) VMEM tiles.
+
+    Non-divisible shapes are zero-padded up to tile multiples and the result
+    sliced back (zero rows/cols contribute zero partial products, so padding
+    is semantics-preserving for matmul).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    xp, wp = _pad_to(x, (bm, bk)), _pad_to(w, (bk, bn))
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    k_steps = kp // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _vmem_bytes(cfg, dtype_bytes: int = 2) -> int:
+    bm, bn, bk = cfg["bm"], cfg["bn"], cfg["bk"]
+    return bm * bk * dtype_bytes + bk * bn * dtype_bytes + bm * bn * (dtype_bytes + 4)
+
+
+MATMUL_SPACE = ParamSpace(
+    [
+        PowerOfTwoParam("bm", 8, 1024),
+        PowerOfTwoParam("bn", 128, 1024),
+        PowerOfTwoParam("bk", 128, 2048),
+    ],
+    [
+        Constraint(
+            lambda c: _vmem_bytes(c) <= TPU_V5E.vmem_bytes // 2,
+            "tile working set exceeds VMEM budget",
+        )
+    ],
+)
+
+
+def _matmul_heuristic(x, w):
+    """Shape-aware default ≈ what a hand-written library baseline would pick."""
+    m, k = x.shape
+    n = w.shape[1]
+    pick = lambda d, cap: min(cap, max(8, 1 << (int(d) - 1).bit_length()))
+    return {
+        "bm": min(pick(m, 256), 1024),
+        "bn": max(128, min(pick(n, 256), 1024)),
+        "bk": max(128, min(pick(k, 512), 2048)),
+    }
+
+
+@tunable("matmul", space=MATMUL_SPACE, reference=ref.matmul, heuristic=_matmul_heuristic)
+def matmul(x, w, *, bm: int, bn: int, bk: int, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    return matmul_pallas(x, w, bm=bm, bn=bn, bk=bk, interpret=interpret)

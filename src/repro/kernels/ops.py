@@ -1,0 +1,68 @@
+"""Deployment wrappers: tuning-database dispatch + reference fallback.
+
+This is where the paper's 'sustainable performance portability' is cashed
+out at runtime: callers use `ops.matmul(x, w)` and get
+
+  1. the stored best variant for (platform, shape-bucket, dtype) if the
+     tuning database has one (zero-cost specialization),
+  2. else the shape heuristic default (the 'vendor baseline'),
+  3. or the pure-jnp reference path when Pallas is disabled
+     (`REPRO_USE_PALLAS=0`, or during multi-pod dry-runs, where Pallas
+     cannot lower for TPU from a CPU host).
+
+`set_kernel_mode` flips the whole model stack between kernel and reference
+paths; both compute identical math (enforced by tests/test_kernels_*).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from ..core import default_db, tune_or_lookup
+from . import ref
+from .attention import flash_attention as _flash_tunable
+from .matmul import matmul as _matmul_tunable
+from .rmsnorm import rmsnorm as _rmsnorm_tunable
+from .xent import softmax_xent as _xent_tunable
+
+_STATE = {"use_pallas": os.environ.get("REPRO_USE_PALLAS", "0") == "1"}
+
+
+def set_kernel_mode(use_pallas: bool) -> None:
+    _STATE["use_pallas"] = bool(use_pallas)
+
+
+def kernels_enabled() -> bool:
+    return _STATE["use_pallas"]
+
+
+def matmul(x, w, *, config: Optional[dict] = None):
+    if not _STATE["use_pallas"]:
+        return ref.matmul(x, w)
+    cfg = config or tune_or_lookup(_matmul_tunable, (x, w))
+    return _matmul_tunable.variant(**cfg)(x, w)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None, config=None):
+    if not _STATE["use_pallas"]:
+        return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
+    cfg = config or tune_or_lookup(_flash_tunable, (q, k, v), key_extra=f"c{causal}w{window}")
+    return _flash_tunable.variant(**cfg)(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def rmsnorm(x, weight, *, eps=1e-6, config=None):
+    if not _STATE["use_pallas"]:
+        return ref.rmsnorm(x, weight, eps)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    cfg = config or tune_or_lookup(_rmsnorm_tunable, (x2, weight))
+    return _rmsnorm_tunable.variant(**cfg)(x2, weight, eps=eps).reshape(shape)
+
+
+def softmax_xent(logits, labels, *, config=None):
+    if not _STATE["use_pallas"]:
+        return ref.softmax_xent(logits, labels)
+    cfg = config or tune_or_lookup(_xent_tunable, (logits, labels))
+    return _xent_tunable.variant(**cfg)(logits, labels)

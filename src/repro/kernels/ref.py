@@ -1,0 +1,66 @@
+"""Pure-jnp reference oracles ("reference implementation" in the paper's §2).
+
+Every Pallas kernel variant is validated against these — a variant whose
+output diverges from the oracle is pruned by the tuner's correctness gate.
+They are also the lowering path used by the multi-pod dry-run (Pallas cannot
+lower for TPU from a CPU-only container) and the fallback path in `ops.py`.
+Keep them boring and obviously correct.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[m, k] @ [k, n] -> [m, n], fp32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last dim: x * rsqrt(mean(x^2)+eps) * weight."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * weight
+
+
+def attention(
+    q: jax.Array,  # [b, h, s_q, d]
+    k: jax.Array,  # [b, kv, s_k, d]
+    v: jax.Array,  # [b, kv, s_k, d]
+    causal: bool = True,
+    scale: Optional[float] = None,
+    window: int = 0,  # >0: sliding-window (causal) attention
+) -> jax.Array:
+    """Multi-head attention with GQA (h a multiple of kv), optional SWA."""
+    b, h, s_q, d = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0, (h, kv)
+    scale = scale if scale is not None else d ** -0.5
+    group = h // kv
+    # expand kv heads to match q heads
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s_k = k.shape[2]
+    if causal or window:
+        q_idx = jnp.arange(s_q)[:, None] + (s_k - s_q)  # align ends (decode)
+        k_idx = jnp.arange(s_k)[None, :]
+        mask = jnp.ones((s_q, s_k), dtype=bool)
+        if causal:
+            mask &= q_idx >= k_idx
+        if window:
+            mask &= (q_idx - k_idx) < window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-row cross entropy: [r, v], [r] -> [r] (fp32)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - label_logit

@@ -1,0 +1,133 @@
+"""Fused softmax-cross-entropy over large vocabularies — Pallas kernel.
+
+The assigned archs have vocabs up to 262144; materializing fp32 softmax for
+[tokens, vocab] is the single largest activation in training. This kernel
+streams vocab blocks through VMEM with an online logsumexp (the same running
+(m, l) trick as flash attention) and extracts the label logit on the fly, so
+HBM traffic is one read of the logits — never a [tokens, vocab] write.
+
+Tunables: block_rows × block_v VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core import Constraint, ParamSpace, PowerOfTwoParam, tunable
+from ..core.platform import TPU_V5E
+from . import ref
+
+_NEG_INF = -1e30
+
+
+def _xent_kernel(
+    logits_ref, labels_ref, loss_ref,
+    m_scr, l_scr, ll_scr,
+    *,
+    block_v: int,
+    v_steps: int,
+):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        ll_scr[...] = jnp.zeros_like(ll_scr)
+
+    x = logits_ref[...].astype(jnp.float32)        # [block_rows, block_v]
+    m_prev = m_scr[...]                            # [block_rows, 1]
+    m_new = jnp.maximum(m_prev, x.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.exp(x - m_new).sum(axis=-1, keepdims=True)
+    m_scr[...] = m_new
+
+    # Gather the label logit if it falls inside this vocab block.
+    labels = labels_ref[...]                       # [block_rows, 1] int32
+    v_lo = vi * block_v
+    cols = v_lo + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    hit = cols == labels
+    ll_scr[...] += jnp.sum(jnp.where(hit, x, 0.0), axis=-1, keepdims=True)
+
+    @pl.when(vi == v_steps - 1)
+    def _done():
+        lse = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+        loss_ref[...] = (lse - ll_scr[...]).astype(loss_ref.dtype)
+
+
+def softmax_xent_pallas(
+    logits: jax.Array,  # [rows, vocab]
+    labels: jax.Array,  # [rows] int32
+    *,
+    block_rows: int,
+    block_v: int,
+    interpret: bool = False,
+) -> jax.Array:
+    rows, vocab = logits.shape
+    block_rows = min(block_rows, rows)
+    block_v = min(block_v, vocab)
+    pad_r = (-rows) % block_rows
+    pad_v = (-vocab) % block_v
+    if pad_r or pad_v:
+        # Pad logits with -inf-ish so padded columns don't perturb logsumexp;
+        # padded rows get label 0 and are sliced away.
+        logits = jnp.pad(logits, ((0, pad_r), (0, pad_v)), constant_values=_NEG_INF)
+        labels = jnp.pad(labels, (0, pad_r))
+    rp, vp = logits.shape
+    v_steps = vp // block_v
+    grid = (rp // block_rows, v_steps)
+
+    loss = pl.pallas_call(
+        functools.partial(_xent_kernel, block_v=block_v, v_steps=v_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_v), lambda ri, vi: (ri, vi)),
+            pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_rows, 1), jnp.float32),
+            pltpu.VMEM((block_rows, 1), jnp.float32),
+            pltpu.VMEM((block_rows, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(logits, labels.astype(jnp.int32)[:, None])
+    return loss[:rows, 0]
+
+
+XENT_SPACE = ParamSpace(
+    [
+        PowerOfTwoParam("block_rows", 8, 1024),
+        PowerOfTwoParam("block_v", 512, 32768),
+    ],
+    [
+        Constraint(
+            lambda c: c["block_rows"] * c["block_v"] * 6 <= TPU_V5E.vmem_bytes // 2,
+            "xent tile exceeds VMEM budget",
+        )
+    ],
+)
+
+
+def _xent_heuristic(logits, labels):
+    rows, vocab = logits.shape
+    return {"block_rows": min(256, max(8, 1 << (int(rows) - 1).bit_length() if rows < 256 else 256)),
+            "block_v": min(8192, max(512, vocab if vocab < 512 else 8192))}
+
+
+@tunable("softmax_xent", space=XENT_SPACE, reference=ref.softmax_xent, heuristic=_xent_heuristic)
+def softmax_xent(logits, labels, *, block_rows: int, block_v: int, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    return softmax_xent_pallas(
+        logits, labels, block_rows=block_rows, block_v=block_v, interpret=interpret
+    )

@@ -1,0 +1,1 @@
+"""Launch layer: meshes, per-cell step assembly, dry-run, train/serve drivers."""

@@ -1,0 +1,97 @@
+"""Per-(arch × shape) default Layout and RunConfig — the *paper-faithful
+baseline* configuration.
+
+These are the 'untuned -O3' analogue: sensible hand rules a performance
+engineer would start from. The §Perf hillclimbs then search the layout/run
+spaces from here; winners are stored in the tuning database keyed by
+(arch, shape, mesh) and take precedence at launch.
+"""
+from __future__ import annotations
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..distributed.sharding import Layout
+from ..models.transformer import RunConfig
+
+# params ≳ 20B get FSDP + aggressive remat + deeper grad accumulation
+_BIG = {"gemma3-27b", "arctic-480b", "mixtral-8x7b", "jamba-1.5-large-398b"}
+
+# §Perf hillclimb winners (EXPERIMENTS.md) — the shipped per-(arch, shape)
+# specializations, exactly the paper's 'tuning database' at the layout level.
+# Keys are (arch, shape.kind); values are Layout/RunConfig field overrides.
+TUNED = {
+    ("qwen2-0.5b", "train"): {
+        # pure data-parallelism: a 0.5B model cannot amortize TP activation
+        # all-reduces; DP-256 is compute/memory-bound (rf 0.1% -> 31%)
+        "tensor_axis": "none", "data_axes": ("data", "model"),
+        "microbatches": 1, "head_aware": True,
+    },
+    ("minitron-4b", "train"): {
+        # head-aware TP (24 heads must not split mid-head) + single batch
+        # pass (grad all-reduce out of the accumulation scan): rf 0.8% -> 22%
+        "head_aware": True, "microbatches": 1,
+    },
+    ("arctic-480b", "train"): {
+        # head-aware TP; MoE dispatch resharding remains dominant — next
+        # iteration is shard_map all-to-all dispatch (see EXPERIMENTS.md §Perf)
+        "head_aware": True,
+    },
+}
+
+
+def tuned_overrides(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    return dict(TUNED.get((cfg.name, shape.kind), {"head_aware": True}))
+
+
+def default_layout(cfg: ArchConfig, multi_pod: bool = False) -> Layout:
+    return Layout(
+        tensor_axis="model",
+        data_axes=("data",),
+        fsdp=cfg.name in _BIG,
+        shard_experts=True,
+        counts=(
+            ("heads", cfg.num_heads),
+            ("kv_heads", cfg.num_kv_heads),
+            ("experts", max(cfg.num_experts, 1)),
+        ),
+        # head_aware=False reproduces the recorded naive baseline; the
+        # hillclimb flips it on as iteration 1 (see EXPERIMENTS.md §Perf).
+        head_aware=False,
+        name="baseline",
+    )
+
+
+def default_run(cfg: ArchConfig, shape: ShapeSpec) -> RunConfig:
+    big = cfg.name in _BIG
+    if shape.kind == "train":
+        return RunConfig(
+            remat="full" if big else "dots",
+            microbatches=8 if big else 4,
+            q_chunk=512,
+            k_chunk=1024,
+            loss_chunk=512,
+            mamba_chunk=32,
+            mlstm_chunk=64,
+            moe_dispatch="scatter",
+        )
+    if shape.kind == "prefill":
+        return RunConfig(
+            remat="none",
+            microbatches=1,
+            q_chunk=512,
+            k_chunk=2048,
+            loss_chunk=512,
+            mamba_chunk=64,
+            mlstm_chunk=64,
+            moe_dispatch="scatter",
+        )
+    # decode: single-chunk attention (scores are [b, h, 1, s] — tiny), no remat
+    return RunConfig(
+        remat="none",
+        microbatches=1,
+        q_chunk=1,
+        k_chunk=shape.seq_len,
+        loss_chunk=512,
+        mamba_chunk=64,
+        mlstm_chunk=64,
+        moe_dispatch="scatter",
+    )

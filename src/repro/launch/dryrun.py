@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init). Everything below may import jax.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and record memory / cost / collective analyses.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b
+    PYTHONPATH=src python -m repro.launch.dryrun --arch ... --shape train_4k \
+        --mesh single --variant fsdp=0,remat=dots,microbatches=8   # hillclimb
+
+Outputs one JSON per cell under benchmarks/results/dryrun/ plus a summary
+table on stdout. Roofline terms use the TPU v5e constants from the brief.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs.base import SHAPES, ARCH_NAMES, cell_is_runnable, get_config
+from ..core.evaluate import collective_stats, roofline_from_compiled
+from ..core.platform import TPU_V5E
+from ..distributed.sharding import Layout
+from ..launch import defaults, mesh as mesh_mod, steps
+from ..models import lm
+
+RESULTS_DIR = os.path.join("benchmarks", "results", "dryrun")
+
+
+def parse_variant(s):
+    """'fsdp=0,remat=full,microbatches=8' -> overrides for Layout/RunConfig."""
+    out = {}
+    if not s:
+        return out
+    for kv in s.split(","):
+        k, v = kv.split("=")
+        if v in ("0", "1") and k in ("fsdp", "shard_experts", "head_aware"):
+            out[k] = bool(int(v))
+        elif k == "data_axes":          # e.g. data_axes=data+model (pure DP)
+            out[k] = tuple(v.split("+"))
+        elif v.isdigit():
+            out[k] = int(v)
+        else:
+            out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, variant=None,
+             save: bool = True, verbose: bool = True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    mesh_name = "pod2" if multi_pod else "pod1"
+    tag = f"{cfg.name}__{shape.name}__{mesh_name}"
+    if variant:
+        tag += "__" + "-".join(f"{k}{v}" for k, v in sorted(variant.items()))
+    if not ok:
+        rec = {"cell": tag, "status": "skipped", "reason": why}
+        if save:
+            _save(tag, rec)
+        if verbose:
+            print(f"SKIP {tag}: {why}")
+        return rec
+
+    m = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    layout = defaults.default_layout(cfg, multi_pod)
+    run = defaults.default_run(cfg, shape)
+    if variant:
+        lkeys = {f.name for f in dataclasses.fields(Layout)}
+        rkeys = {f.name for f in dataclasses.fields(type(run))}
+        layout = dataclasses.replace(layout, **{k: v for k, v in variant.items() if k in lkeys})
+        run = dataclasses.replace(run, **{k: v for k, v in variant.items() if k in rkeys})
+
+    t0 = time.time()
+    try:
+        cell = steps.build_cell(cfg, shape, m, layout, run)
+        lowered = steps.lower_cell(cell, m)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        terms = roofline_from_compiled(
+            compiled, TPU_V5E, chips=m.devices.size, hlo_text=hlo
+        )
+        n_params = lm.param_count(cfg)
+        n_active = lm.active_param_count(cfg)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        mult = 6 if shape.kind == "train" else 2
+        model_flops = mult * n_active * tokens
+        per_chip_model_flops = model_flops / m.devices.size
+        rec = {
+            "cell": tag,
+            "status": "ok",
+            "arch": cfg.name,
+            "shape": shape.name,
+            "kind": shape.kind,
+            "mesh": list(m.devices.shape),
+            "chips": int(m.devices.size),
+            "layout": dataclasses.asdict(layout),
+            "run": dataclasses.asdict(run),
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            },
+            "cost": {
+                "flops_per_chip": terms.flops,
+                "bytes_per_chip": terms.hlo_bytes,
+            },
+            "collectives": coll,
+            "roofline": terms.to_json(),
+            "model_flops_total": model_flops,
+            "model_flops_per_chip": per_chip_model_flops,
+            "useful_flops_ratio": (
+                per_chip_model_flops / terms.flops if terms.flops else None
+            ),
+            "params": n_params,
+            "active_params": n_active,
+        }
+        if verbose:
+            dom = terms.dominant
+            print(
+                f"OK   {tag}: lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+                f"compute {terms.compute_s*1e3:.1f}ms mem {terms.memory_s*1e3:.1f}ms "
+                f"coll {terms.collective_s*1e3:.1f}ms -> {dom} | "
+                f"useful {rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)}"
+            )
+    except Exception as e:
+        rec = {
+            "cell": tag,
+            "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        if verbose:
+            print(f"FAIL {tag}: {type(e).__name__}: {e}")
+    if save:
+        _save(tag, rec)
+    return rec
+
+
+def _save(tag, rec):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default=None,
+                    help="layout/run overrides: k=v,k=v (hillclimb probe)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_NAMES)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    variant = parse_variant(args.variant)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cfgn = get_config(arch).name
+                tag = f"{cfgn}__{shape}__{'pod2' if mp else 'pod1'}"
+                if variant:
+                    tag += "__" + "-".join(f"{k}{v}" for k, v in sorted(variant.items()))
+                path = os.path.join(RESULTS_DIR, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"HAVE {tag}")
+                            continue
+                rec = run_cell(arch, shape, mp, variant=variant)
+                if rec["status"] == "error":
+                    n_fail += 1
+    print(f"\ndone; {n_fail} failures")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

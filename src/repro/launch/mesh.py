@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS for 512 host devices before any jax
+import; everything else sees the real 1-device CPU).
+
+Topology (TPU v5e): single pod = 16×16 = 256 chips, axes ("data", "model");
+multi-pod = 2 pods = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis is pure data parallelism over DCN, "model" stays intra-pod ICI.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — the "
+            "dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax"
+        )
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, devices=devs[:n], axis_types=auto)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1×1 mesh for CPU smoke tests and examples."""
+    auto = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh(
+        (1, 1), ("data", "model"), devices=jax.devices()[:1], axis_types=auto
+    )

@@ -1,0 +1,71 @@
+"""Production serving launcher: prefill/decode engine on the chosen mesh.
+
+    # pod:
+    python -m repro.launch.serve --arch qwen2.5-3b --requests 64
+    # dev smoke:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from ..configs.base import SHAPES, get_config
+from ..models import lm
+from ..serving.engine import EngineConfig, Request, ServingEngine
+from . import defaults
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES["decode_32k"]
+    if args.smoke:
+        cfg = cfg.reduced()
+        if cfg.num_experts:
+            cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    layout = defaults.default_layout(cfg, args.multi_pod)
+    run = defaults.default_run(cfg, shape)
+    if args.smoke:
+        run = dataclasses.replace(
+            run, q_chunk=32, k_chunk=max(32, args.max_seq), loss_chunk=32
+        )
+
+    params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(
+        cfg, run, params, mesh, layout,
+        EngineConfig(max_batch=8, max_seq=args.max_seq),
+    )
+    rs = np.random.RandomState(0)
+    for i in range(args.requests):
+        engine.submit(
+            Request(
+                prompt=rs.randint(0, cfg.vocab_size, 16).astype(np.int32),
+                max_new_tokens=args.new_tokens,
+                temperature=0.7 if i % 2 else 0.0,
+                seed=i,
+            )
+        )
+    done = engine.serve()
+    toks = sum(len(r.output) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens; "
+          f"p50 latency {sorted(r.latency_s for r in done)[len(done)//2]:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

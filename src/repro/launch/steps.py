@@ -1,0 +1,189 @@
+"""jit-able train / prefill / serve steps + their sharding assignments.
+
+`build_cell` is the single entry point shared by the dry-run, the trainer
+and the serving engine: given (arch config, shape, mesh, layout, run config)
+it returns the step function, abstract inputs, and in/out shardings — so
+what the dry-run compiles is byte-for-byte what the launcher would run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec, input_specs
+from ..distributed import sharding as shd
+from ..models import lm
+from ..models.transformer import RunConfig
+from ..optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, run: RunConfig, opt_cfg: adamw.AdamWConfig):
+    # grad accumulation dtype doubles as the reduction wire format: bf16
+    # halves both the accumulator HBM and the DP all-reduce bytes.
+    acc_dtype = jnp.bfloat16 if run.grad_compression == "bf16" else jnp.float32
+
+    def loss_fn(params, batch):
+        return lm.loss_fn(params, batch, cfg, run)
+
+    def train_step(params, opt_state, batch):
+        if run.microbatches > 1:
+            k = run.microbatches
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch
+            )
+
+            def mb_body(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g
+                )
+                return (g_acc, loss_acc + loss, aux_acc + metrics["aux"]), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params
+            )
+            (grads, loss, aux), _ = jax.lax.scan(
+                mb_body, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                mbs,
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            loss = loss / k
+            metrics = {"xent": loss, "aux": aux / k}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            if run.grad_compression == "bf16":
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.bfloat16), grads
+                )
+        params, opt_state, opt_metrics = adamw.update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, run: RunConfig, cache_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg, run, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, run: RunConfig):
+    def serve_step(params, caches, tokens, pos):
+        return lm.decode_step(params, tokens, caches, pos, cfg, run)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# cell assembly (shared by dry-run / trainer / server)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch × shape × mesh) lowering unit."""
+
+    step_fn: Any
+    abstract_inputs: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    kind: str
+    donate: Tuple[int, ...] = ()
+    mesh: Any = None
+    layout: Any = None
+
+
+def build_cell(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh: jax.sharding.Mesh,
+    layout: shd.Layout,
+    run: RunConfig,
+    opt_cfg: Optional[adamw.AdamWConfig] = None,
+) -> Cell:
+    params_abs, axes = lm.abstract_params(cfg)
+    p_sh = shd.param_shardings(axes, params_abs, mesh, layout)
+    batch_abs = input_specs(cfg, shape)
+    rep = shd.replicated(mesh)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        opt_abs = jax.eval_shape(functools.partial(adamw.init, opt_cfg), params_abs)
+        o_sh = adamw.state_shardings(p_sh, opt_cfg.master_fp32, rep)
+        b_sh = shd.data_specs(batch_abs, mesh, layout)
+        step = make_train_step(cfg, run, opt_cfg)
+        return Cell(
+            step_fn=step,
+            abstract_inputs=(params_abs, opt_abs, batch_abs),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            kind="train",
+            donate=(0, 1),
+            mesh=mesh,
+            layout=layout,
+        )
+
+    if shape.kind == "prefill":
+        b_sh = shd.data_specs(batch_abs, mesh, layout)
+        step = make_prefill_step(cfg, run, cache_len=shape.seq_len)
+        return Cell(
+            step_fn=step,
+            abstract_inputs=(params_abs, batch_abs),
+            in_shardings=(p_sh, b_sh),
+            out_shardings=None,
+            kind="prefill",
+            mesh=mesh,
+            layout=layout,
+        )
+
+    # decode
+    caches_abs = lm.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_sh = shd.cache_shardings(caches_abs, mesh, layout)
+    tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    t_sh = shd.data_specs(tok_abs, mesh, layout)
+    step = make_serve_step(cfg, run)
+    return Cell(
+        step_fn=step,
+        abstract_inputs=(params_abs, caches_abs, tok_abs, pos_abs),
+        in_shardings=(p_sh, c_sh, t_sh, rep),
+        out_shardings=(None, c_sh),
+        kind="decode",
+        donate=(1,),
+        mesh=mesh,
+        layout=layout,
+    )
+
+
+def lower_cell(cell: Cell, mesh: jax.sharding.Mesh):
+    """jit → lower for one cell (no compile; caller decides).
+
+    The mesh rides in on the NamedShardings; the ambient mesh_context lets
+    deep model code (MoE dispatch hints) place sharding constraints during
+    tracing.
+    """
+    from ..distributed.sharding import mesh_context
+
+    jitted = jax.jit(
+        cell.step_fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate,
+    )
+    with mesh_context(mesh, cell.layout):
+        return jitted.lower(*cell.abstract_inputs)

@@ -1,0 +1,81 @@
+"""Production training launcher.
+
+On a TPU pod this builds the production mesh and the full-size model; on a
+dev host it degrades to the 1-device mesh + reduced config (--smoke). The
+same Trainer/steps path the multi-pod dry-run compiled is what runs here —
+build_cell is shared, so dry-run success is launch success.
+
+    # pod (256 chips):
+    python -m repro.launch.train --arch mixtral-8x7b --shape train_4k --steps 1000
+    # dev smoke:
+    PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --smoke --steps 5
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from ..configs.base import SHAPES, get_config
+from ..data.pipeline import DataConfig
+from ..optim import adamw
+from ..train.trainer import Trainer, TrainerConfig
+from . import defaults
+from .mesh import make_host_mesh, make_production_mesh
+
+logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + host mesh (CPU dev box)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8_ef"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    if args.smoke:
+        cfg = cfg.reduced()
+        mesh = make_host_mesh()
+        batch, seq = 8, 64
+        run = defaults.default_run(cfg, shape)
+        run = type(run)(remat="none", loss_chunk=32, q_chunk=32, k_chunk=32,
+                        microbatches=1)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        batch, seq = shape.global_batch, shape.seq_len
+        run = defaults.default_run(cfg, shape)
+    layout = defaults.default_layout(cfg, args.multi_pod)
+
+    trainer = Trainer(
+        cfg, run, mesh, layout,
+        DataConfig(seed=args.seed, batch_size=batch, seq_len=seq,
+                   host_index=jax.process_index(), host_count=jax.process_count()),
+        adamw.AdamWConfig(total_steps=args.steps),
+        TrainerConfig(
+            total_steps=args.steps,
+            checkpoint_every=args.ckpt_every,
+            checkpoint_dir=args.ckpt_dir,
+            grad_compression=args.compression,
+            seed=args.seed,
+        ),
+    )
+    # resume if a checkpoint exists
+    if trainer.ckpt.latest_step() is not None:
+        trainer.restore_checkpoint()
+    metrics = trainer.train()
+    print(f"done at step {trainer.step}: {metrics}")
+
+
+if __name__ == "__main__":
+    main()

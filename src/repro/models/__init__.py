@@ -1,0 +1,3 @@
+"""Model substrate: layers, attention, MoE, SSM mixers, transformer stack, LM."""
+from . import attention, layers, lm, moe, ssm, transformer
+from .transformer import RunConfig

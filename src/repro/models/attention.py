@@ -1,0 +1,270 @@
+"""Attention layers: GQA with RoPE, full/SWA/local-global kinds, KV caches.
+
+Two lowering paths, same math:
+  * `ops.flash_attention` — the Pallas kernel (CPU interpret / TPU runtime);
+  * `chunked_attention` — pure-XLA online-softmax over K/V chunks, used by
+    the multi-pod dry-run (Pallas cannot lower to TPU from this host) and as
+    the reference semantics. Chunking bounds the live score block to
+    [q_chunk, k_chunk] so 32k-token prefill never materializes an s×s matrix.
+
+Cache discipline:
+  * full attention: ring-less cache [b, s_max, kv, hd], write at `pos`;
+  * SWA/local layers: **rolling window cache** [b, window, kv, hd], write at
+    `pos % window` — this is what keeps gemma3-27b decode_32k at ~0.4 TB
+    instead of 2.1 TB (52 of its 62 layers are local).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .layers import Axes, Params, apply_rope, dense, dense_init
+
+NEG_INF = -1e30
+
+
+def attention_init(
+    rng,
+    d_model: int,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    dtype,
+    qkv_bias: bool = False,
+) -> Tuple[Params, Axes]:
+    ks = jax.random.split(rng, 4)
+    pq, aq = dense_init(ks[0], d_model, n_heads * head_dim, dtype, "d_model", "heads", qkv_bias)
+    pk, ak = dense_init(ks[1], d_model, n_kv * head_dim, dtype, "d_model", "kv_heads", qkv_bias)
+    pv, av = dense_init(ks[2], d_model, n_kv * head_dim, dtype, "d_model", "kv_heads", qkv_bias)
+    po, ao = dense_init(ks[3], n_heads * head_dim, d_model, dtype, "heads", "d_model")
+    return (
+        {"q": pq, "k": pk, "v": pv, "o": po},
+        {"q": aq, "k": ak, "v": av, "o": ao},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (pure XLA; flash-equivalent math)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,        # [b, h, s_q, d]
+    k: jax.Array,        # [b, kv, s_k, d]
+    v: jax.Array,        # [b, kv, s_k, d]
+    *,
+    causal: bool,
+    window: int = 0,
+    scale: Optional[float] = None,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    kv_valid_len: Optional[jax.Array] = None,  # mask cache positions >= this
+) -> jax.Array:
+    b, h, s_q, d = q.shape
+    _, kv, s_k, _ = k.shape
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    q_chunk = min(q_chunk, s_q)
+    k_chunk = min(k_chunk, s_k)
+    # pad to chunk multiples
+    pq = (-s_q) % q_chunk
+    pk = (-s_k) % k_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    sq_p, sk_p = q.shape[2], k.shape[2]
+    n_q, n_k = sq_p // q_chunk, sk_p // k_chunk
+    q_off = s_k - s_q  # decode/suffix alignment: q occupies the end of k axis
+
+    # [b, kv, g, sq, d] view so kv-head grouping is einsum-native (no repeat)
+    qg = q.reshape(b, kv, group, sq_p, d)
+
+    def one_q_chunk(qi):
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, axis=3)
+        q_ids = qi * q_chunk + jnp.arange(q_chunk) + q_off
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * k_chunk, k_chunk, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * k_chunk, k_chunk, axis=2)
+            s = jnp.einsum(
+                "bkgqd,bkcd->bkgqc", qc.astype(jnp.float32), kc.astype(jnp.float32)
+            ) * scale
+            k_ids = ki * k_chunk + jnp.arange(k_chunk)
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask &= q_ids[:, None] >= k_ids[None, :]
+            if window > 0:
+                mask &= (q_ids[:, None] - k_ids[None, :]) < window
+            mask &= (k_ids < s_k)[None, :]
+            if kv_valid_len is not None:
+                mask &= k_ids[None, :] < kv_valid_len
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, vc.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, kv, group, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((b, kv, group, q_chunk), jnp.float32),
+            jnp.zeros((b, kv, group, q_chunk, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(n_k))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if n_q == 1:
+        out = one_q_chunk(0)
+    else:
+        out = jax.lax.map(one_q_chunk, jnp.arange(n_q))  # [nq, b, kv, g, qc, d]
+        out = jnp.moveaxis(out, 0, 3).reshape(b, kv, group, sq_p, d)
+    out = out.reshape(b, h, sq_p, d)[:, :, :s_q]
+    return out.astype(q.dtype)
+
+
+def _attend(q, k, v, *, causal, window, use_kernel, kv_valid_len=None,
+            q_chunk=512, k_chunk=1024):
+    if use_kernel and ops.kernels_enabled() and kv_valid_len is None:
+        return ops.flash_attention(q, k, v, causal=causal, window=window)
+    return chunked_attention(
+        q, k, v, causal=causal, window=window,
+        q_chunk=q_chunk, k_chunk=k_chunk, kv_valid_len=kv_valid_len,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layer application: train/prefill (full sequence) and decode (one token)
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def attention_forward(
+    p: Params,
+    x: jax.Array,               # [b, s, d_model]
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    window: int = 0,            # 0 = full; >0 = sliding window
+    positions: Optional[jax.Array] = None,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    return_cache: bool = False,
+    cache_len: Optional[int] = None,   # prefill: allocate cache of this length
+):
+    """Training / prefill forward. Returns y or (y, cache)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q = _split_heads(dense(p["q"], x), n_heads, head_dim)
+    k = _split_heads(dense(p["k"], x), n_kv, head_dim)
+    v = _split_heads(dense(p["v"], x), n_kv, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    # [b, heads, s, hd] layout for the kernels
+    qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+    y = _attend(qh, kh, vh, causal=True, window=window, use_kernel=True,
+                q_chunk=q_chunk, k_chunk=k_chunk)
+    y = jnp.swapaxes(y, 1, 2).reshape(b, s, n_heads * head_dim)
+    out = dense(p["o"], y)
+    if not return_cache:
+        return out
+    clen = cache_len or s
+    if window > 0:
+        clen = min(clen, window)
+        if s >= clen:
+            # keep the last `clen` positions, rolled so slot = pos % clen
+            k_tail = jnp.roll(k[:, -clen:], s % clen, axis=1)
+            v_tail = jnp.roll(v[:, -clen:], s % clen, axis=1)
+        else:
+            # fewer tokens than the window: slots 0..s-1 = positions 0..s-1
+            pad = clen - s
+            k_tail = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_tail = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {"k": k_tail, "v": v_tail}
+    else:
+        pad = clen - s
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        }
+    return out, cache
+
+
+def attention_cache_spec(
+    batch: int, cache_len: int, n_kv: int, head_dim: int, window: int, dtype
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    clen = min(cache_len, window) if window > 0 else cache_len
+    shp = (batch, clen, n_kv, head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shp, dtype),
+        "v": jax.ShapeDtypeStruct(shp, dtype),
+    }
+
+
+def attention_decode(
+    p: Params,
+    x: jax.Array,               # [b, 1, d_model]
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,             # scalar int32: absolute position of new token
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    window: int = 0,
+    k_chunk: int = 1024,
+):
+    """One-token decode against a cache. Returns (y, new_cache)."""
+    b = x.shape[0]
+    q = _split_heads(dense(p["q"], x), n_heads, head_dim)
+    k = _split_heads(dense(p["k"], x), n_kv, head_dim)
+    v = _split_heads(dense(p["v"], x), n_kv, head_dim)
+    posv = jnp.asarray(pos)[None]
+    q = apply_rope(q, posv, rope_theta)
+    k = apply_rope(k, posv, rope_theta)
+
+    clen = cache["k"].shape[1]
+    slot = jnp.mod(pos, clen) if window > 0 else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    qh = jnp.swapaxes(q, 1, 2)
+    kh = jnp.swapaxes(ck, 1, 2)
+    vh = jnp.swapaxes(cv, 1, 2)
+    if window > 0:
+        # Rolling cache: every slot is within the window by construction;
+        # mask only the slots not yet written (pos < window).
+        valid = jnp.arange(clen) <= pos
+        s = jnp.einsum(
+            "bkgqd,bkcd->bkgqc",
+            qh.reshape(b, n_kv, n_heads // n_kv, 1, head_dim).astype(jnp.float32),
+            kh.astype(jnp.float32),
+        ) * (head_dim ** -0.5)
+        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        pattn = jax.nn.softmax(s, axis=-1)
+        y = jnp.einsum("bkgqc,bkcd->bkgqd", pattn, vh.astype(jnp.float32))
+        y = y.reshape(b, n_heads, 1, head_dim).astype(x.dtype)
+    else:
+        y = chunked_attention(
+            qh, kh, vh, causal=False, k_chunk=k_chunk,
+            kv_valid_len=pos + 1,
+        )
+    y = jnp.swapaxes(y, 1, 2).reshape(b, 1, n_heads * head_dim)
+    return dense(p["o"], y), {"k": ck, "v": cv}

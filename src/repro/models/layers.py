@@ -1,0 +1,142 @@
+"""Shared layer primitives: init helpers, norms, FFNs, rotary embeddings.
+
+Parameter convention: every init function returns ``(params, axes)`` where
+``axes`` mirrors the params pytree and names each dim with a *logical axis*
+string (e.g. ``("d_model", "ff")``). The sharding solver
+(`repro.distributed.sharding`) maps logical axes → mesh axes with
+divisibility checks; model code never mentions mesh axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+def _init(rng, shape, dtype, scale: Optional[float] = None):
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0] if len(shape) > 1 else 1.0)
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype, in_axis: str, out_axis: str,
+               bias: bool = False) -> Tuple[Params, Axes]:
+    keys = jax.random.split(rng, 2)
+    p: Params = {"w": _init(keys[0], (d_in, d_out), dtype)}
+    a: Axes = {"w": (in_axis, out_axis)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        a["b"] = (out_axis,)
+    return p, a
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d: int, dtype) -> Tuple[Params, Axes]:
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("d_model",)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    orig_shape = x.shape
+    y = ops.rmsnorm(x.reshape(-1, orig_shape[-1]), p["scale"], eps=eps)
+    return y.reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+FFN_KINDS = ("swiglu", "geglu", "gelu", "relu2")
+
+
+def ffn_init(rng, d: int, ff: int, kind: str, dtype) -> Tuple[Params, Axes]:
+    ks = jax.random.split(rng, 3)
+    if kind in ("swiglu", "geglu"):
+        p = {
+            "wg": _init(ks[0], (d, ff), dtype),
+            "wu": _init(ks[1], (d, ff), dtype),
+            "wd": _init(ks[2], (ff, d), dtype, scale=1.0 / math.sqrt(ff)),
+        }
+        a = {"wg": ("d_model", "ff"), "wu": ("d_model", "ff"), "wd": ("ff", "d_model")}
+    elif kind in ("gelu", "relu2"):
+        p = {
+            "wu": _init(ks[0], (d, ff), dtype),
+            "wd": _init(ks[1], (ff, d), dtype, scale=1.0 / math.sqrt(ff)),
+        }
+        a = {"wu": ("d_model", "ff"), "wd": ("ff", "d_model")}
+    else:
+        raise ValueError(f"unknown ffn kind {kind!r}")
+    return p, a
+
+
+def ffn_apply(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ p["wu"]) @ p["wd"]
+    if kind == "relu2":
+        h = jax.nn.relu(x @ p["wu"])
+        return (h * h) @ p["wd"]
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., s, n_heads, head_dim]; positions: [s] or broadcastable."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                 # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [s, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [s, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(rng, vocab: int, d: int, dtype) -> Tuple[Params, Axes]:
+    return (
+        {"table": _init(rng, (vocab, d), dtype, scale=1.0)},
+        {"table": ("vocab", "d_model")},
+    )
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return p["table"][tokens]
+
+
+def unembed_init(rng, d: int, vocab: int, dtype) -> Tuple[Params, Axes]:
+    return (
+        {"w": _init(rng, (d, vocab), dtype)},
+        {"w": ("d_model", "vocab")},
+    )
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["w"]

@@ -1,0 +1,215 @@
+"""Top-level language model: embed → segment stack → norm → chunked loss.
+
+Public surface (all pure functions over explicit pytrees):
+    init_params(rng, cfg)        -> (params, axes)       # real arrays
+    abstract_params(cfg)         -> (specs, axes)        # ShapeDtypeStructs
+    forward(params, batch, ...)  -> (hidden, aux)
+    loss_fn(params, batch, ...)  -> (loss, metrics)      # seq-chunked vocab
+    prefill(params, batch, ...)  -> (last_logits, caches)
+    decode_step(params, tokens, caches, pos, ...) -> (logits, caches)
+
+The loss never materializes [batch, seq, vocab]: logits are produced and
+consumed per sequence chunk inside a scan (loss_chunk tunable). For the
+262k-vocab archs this is the difference between a 0.5 PB activation and a
+few hundred MB.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ops
+from . import transformer as tf
+from .layers import (
+    embed,
+    embedding_init,
+    norm_init,
+    rmsnorm,
+    unembed,
+    unembed_init,
+)
+
+Batch = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng, cfg: ArchConfig):
+    ks = jax.random.split(rng, 4)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["embed"], a["embed"] = embedding_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.jdtype)
+    seg_p, seg_a = [], []
+    for i, seg in enumerate(cfg.segments()):
+        sp, sa = tf.segment_init(jax.random.fold_in(ks[1], i), cfg, seg)
+        seg_p.append(sp)
+        seg_a.append(sa)
+    p["segments"], a["segments"] = tuple(seg_p), tuple(seg_a)
+    p["final_norm"], a["final_norm"] = norm_init(cfg.d_model, cfg.jdtype)
+    p["lm_head"], a["lm_head"] = unembed_init(ks[2], cfg.d_model, cfg.vocab_size, cfg.jdtype)
+    return p, a
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct params + logical-axis tree, no device allocation.
+
+    The axes tree is plain Python (strings), which eval_shape cannot return
+    as an output — capture it by side effect during tracing instead.
+    """
+    box = {}
+
+    def build():
+        p, a = init_params(jax.random.PRNGKey(0), cfg)
+        box["axes"] = a
+        return p
+
+    specs = jax.eval_shape(build)
+    return specs, box["axes"]
+
+
+def param_axes(cfg: ArchConfig):
+    """Logical-axis tree without touching device memory."""
+    return abstract_params(cfg)[1]
+
+
+def param_count(cfg: ArchConfig) -> int:
+    import math
+
+    p, _ = abstract_params(cfg)
+    return sum(math.prod(x.shape) for x in jax.tree_util.tree_leaves(p))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: top_k of num_experts expert params)."""
+    import math
+
+    total = param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    p, _ = abstract_params(cfg)
+    expert = 0
+
+    def walk(t):
+        nonlocal expert
+        if isinstance(t, dict):
+            for k, v in t.items():
+                if k == "moe":
+                    for kk, vv in v.items():
+                        if kk != "router":
+                            expert += sum(
+                                math.prod(x.shape)
+                                for x in jax.tree_util.tree_leaves(vv)
+                            )
+                else:
+                    walk(v)
+        elif isinstance(t, (tuple, list)):
+            for v in t:
+                walk(v)
+
+    walk(p)
+    active_frac = cfg.experts_per_token / cfg.num_experts
+    return int(total - expert * (1 - active_frac))
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch: Batch, cfg: ArchConfig):
+    if cfg.frontend == "audio_frames":
+        return batch["embeds"].astype(cfg.jdtype)
+    if cfg.frontend == "vision_patches":
+        tok = embed(params["embed"], batch["tokens"])
+        return jnp.concatenate([batch["embeds"].astype(tok.dtype), tok], axis=1)
+    return embed(params["embed"], batch["tokens"])
+
+
+def forward(params, batch: Batch, cfg: ArchConfig, run: tf.RunConfig,
+            mode: str = "train", cache_len: Optional[int] = None):
+    x = _embed_inputs(params, batch, cfg)
+    x, aux, caches = tf.stack_apply(
+        params["segments"], x, cfg, run, mode, cache_len=cache_len
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux, caches
+
+
+def _chunked_xent(lm_head, x, labels, mask, loss_chunk: int):
+    """Mean xent over valid tokens; scan over seq chunks of the vocab matmul."""
+    b, s, d = x.shape
+    chunk = min(loss_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n_chunks = x.shape[1] // chunk
+    xc = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xx, ll, mm = inp
+        logits = unembed(lm_head, xx.reshape(b * chunk, d))
+        losses = ops.softmax_xent(logits, ll.reshape(-1))
+        tot = tot + jnp.sum(losses * mm.reshape(-1))
+        cnt = cnt + jnp.sum(mm)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xc, lc, mc)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, batch: Batch, cfg: ArchConfig, run: tf.RunConfig,
+            aux_weight: float = 0.01):
+    x, aux, _ = forward(params, batch, cfg, run, mode="train")
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    xent = _chunked_xent(params["lm_head"], x, labels, mask, run.loss_chunk)
+    loss = xent + aux_weight * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch: Batch, cfg: ArchConfig, run: tf.RunConfig,
+            cache_len: Optional[int] = None):
+    """Full-sequence forward emitting caches + logits of the last position."""
+    seq = (batch["embeds"].shape[1] if "tokens" not in batch else batch["tokens"].shape[1])
+    if cfg.frontend == "vision_patches":
+        seq = batch["embeds"].shape[1] + batch["tokens"].shape[1]
+    x, _, caches = forward(
+        params, batch, cfg, run, mode="prefill", cache_len=cache_len or seq
+    )
+    logits = unembed(params["lm_head"], x[:, -1])
+    return logits, caches
+
+
+def decode_step(params, tokens, caches, pos, cfg: ArchConfig, run: tf.RunConfig):
+    """tokens: [b, 1] int32; pos: scalar absolute position. -> (logits, caches)."""
+    x = embed(params["embed"], tokens)
+    x, _, caches = tf.stack_apply(
+        params["segments"], x, cfg, run, mode="decode", caches=caches, pos=pos
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["lm_head"], x[:, 0])
+    return logits, caches
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int):
+    return tf.cache_specs(cfg, batch, cache_len)

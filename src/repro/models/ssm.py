@@ -1,0 +1,409 @@
+"""State-space / recurrent mixers: Mamba (jamba), mLSTM + sLSTM (xlstm).
+
+All three follow the same deployment contract as attention:
+  *_forward(params, x, chunk) -> (y, final_state)   # train / prefill
+  *_decode(params, x_t, state) -> (y_t, new_state)  # one-token decode
+
+Sequence-parallel forms never materialize [b, s, d_inner, d_state]:
+  * Mamba uses an outer `lax.scan` over length-`chunk` chunks with an inner
+    `associative_scan` — peak live tensor is [b, chunk, d_inner, d_state].
+  * mLSTM uses the stabilized *chunkwise* form: intra-chunk attention-like
+    matmuls under a cumulative-forget decay mask + inter-chunk matrix-memory
+    carry. Peak live tensor is [b, h, chunk, chunk].
+  * sLSTM is inherently sequential (recurrent R matrix): `lax.scan` over
+    time with exp-gating stabilizers.
+
+`chunk` is a tunable (VMEM-working-set knob, same role as flash attention's
+block_k). Decode state is O(1) in sequence length — which is why the
+long_500k cells run for xlstm/jamba and are skipped for quadratic archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Axes, Params, _init
+
+LOG_EPS = -1e30
+
+
+# ===========================================================================
+# Mamba (S6 selective scan)
+# ===========================================================================
+
+
+def mamba_init(rng, d: int, dtype, expand: int = 2, d_state: int = 16,
+               d_conv: int = 4) -> Tuple[Params, Axes]:
+    di = expand * d
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(rng, 6)
+    p: Params = {
+        "in_proj": _init(ks[0], (d, 2 * di), dtype),
+        "conv_w": _init(ks[1], (d_conv, di), dtype, scale=1.0 / math.sqrt(d_conv)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _init(ks[2], (di, dt_rank + 2 * d_state), dtype),
+        "dt_proj": _init(ks[3], (dt_rank, di), dtype, scale=1.0 / math.sqrt(dt_rank)),
+        "dt_bias": jnp.full((di,), -2.0, jnp.float32),  # softplus^-1(~0.12)
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32), (di, d_state))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[4], (di, d), dtype, scale=1.0 / math.sqrt(di)),
+    }
+    a: Axes = {
+        "in_proj": ("d_model", "ff"),
+        "conv_w": ("conv_k", "ff"),
+        "conv_b": ("ff",),
+        "x_proj": ("ff", "ssm_small"),
+        "dt_proj": ("ssm_small", "ff"),
+        "dt_bias": ("ff",),
+        "A_log": ("ff", "ssm_state"),
+        "D": ("ff",),
+        "out_proj": ("ff", "d_model"),
+    }
+    return p, a
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv over time. x: [b, s, di]; w: [k, di]."""
+    k = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    y = sum(xp[:, j : j + s] * w[j] for j in range(k))
+    return y + b
+
+
+def _mamba_project(p, x):
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    return x_in, z
+
+
+def _mamba_coeffs(p, xc):
+    """xc: conv'd, silu'd branch [b, s, di] -> (dA [b,s,di,ds], dBx, C)."""
+    d_state = p["A_log"].shape[1]
+    dt_rank = p["x_proj"].shape[1] - 2 * d_state
+    proj = xc @ p["x_proj"]
+    dt, B, C = jnp.split(proj.astype(jnp.float32), [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])  # [b,s,di]
+    A = -jnp.exp(p["A_log"])                                    # [di, ds]
+    dA = jnp.exp(dt[..., None] * A)                             # [b,s,di,ds]
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * B[:, :, None, :]
+    return dA, dBx, C
+
+
+def mamba_forward(p: Params, x: jax.Array, *, chunk: int = 32,
+                  return_state: bool = False):
+    """x: [b, s, d]. Returns y or (y, state) with state=(h, conv_tail)."""
+    b, s, d = x.shape
+    di = p["conv_b"].shape[0]
+    d_state = p["A_log"].shape[1]
+    k = p["conv_w"].shape[0]
+    x_in, z = _mamba_project(p, x)
+    xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p = xc
+    sp = xc_p.shape[1]
+    n_chunks = sp // chunk
+    xcs = xc_p.reshape(b, n_chunks, chunk, di).swapaxes(0, 1)  # [nc, b, c, di]
+
+    def chunk_step(h, xc_c):
+        dA, dBx, C = _mamba_coeffs(p, xc_c)                    # [b,c,di,ds]x2, [b,c,ds]
+        # prepend carry as a pseudo-step: h_0 contribution
+        a_all = jnp.concatenate([jnp.ones((b, 1, di, d_state)), dA], axis=1)
+        b_all = jnp.concatenate([h[:, None], dBx], axis=1)
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+        _, hs = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+        hs = hs[:, 1:]                                          # [b,c,di,ds]
+        y = jnp.einsum("bcds,bcs->bcd", hs, C)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((b, di, d_state), jnp.float32)
+    hN, ys = jax.lax.scan(chunk_step, h0, xcs)
+    y = ys.swapaxes(0, 1).reshape(b, sp, di)[:, :s]
+    y = y + p["D"] * xc.astype(jnp.float32)
+    out = ((y * jax.nn.silu(z.astype(jnp.float32))) @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    if not return_state:
+        return out
+    # decode needs the last k-1 *pre-conv* inputs
+    conv_tail = x_in[:, -(k - 1):] if s >= k - 1 else jnp.pad(
+        x_in, ((0, 0), (k - 1 - s, 0), (0, 0))
+    )
+    return out, {"h": hN, "conv": conv_tail}
+
+
+def mamba_state_spec(batch: int, d: int, dtype, expand: int = 2,
+                     d_state: int = 16, d_conv: int = 4):
+    di = expand * d
+    return {
+        "h": jax.ShapeDtypeStruct((batch, di, d_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, d_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(p: Params, x: jax.Array, state: Dict[str, jax.Array]):
+    """x: [b, 1, d] one token. Returns (y [b,1,d], new_state)."""
+    b = x.shape[0]
+    k = p["conv_w"].shape[0]
+    x_in, z = _mamba_project(p, x)                              # [b,1,di]
+    window = jnp.concatenate([state["conv"].astype(x.dtype), x_in], axis=1)  # [b,k,di]
+    xc = jax.nn.silu((window * p["conv_w"][None]).sum(axis=1, keepdims=True) + p["conv_b"])
+    dA, dBx, C = _mamba_coeffs(p, xc)                           # [b,1,di,ds]
+    h = dA[:, 0] * state["h"] + dBx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, C[:, 0])[:, None]
+    y = y + p["D"] * xc.astype(jnp.float32)
+    out = ((y * jax.nn.silu(z.astype(jnp.float32))) @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+# ===========================================================================
+# mLSTM (matrix-memory LSTM, xLSTM) — stabilized chunkwise-parallel form
+# ===========================================================================
+
+
+def mlstm_init(rng, d: int, n_heads: int, dtype, expand: int = 2) -> Tuple[Params, Axes]:
+    di = expand * d
+    ks = jax.random.split(rng, 7)
+    p: Params = {
+        "in_proj": _init(ks[0], (d, 2 * di), dtype),
+        "wq": _init(ks[1], (di, di), dtype),
+        "wk": _init(ks[2], (di, di), dtype),
+        "wv": _init(ks[3], (di, di), dtype),
+        "w_gates": _init(ks[4], (di, 2 * n_heads), jnp.float32, scale=0.01),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((n_heads,)), jnp.full((n_heads,), 3.0)]  # forget-bias>0
+        ).astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": _init(ks[5], (di, d), dtype, scale=1.0 / math.sqrt(di)),
+    }
+    a: Axes = {
+        "in_proj": ("d_model", "ff"),
+        "wq": ("ff", "ff2"), "wk": ("ff", "ff2"), "wv": ("ff", "ff2"),
+        "w_gates": ("ff", "heads_small"),
+        "b_gates": ("heads_small",),
+        "norm_scale": ("ff",),
+        "out_proj": ("ff", "d_model"),
+    }
+    return p, a
+
+
+def _mlstm_qkvg(p, x, n_heads):
+    b, s, d = x.shape
+    di = p["wq"].shape[0]
+    hd = di // n_heads
+    xz = x @ p["in_proj"]
+    xb, z = jnp.split(xz, 2, axis=-1)
+    q = (xb @ p["wq"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)  # [b,h,s,hd]
+    kk = (xb @ p["wk"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)
+    v = (xb @ p["wv"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)
+    gates = xb.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)                   # [b,s,h]
+    log_f = jax.nn.log_sigmoid(f_raw)
+    return q, kk, v, z, log_i.swapaxes(1, 2), log_f.swapaxes(1, 2)  # gates [b,h,s]
+
+
+def mlstm_forward(p: Params, x: jax.Array, *, n_heads: int, chunk: int = 64,
+                  return_state: bool = False):
+    b, s, d = x.shape
+    di = p["wq"].shape[0]
+    hd = di // n_heads
+    q, k, v, z, log_i, log_f = _mlstm_qkvg(p, x, n_heads)
+    scale = hd ** -0.5
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        padt = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 3))
+        q, k, v = padt(q), padt(k), padt(v)
+        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)), constant_values=LOG_EPS)
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+    sp = q.shape[2]
+    nc = sp // chunk
+    resh = lambda t: t.reshape(b, n_heads, nc, chunk, *t.shape[3:]).swapaxes(0, 2).swapaxes(1, 2)
+    # -> [nc, b, h, chunk, ...]
+    qs, ks_, vs = resh(q), resh(k), resh(v)
+    lis = log_i.reshape(b, n_heads, nc, chunk).swapaxes(0, 2).swapaxes(1, 2)
+    lfs = log_f.reshape(b, n_heads, nc, chunk).swapaxes(0, 2).swapaxes(1, 2)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                       # [b,h,hd,hd], [b,h,hd], [b,h]
+        qc, kc, vc, li, lf = inp              # [b,h,c,hd]x3, [b,h,c]x2
+        F = jnp.cumsum(lf, axis=-1)           # inclusive cum log-forget
+        # intra-chunk decay:  g[t,s_] = F_t - F_s + li_s  for s_ <= t
+        g = F[..., :, None] - F[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        g = jnp.where(tri, g, LOG_EPS)
+        # carry-in decay per step t: F_t (+ running stabilizer m)
+        carry_lg = F + m[..., None]           # [b,h,c]
+        m_new = jnp.maximum(g.max(-1), carry_lg)          # [b,h,c]
+        Dmat = jnp.exp(g - m_new[..., None])              # [b,h,c,c]
+        inter = jnp.exp(carry_lg - m_new)                 # [b,h,c]
+        scores = jnp.einsum("bhtd,bhsd->bhts", qc.astype(jnp.float32) * scale,
+                            kc.astype(jnp.float32)) * Dmat
+        num = jnp.einsum("bhts,bhsd->bhtd", scores, vc.astype(jnp.float32)) \
+            + inter[..., None] * jnp.einsum("bhtd,bhde->bhte", qc.astype(jnp.float32) * scale, C)
+        den = scores.sum(-1) + inter * jnp.einsum("bhtd,bhd->bht",
+                                                  qc.astype(jnp.float32) * scale, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        # chunk-final state update
+        F_tot = F[..., -1]                                 # [b,h]
+        lg_state = F_tot[..., None] - F + li               # decay each s to chunk end
+        m_next = jnp.maximum(F_tot + m, lg_state.max(-1))
+        w_s = jnp.exp(lg_state - m_next[..., None])        # [b,h,c]
+        C_next = jnp.exp(F_tot + m - m_next)[..., None, None] * C + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w_s, kc.astype(jnp.float32), vc.astype(jnp.float32))
+        n_next = jnp.exp(F_tot + m - m_next)[..., None] * n + jnp.einsum(
+            "bhs,bhsd->bhd", w_s, kc.astype(jnp.float32))
+        return (C_next, n_next, m_next), h
+
+    C0 = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, n_heads, hd), jnp.float32)
+    m0 = jnp.zeros((b, n_heads), jnp.float32)
+    (CN, nN, mN), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qs, ks_, vs, lis, lfs))
+    h = hs.swapaxes(1, 2).swapaxes(0, 2).reshape(b, n_heads, sp, hd)[:, :, :s]
+    h = h.swapaxes(1, 2).reshape(b, s, di)
+    # per-head group norm (rms) then gate + down-proj
+    hn = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + 1e-6)
+    hn = (hn * p["norm_scale"]).astype(jnp.float32)
+    out = ((hn * jax.nn.silu(z.astype(jnp.float32))) @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    if not return_state:
+        return out
+    return out, {"C": CN, "n": nN, "m": mN}
+
+
+def mlstm_state_spec(batch: int, d: int, n_heads: int, expand: int = 2):
+    di = expand * d
+    hd = di // n_heads
+    return {
+        "C": jax.ShapeDtypeStruct((batch, n_heads, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, n_heads, hd), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, n_heads), jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, x: jax.Array, state, *, n_heads: int):
+    b = x.shape[0]
+    di = p["wq"].shape[0]
+    hd = di // n_heads
+    q, k, v, z, log_i, log_f = _mlstm_qkvg(p, x, n_heads)      # seq len 1
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]               # [b,h,hd]
+    li, lf = log_i[..., 0], log_f[..., 0]                      # [b,h]
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    f_s = jnp.exp(lf + m - m_new)
+    i_s = jnp.exp(li - m_new)
+    C = f_s[..., None, None] * C + i_s[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = f_s[..., None] * n + i_s[..., None] * k.astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    h = h.reshape(b, 1, di)
+    hn = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + 1e-6)
+    hn = (hn * p["norm_scale"]).astype(jnp.float32)
+    out = ((hn * jax.nn.silu(z.astype(jnp.float32))) @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM (scalar-memory LSTM with exp gating) — sequential recurrence
+# ===========================================================================
+
+
+def slstm_init(rng, d: int, n_heads: int, dtype) -> Tuple[Params, Axes]:
+    hd = d // n_heads
+    ks = jax.random.split(rng, 5)
+    ff = ((4 * d // 3 + 63) // 64) * 64
+    p: Params = {
+        "w": _init(ks[0], (d, 4 * d), dtype),
+        "r": _init(ks[1], (n_heads, hd, 4 * hd), dtype, scale=1.0 / math.sqrt(hd)),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ).astype(jnp.float32),  # order: z, i, f, o
+        "up_g": _init(ks[2], (d, ff), dtype),
+        "up_u": _init(ks[3], (d, ff), dtype),
+        "down": _init(ks[4], (ff, d), dtype, scale=1.0 / math.sqrt(ff)),
+    }
+    a: Axes = {
+        "w": ("d_model", "heads"),
+        "r": ("heads_small", "hd", "hd4"),
+        "b": ("heads",),
+        "up_g": ("d_model", "ff"), "up_u": ("d_model", "ff"),
+        "down": ("ff", "d_model"),
+    }
+    return p, a
+
+
+def _slstm_cell(p, xw, state, n_heads):
+    """One step. xw: [b, 4d] pre-computed x@w. state: dict of [b, d]."""
+    b = xw.shape[0]
+    d = state["h"].shape[-1]
+    hd = d // n_heads
+    hr = state["h"].reshape(b, n_heads, hd)
+    rec = jnp.einsum("bnh,nhk->bnk", hr.astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(b, 4 * d)
+    zf, if_, ff_, of_ = jnp.split(xw + rec + p["b"], 4, axis=-1)
+    z = jnp.tanh(zf)
+    o = jax.nn.sigmoid(of_)
+    log_i = if_
+    log_f = jax.nn.log_sigmoid(ff_)
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * z
+    n = f_s * state["n"] + i_s
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(p: Params, x: jax.Array, *, n_heads: int, unroll: int = 1,
+                  return_state: bool = False):
+    b, s, d = x.shape
+    xw = (x @ p["w"]).astype(jnp.float32)                       # [b,s,4d]
+    state0 = {
+        "c": jnp.zeros((b, d), jnp.float32),
+        "n": jnp.zeros((b, d), jnp.float32),
+        "h": jnp.zeros((b, d), jnp.float32),
+        "m": jnp.zeros((b, d), jnp.float32),
+    }
+
+    def step(state, xw_t):
+        new = _slstm_cell(p, xw_t, state, n_heads)
+        return new, new["h"]
+
+    stateN, hs = jax.lax.scan(step, state0, xw.swapaxes(0, 1), unroll=unroll)
+    h = hs.swapaxes(0, 1).astype(x.dtype)                       # [b,s,d]
+    # post-MLP (GeGLU, pf=4/3)
+    y = (jax.nn.gelu(h @ p["up_g"]) * (h @ p["up_u"])) @ p["down"]
+    if not return_state:
+        return y
+    return y, stateN
+
+
+def slstm_state_spec(batch: int, d: int):
+    return {k: jax.ShapeDtypeStruct((batch, d), jnp.float32) for k in ("c", "n", "h", "m")}
+
+
+def slstm_decode(p: Params, x: jax.Array, state, *, n_heads: int):
+    b = x.shape[0]
+    xw = (x[:, 0] @ p["w"]).astype(jnp.float32)
+    new = _slstm_cell(p, xw, state, n_heads)
+    h = new["h"].astype(x.dtype)[:, None]
+    y = (jax.nn.gelu(h @ p["up_g"]) * (h @ p["up_u"])) @ p["down"]
+    return y, new

@@ -1,0 +1,307 @@
+"""Block assembly: LayerSpec → layer params/apply, Segment → lax.scan stacks.
+
+Heterogeneous layer patterns (gemma3 5:1 local:global, jamba 1-attn:7-mamba
+with alternating MoE, xlstm mLSTM/sLSTM) are handled by scanning over
+*super-blocks*: the pattern is unrolled inside the scan body, the repeats are
+the scan axis. This keeps compiled HLO size O(pattern) instead of O(layers) —
+the difference between compiling 40 dry-run cells in minutes vs hours.
+
+Three modes share one code path:
+    train   — full-sequence forward, no caches
+    prefill — full-sequence forward, emits per-layer caches (scan ys)
+    decode  — one-token forward, consumes + re-emits caches (scan xs/ys)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, LayerSpec, Segment
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from .layers import Axes, Params, ffn_apply, ffn_init, norm_init, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Runtime/layout knobs — the model-level tunable surface.
+
+    These do not change math; they change chunking, remat and dispatch.
+    The layout autotuner searches over a subset of them (see
+    distributed/layout_space.py).
+    """
+
+    remat: str = "dots"          # none | dots | full
+    q_chunk: int = 512
+    k_chunk: int = 1024
+    mamba_chunk: int = 32
+    mlstm_chunk: int = 64
+    loss_chunk: int = 512
+    slstm_unroll: int = 1
+    moe_dispatch: str = "scatter"   # scatter | dense
+    microbatches: int = 1           # gradient-accumulation steps
+    grad_compression: str = "none"  # none | bf16 (wire format of grad reduce)
+
+
+# ---------------------------------------------------------------------------
+# Layer init
+# ---------------------------------------------------------------------------
+
+
+def layer_init(rng, cfg: ArchConfig, spec: LayerSpec) -> Tuple[Params, Axes]:
+    ks = jax.random.split(rng, 6)
+    dt = cfg.jdtype
+    p: Params = {}
+    a: Axes = {}
+    p["norm1"], a["norm1"] = norm_init(cfg.d_model, dt)
+
+    if spec.mixer == "attn":
+        p["mixer"], a["mixer"] = attn.attention_init(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd, dt,
+            qkv_bias=cfg.qkv_bias,
+        )
+    elif spec.mixer == "mamba":
+        p["mixer"], a["mixer"] = ssm.mamba_init(
+            ks[0], cfg.d_model, dt, expand=cfg.mamba_expand,
+            d_state=cfg.mamba_d_state,
+        )
+    elif spec.mixer == "mlstm":
+        p["mixer"], a["mixer"] = ssm.mlstm_init(ks[0], cfg.d_model, cfg.num_heads, dt)
+    elif spec.mixer == "slstm":
+        p["mixer"], a["mixer"] = ssm.slstm_init(ks[0], cfg.d_model, cfg.num_heads, dt)
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.ffn != "none":
+        p["norm2"], a["norm2"] = norm_init(cfg.d_model, dt)
+        if "moe" in spec.ffn:
+            p["moe"], a["moe"] = moe_mod.moe_init(
+                ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts, dt, cfg.ffn_kind
+            )
+        if spec.ffn in ("dense", "moe+dense"):
+            p["ffn"], a["ffn"] = ffn_init(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn_kind, dt)
+    return p, a
+
+
+def superblock_init(rng, cfg: ArchConfig, pattern) -> Tuple[Params, Axes]:
+    p, a = {}, {}
+    for i, spec in enumerate(pattern):
+        p[f"l{i}"], a[f"l{i}"] = layer_init(jax.random.fold_in(rng, i), cfg, spec)
+    return p, a
+
+
+def segment_init(rng, cfg: ArchConfig, seg: Segment) -> Tuple[Params, Axes]:
+    """Stack `repeats` super-blocks along a leading scan axis."""
+    blocks = []
+    a0 = None
+    for r in range(seg.repeats):
+        bp, a0 = superblock_init(jax.random.fold_in(rng, r), cfg, seg.pattern)
+        blocks.append(bp)
+    p = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    a = jax.tree_util.tree_map(
+        lambda ax: ("layers",) + tuple(ax),
+        a0,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(s, str) for s in x),
+    )
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# Layer apply
+# ---------------------------------------------------------------------------
+
+
+def _mixer_apply(p, x, spec: LayerSpec, cfg: ArchConfig, run: RunConfig,
+                 mode: str, cache, pos):
+    kw = {}
+    if spec.mixer == "attn":
+        common = dict(
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta, window=spec.window,
+        )
+        if mode == "train":
+            return attn.attention_forward(
+                p, x, q_chunk=run.q_chunk, k_chunk=run.k_chunk, **common
+            ), None
+        if mode == "prefill":
+            y, c = attn.attention_forward(
+                p, x, q_chunk=run.q_chunk, k_chunk=run.k_chunk,
+                return_cache=True, cache_len=cache, **common
+            )
+            return y, c
+        return attn.attention_decode(p, x, cache, pos, k_chunk=run.k_chunk, **common)
+
+    if spec.mixer == "mamba":
+        if mode == "train":
+            return ssm.mamba_forward(p, x, chunk=run.mamba_chunk), None
+        if mode == "prefill":
+            return ssm.mamba_forward(p, x, chunk=run.mamba_chunk, return_state=True)
+        return ssm.mamba_decode(p, x, cache)
+
+    if spec.mixer == "mlstm":
+        if mode == "train":
+            return ssm.mlstm_forward(p, x, n_heads=cfg.num_heads, chunk=run.mlstm_chunk), None
+        if mode == "prefill":
+            return ssm.mlstm_forward(
+                p, x, n_heads=cfg.num_heads, chunk=run.mlstm_chunk, return_state=True
+            )
+        return ssm.mlstm_decode(p, x, cache, n_heads=cfg.num_heads)
+
+    if spec.mixer == "slstm":
+        if mode == "train":
+            return ssm.slstm_forward(p, x, n_heads=cfg.num_heads, unroll=run.slstm_unroll), None
+        if mode == "prefill":
+            return ssm.slstm_forward(
+                p, x, n_heads=cfg.num_heads, unroll=run.slstm_unroll, return_state=True
+            )
+        return ssm.slstm_decode(p, x, cache, n_heads=cfg.num_heads)
+    raise ValueError(spec.mixer)
+
+
+def layer_apply(p, x, spec: LayerSpec, cfg: ArchConfig, run: RunConfig,
+                mode: str, cache=None, pos=None):
+    """Returns (x, aux_loss, new_cache_or_None)."""
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    y, new_cache = _mixer_apply(p["mixer"], h, spec, cfg, run, mode, cache, pos)
+    x = x + y
+
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn != "none":
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y2 = 0.0
+        if "moe" in spec.ffn:
+            ym, aux = moe_mod.moe_apply(
+                p["moe"], h2, top_k=cfg.experts_per_token, ffn_kind=cfg.ffn_kind,
+                capacity_factor=cfg.capacity_factor, dispatch=run.moe_dispatch,
+            )
+            y2 = y2 + ym
+        if spec.ffn in ("dense", "moe+dense"):
+            y2 = y2 + ffn_apply(p["ffn"], h2, cfg.ffn_kind)
+        x = x + y2
+    return x, aux, new_cache
+
+
+def superblock_apply(p, x, pattern, cfg, run, mode, caches=None, pos=None,
+                     cache_len=None):
+    """Apply one super-block. caches: dict l{i} -> cache (decode) or None."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for i, spec in enumerate(pattern):
+        c = None
+        if mode == "decode":
+            c = caches[f"l{i}"]
+        elif mode == "prefill":
+            c = cache_len
+        x, aux, nc = layer_apply(p[f"l{i}"], x, spec, cfg, run, mode, c, pos)
+        aux_total = aux_total + aux
+        if mode != "train":
+            new_caches[f"l{i}"] = nc
+    return x, aux_total, (new_caches if mode != "train" else None)
+
+
+def _remat_wrap(fn, run: RunConfig):
+    if run.remat == "none":
+        return fn
+    if run.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Whole-stack apply (scan over segment repeats)
+# ---------------------------------------------------------------------------
+
+
+def stack_apply(segments_params, x, cfg: ArchConfig, run: RunConfig,
+                mode: str, caches=None, pos=None, cache_len=None):
+    """Apply all segments. Returns (x, aux, caches_or_None).
+
+    segments_params: tuple of stacked segment params.
+    caches: tuple (per segment) of stacked cache pytrees (decode mode).
+    """
+    segs = cfg.segments()
+    aux_total = jnp.zeros((), jnp.float32)
+    out_caches = []
+    for si, (seg, p_seg) in enumerate(zip(segs, segments_params)):
+        pattern = seg.pattern
+
+        if mode == "train":
+            def body(carry, p_sb):
+                xx, aux = carry
+                xx, a, _ = superblock_apply(p_sb, xx, pattern, cfg, run, "train")
+                return (xx, aux + a), None
+
+            body = _remat_wrap(body, run)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), p_seg)
+            out = None
+
+        elif mode == "prefill":
+            def body(carry, p_sb):
+                xx, aux = carry
+                xx, a, cc = superblock_apply(
+                    p_sb, xx, pattern, cfg, run, "prefill", cache_len=cache_len
+                )
+                return (xx, aux + a), cc
+
+            body = _remat_wrap(body, run)
+            (x, aux_total), seg_caches = jax.lax.scan(body, (x, aux_total), p_seg)
+            out_caches.append(seg_caches)
+
+        else:  # decode
+            def body(xx, inp):
+                p_sb, c_sb = inp
+                xx, _, cc = superblock_apply(
+                    p_sb, xx, pattern, cfg, run, "decode", caches=c_sb, pos=pos
+                )
+                return xx, cc
+
+            x, seg_caches = jax.lax.scan(body, x, (p_seg, caches[si]))
+            out_caches.append(seg_caches)
+
+    return x, aux_total, (tuple(out_caches) if mode != "train" else None)
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (abstract, for the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def layer_cache_spec(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                     cache_len: int):
+    dt = cfg.jdtype
+    if spec.mixer == "attn":
+        return attn.attention_cache_spec(
+            batch, cache_len, cfg.num_kv_heads, cfg.hd, spec.window, dt
+        )
+    if spec.mixer == "mamba":
+        return ssm.mamba_state_spec(
+            batch, cfg.d_model, dt, expand=cfg.mamba_expand,
+            d_state=cfg.mamba_d_state,
+        )
+    if spec.mixer == "mlstm":
+        return ssm.mlstm_state_spec(batch, cfg.d_model, cfg.num_heads)
+    if spec.mixer == "slstm":
+        return ssm.slstm_state_spec(batch, cfg.d_model)
+    raise ValueError(spec.mixer)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int):
+    """Abstract cache pytree matching stack_apply's decode layout."""
+    out = []
+    for seg in cfg.segments():
+        sb = {
+            f"l{i}": layer_cache_spec(cfg, spec, batch, cache_len)
+            for i, spec in enumerate(seg.pattern)
+        }
+        stacked = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((seg.repeats,) + s.shape, s.dtype), sb
+        )
+        out.append(stacked)
+    return tuple(out)

@@ -1,0 +1,87 @@
+"""Model-level tunables: annotation sites above the kernel layer.
+
+The paper's annotations attach to loops; ours attach wherever a declared
+knob changes schedule-not-semantics. Besides Pallas BlockSpecs, that is:
+
+  * chunked-attention (q_chunk, k_chunk)  — VMEM/L2 working set
+  * mamba scan chunk                       — state-materialization window
+  * mLSTM chunk                            — intra-chunk matrix size
+  * xent loss chunk                        — logits materialization window
+
+Each wraps the production implementation and declares its reference —
+`tests/test_ssm.py` separately proves chunk-invariance, so the tuner's
+correctness gate is a redundant belt-and-braces here (as in the paper,
+where the reference compare catches miscompiled variants).
+
+These tunables measure meaningfully on ANY platform with the wall-clock
+evaluator — which is how `benchmarks/fig1_autotune.py` reproduces the
+paper's Figure-1 protocol on this CPU host.
+"""
+from __future__ import annotations
+
+import functools
+
+from ..core import ParamSpace, PowerOfTwoParam, tunable
+from . import ssm
+from .attention import chunked_attention
+from ..kernels import ref
+
+
+ATTN_CHUNK_SPACE = ParamSpace(
+    [
+        PowerOfTwoParam("q_chunk", 32, 2048),
+        PowerOfTwoParam("k_chunk", 32, 2048),
+    ]
+)
+
+
+def _attn_ref(q, k, v):
+    return ref.attention(q, k, v, causal=True)
+
+
+def _attn_heuristic(q, k, v):
+    return {"q_chunk": 512, "k_chunk": 1024}  # the framework default
+
+
+@tunable("attn_chunks", space=ATTN_CHUNK_SPACE, reference=_attn_ref,
+         heuristic=_attn_heuristic)
+def attention_chunked(q, k, v, *, q_chunk: int, k_chunk: int):
+    return chunked_attention(q, k, v, causal=True, q_chunk=q_chunk, k_chunk=k_chunk)
+
+
+MAMBA_CHUNK_SPACE = ParamSpace([PowerOfTwoParam("chunk", 4, 512)])
+
+
+def make_mamba_tunable(params):
+    """Binds mamba params (closure) so the tunable signature is (x, *, chunk)."""
+
+    def ref_fn(x):
+        return ssm.mamba_forward(params, x, chunk=x.shape[1])
+
+    @tunable("mamba_chunk", space=MAMBA_CHUNK_SPACE, reference=ref_fn,
+             default={"chunk": 32})
+    def mamba_chunked(x, *, chunk: int):
+        return ssm.mamba_forward(params, x, chunk=chunk)
+
+    return mamba_chunked
+
+
+XENT_CHUNK_SPACE = ParamSpace([PowerOfTwoParam("loss_chunk", 32, 4096)])
+
+
+def make_xent_tunable(lm_head_w):
+    import jax.numpy as jnp
+
+    def ref_fn(x, labels):
+        logits = x.reshape(-1, x.shape[-1]) @ lm_head_w
+        return ref.softmax_xent(logits, labels.reshape(-1)).mean()
+
+    @tunable("xent_chunk", space=XENT_CHUNK_SPACE, reference=ref_fn,
+             default={"loss_chunk": 512})
+    def xent_chunked(x, labels, *, loss_chunk: int):
+        from .lm import _chunked_xent
+
+        mask = jnp.ones(labels.shape, jnp.float32)
+        return _chunked_xent({"w": lm_head_w}, x, labels, mask, loss_chunk)
+
+    return xent_chunked

@@ -1,0 +1,109 @@
+"""AdamW with fp32 master weights + moments, global-norm clipping.
+
+No optax dependency — explicit pytrees so optimizer state inherits the
+parameter shardings verbatim (m/v/master mirror params; that's ZeRO-style
+state sharding for free when params are FSDP-sharded).
+
+Gradient compression hooks (the cross-pod all-reduce cost reducer) live in
+``distributed/collectives.py`` and wrap `update` — see CompressedOptimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    master_fp32: bool = True     # keep fp32 master copy for bf16 params
+
+
+def _schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(cfg.warmup_steps, 1))
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init(cfg: AdamWConfig, params):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zeros32, params),
+        "v": jax.tree_util.tree_map(zeros32, params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params
+        )
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = _schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    new_m = jax.tree_util.tree_map(
+        lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state["m"], grads
+    )
+    new_v = jax.tree_util.tree_map(
+        lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state["v"], grads
+    )
+
+    def step_one(p32, m, v):
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        return p32 - lr * (upd + cfg.weight_decay * p32)
+
+    if cfg.master_fp32 and "master" in state:
+        new_master = jax.tree_util.tree_map(step_one, state["master"], new_m, new_v)
+        new_params = jax.tree_util.tree_map(
+            lambda nm, p: nm.astype(p.dtype), new_master, params
+        )
+        new_state = {"step": step, "m": new_m, "v": new_v, "master": new_master}
+    else:
+        new_params = jax.tree_util.tree_map(
+            lambda p, m, v: step_one(p.astype(jnp.float32), m, v).astype(p.dtype),
+            params, new_m, new_v,
+        )
+        new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_shardings(param_shardings, master_fp32: bool, replicated_sharding):
+    """Optimizer-state shardings mirroring the params tree."""
+    out = {
+        "step": replicated_sharding,
+        "m": param_shardings,
+        "v": param_shardings,
+    }
+    if master_fp32:
+        out["master"] = param_shardings
+    return out

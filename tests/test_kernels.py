@@ -1,0 +1,130 @@
+"""Per-kernel allclose sweeps against the ref.py oracles (interpret mode).
+
+Shapes deliberately include non-divisible sizes (padding paths) and both
+dtypes; hypothesis drives random shape/config combos for matmul.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.attention import flash_attention_pallas
+from repro.kernels.matmul import MATMUL_SPACE, matmul_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.xent import softmax_xent_pallas
+
+
+def _rand(rs, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rs.randn(*shape) * scale, dtype)
+
+
+# ----------------------------------------------------------------- matmul
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (128, 128, 128, 64, 128, 128),
+        (200, 300, 150, 64, 128, 128),   # non-divisible: padding path
+        (8, 512, 128, 8, 128, 256),
+        (256, 128, 512, 128, 256, 128),
+    ],
+)
+def test_matmul_shapes(rs, m, k, n, bm, bn, bk):
+    x, w = _rand(rs, (m, k)), _rand(rs, (k, n))
+    out = matmul_pallas(x, w, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16(rs):
+    x = _rand(rs, (64, 128), jnp.bfloat16)
+    w = _rand(rs, (128, 128), jnp.bfloat16)
+    out = matmul_pallas(x, w, bm=64, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref.matmul(x, w), np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+@given(
+    m=st.integers(1, 130), k=st.integers(1, 140), n=st.integers(1, 130),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=12, deadline=None)
+def test_matmul_property(m, k, n, seed):
+    rs = np.random.RandomState(seed)
+    x, w = _rand(rs, (m, k)), _rand(rs, (k, n))
+    out = matmul_pallas(x, w, bm=64, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_space_vmem_constraint():
+    for cfg in MATMUL_SPACE.enumerate():
+        bm, bn, bk = cfg["bm"], cfg["bn"], cfg["bk"]
+        assert bm * bk * 2 + bk * bn * 2 + bm * bn * 6 <= 64 * 1024 * 1024
+
+
+# ------------------------------------------------------------- attention
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 32])
+def test_flash_attention(rs, causal, window):
+    b, h, kv, s, d = 2, 4, 2, 128, 32
+    q = _rand(rs, (b, h, s, d), scale=0.3)
+    k = _rand(rs, (b, kv, s, d), scale=0.3)
+    v = _rand(rs, (b, kv, s, d))
+    out = flash_attention_pallas(
+        q, k, v, block_q=64, block_k=64, causal=causal, window=window, interpret=True
+    )
+    want = ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(32, 128), (128, 32), (128, 128)])
+def test_flash_attention_blocks(rs, block_q, block_k):
+    """Every valid tile must give identical math (variant equivalence)."""
+    b, h, kv, s, d = 1, 2, 1, 128, 32
+    q = _rand(rs, (b, h, s, d), scale=0.3)
+    k = _rand(rs, (b, kv, s, d), scale=0.3)
+    v = _rand(rs, (b, kv, s, d))
+    out = flash_attention_pallas(
+        q, k, v, block_q=block_q, block_k=block_k, causal=True, interpret=True
+    )
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_decode_shape(rs):
+    b, h, kv, s, d = 2, 4, 4, 64, 16
+    q = _rand(rs, (b, h, 1, d), scale=0.3)
+    k = _rand(rs, (b, kv, s, d), scale=0.3)
+    v = _rand(rs, (b, kv, s, d))
+    out = flash_attention_pallas(q, k, v, block_q=64, block_k=64, causal=True, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("rows,d,br", [(64, 128, 16), (100, 256, 32), (7, 64, 8)])
+def test_rmsnorm(rs, rows, d, br):
+    x, w = _rand(rs, (rows, d)), _rand(rs, (d,))
+    out = rmsnorm_pallas(x, w, block_rows=br, interpret=True)
+    np.testing.assert_allclose(out, ref.rmsnorm(x, w), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ xent
+@pytest.mark.parametrize("rows,v,br,bv", [(64, 512, 16, 128), (70, 1000, 16, 256)])
+def test_xent(rs, rows, v, br, bv):
+    logits = _rand(rs, (rows, v), scale=3.0)
+    labels = jnp.asarray(rs.randint(0, v, rows), jnp.int32)
+    out = softmax_xent_pallas(logits, labels, block_rows=br, block_v=bv, interpret=True)
+    np.testing.assert_allclose(out, ref.softmax_xent(logits, labels), rtol=1e-4, atol=1e-4)
+
+
+@given(rows=st.integers(1, 40), v=st.integers(2, 300), seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_xent_property(rows, v, seed):
+    rs = np.random.RandomState(seed)
+    logits = _rand(rs, (rows, v), scale=2.0)
+    labels = jnp.asarray(rs.randint(0, v, rows), jnp.int32)
+    out = softmax_xent_pallas(logits, labels, block_rows=16, block_v=128, interpret=True)
+    np.testing.assert_allclose(out, ref.softmax_xent(logits, labels), rtol=1e-4, atol=1e-4)

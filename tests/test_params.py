@@ -1,0 +1,103 @@
+"""Unit + property tests for the tunable parameter-space layer."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BoolParam,
+    Constraint,
+    EnumParam,
+    IntParam,
+    ParamSpace,
+    PowerOfTwoParam,
+)
+
+
+def space_small():
+    return ParamSpace(
+        [
+            PowerOfTwoParam("bm", 8, 64),
+            EnumParam("order", ["mn", "nm"]),
+            BoolParam("flag"),
+        ],
+        [Constraint(lambda c: not (c["bm"] == 64 and c["flag"]), "64+flag invalid")],
+    )
+
+
+def test_pow2_domain():
+    p = PowerOfTwoParam("x", 8, 64)
+    assert p.choices == (8, 16, 32, 64)
+    p = PowerOfTwoParam("x", 5, 33)
+    assert p.choices == (8, 16, 32)
+
+
+def test_pow2_bad_range():
+    with pytest.raises(ValueError):
+        PowerOfTwoParam("x", 0, 8)
+    with pytest.raises(ValueError):
+        PowerOfTwoParam("x", 65, 64)
+
+
+def test_duplicate_names_rejected():
+    with pytest.raises(ValueError):
+        ParamSpace([IntParam("a", [1]), IntParam("a", [2])])
+
+
+def test_enumerate_respects_constraints():
+    sp = space_small()
+    cfgs = list(sp.enumerate())
+    assert len(cfgs) == 4 * 2 * 2 - 2  # minus the two 64+flag combos
+    assert all(sp.is_valid(c) for c in cfgs)
+    assert all(not (c["bm"] == 64 and c["flag"]) for c in cfgs)
+
+
+def test_why_invalid():
+    sp = space_small()
+    assert sp.why_invalid({"bm": 64, "order": "mn", "flag": True}) == "64+flag invalid"
+    assert sp.why_invalid({"bm": 3, "order": "mn", "flag": False}) is not None
+    assert sp.why_invalid({"bm": 8, "order": "mn", "flag": False}) is None
+
+
+def test_neighbors_one_step():
+    sp = space_small()
+    cfg = {"bm": 16, "order": "mn", "flag": False}
+    nbrs = sp.neighbors(cfg)
+    assert all(sp.is_valid(n) for n in nbrs)
+    for n in nbrs:
+        diffs = [k for k in cfg if n[k] != cfg[k]]
+        assert len(diffs) == 1
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_sample_always_valid(seed):
+    sp = space_small()
+    cfg = sp.sample(random.Random(seed))
+    assert sp.is_valid(cfg)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_crossover_valid(seed):
+    sp = space_small()
+    rng = random.Random(seed)
+    a, b = sp.sample(rng), sp.sample(rng)
+    child = sp.crossover(a, b, rng)
+    assert sp.is_valid(child)
+    for k in child:
+        assert child[k] in (a[k], b[k])
+
+
+def test_empty_space_raises():
+    sp = ParamSpace(
+        [IntParam("a", [1, 2])], [Constraint(lambda c: False, "nothing valid")]
+    )
+    with pytest.raises(RuntimeError):
+        sp.default()
+
+
+def test_config_key_stable():
+    k1 = ParamSpace.config_key({"b": 2, "a": 1})
+    k2 = ParamSpace.config_key({"a": 1, "b": 2})
+    assert k1 == k2

@@ -1,0 +1,67 @@
+"""Straggler monitor + restart policy + recovery loop."""
+import pytest
+
+from repro.train.resilience import (
+    RestartPolicy,
+    StragglerMonitor,
+    run_with_recovery,
+)
+
+
+def test_straggler_detection():
+    events = []
+    m = StragglerMonitor(threshold_mads=5.0, min_samples=8,
+                         on_straggler=lambda s, t, med: events.append(s))
+    for i in range(20):
+        assert not m.record(i, 1.0 + 0.01 * (i % 3))
+    assert m.record(20, 10.0)       # 10x the median
+    assert events == [20]
+    assert not m.record(21, 1.01)   # recovery not flagged
+
+
+def test_straggler_needs_history():
+    m = StragglerMonitor(min_samples=8)
+    for i in range(7):
+        assert not m.record(i, 100.0 if i == 3 else 1.0)
+
+
+def test_restart_policy_budget():
+    p = RestartPolicy(max_failures=3, backoff_base_s=0.1, backoff_cap_s=1.0)
+    assert p.on_failure() == 0.1
+    assert p.on_failure() == 0.2
+    assert p.on_failure() == 0.4
+    with pytest.raises(RuntimeError, match="budget"):
+        p.on_failure()
+
+
+def test_run_with_recovery_replays_from_checkpoint():
+    state = {"step": 0, "ckpt": 0, "fail_armed": True}
+    executed = []
+
+    def step_fn(step):
+        if state["fail_armed"] and step == 5:
+            state["fail_armed"] = False
+            raise RuntimeError("simulated node failure")
+        executed.append(step)
+        state["step"] = step + 1
+        if (step + 1) % 3 == 0:
+            state["ckpt"] = step + 1
+        return {"loss": 1.0}
+
+    def restore_fn():
+        state["step"] = state["ckpt"]
+        return state["ckpt"]
+
+    run_with_recovery(step_fn, restore_fn, total_steps=8,
+                      policy=RestartPolicy(max_failures=2), sleep=lambda s: None)
+    # failed at 5 -> restored to ckpt 3 -> replayed 3,4,5
+    assert executed == [0, 1, 2, 3, 4, 3, 4, 5, 6, 7]
+
+
+def test_run_with_recovery_gives_up():
+    def step_fn(step):
+        raise RuntimeError("always broken")
+
+    with pytest.raises(RuntimeError, match="budget"):
+        run_with_recovery(step_fn, lambda: 0, total_steps=4,
+                          policy=RestartPolicy(max_failures=2), sleep=lambda s: None)

@@ -1,0 +1,121 @@
+"""Roofline machinery: trip-aware HLO parsing and the analytic FLOP model
+validated against XLA's own counters on an unscanned module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, ShapeSpec, get_config
+from repro.core.evaluate import collective_stats, roofline_from_compiled
+from repro.tools.analytic import analytic_roofline, step_flops, step_hbm_bytes
+
+
+SYNTH_HLO = """
+HloModule m
+
+%inner_body.9 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar2 = f32[64]{0} all-reduce(%y), replica_groups={}
+  ROOT %t2 = tuple()
+}
+
+%inner_cond.9 (p: (s32[], f32[64])) -> pred[] {
+  %c2 = s32[] constant(4)
+  ROOT %cmp2 = pred[] compare(%gte, %c2), direction=LT
+}
+
+%body.1 (p: (s32[], f32[896])) -> (s32[], f32[896]) {
+  %ar = f32[896]{0} all-reduce(%x), replica_groups={}
+  %w2 = (s32[], f32[64]) while(%init2), condition=%inner_cond.9, body=%inner_body.9
+  ROOT %t = tuple()
+}
+
+%cond.1 (p: (s32[], f32[896])) -> pred[] {
+  %c = s32[] constant(24)
+  ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+}
+
+ENTRY %main.2 (a: f32[128,256]) -> f32[128,256] {
+  %ag = f32[128,256]{1,0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[896]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[128,256] add(%a, %a)
+}
+"""
+
+
+def test_trip_aware_collectives_nested():
+    s = collective_stats(SYNTH_HLO)
+    # outer loop 24x: 24 * 896*4 ; nested 24*4 * 64*4 ; entry all-gather once
+    assert s["bytes_by_kind"]["all-reduce"] == 24 * 896 * 4 + 24 * 4 * 64 * 4
+    assert s["bytes_by_kind"]["all-gather"] == 128 * 256 * 4
+    assert s["count"] == 3
+
+
+def test_le_direction_trip_count():
+    hlo = SYNTH_HLO.replace("direction=LT", "direction=LE")
+    s = collective_stats(hlo)
+    assert s["bytes_by_kind"]["all-reduce"] == 25 * 896 * 4 + 25 * 5 * 64 * 4
+
+
+def test_analytic_flops_match_xla_on_unscanned_matmul():
+    """Sanity-anchor the analytic convention (2 flops per MAC) to XLA."""
+    m, k, n = 256, 512, 128
+    fn = jax.jit(lambda a, b: a @ b)
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    compiled = fn.lower(a, b).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    assert abs(ca["flops"] - 2 * m * k * n) / (2 * m * k * n) < 0.05
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "mixtral_8x7b", "jamba_1_5_large"])
+def test_step_flops_vs_6nd(arch):
+    """Train FLOPs must bracket 6·N_active·D: above it (attention/remat), but
+    within a small factor for these dense-ish models."""
+    from repro.models import lm
+
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    fl = step_flops(cfg, shape, remat="none")
+    n_active = lm.active_param_count(cfg)
+    model = 6 * n_active * shape.global_batch * shape.seq_len
+    assert fl["total"] > 0.7 * model
+    assert fl["total"] < 4.0 * model, (fl["total"] / model)
+
+
+def test_decode_memory_dominated_by_weights_and_cache():
+    cfg = get_config("qwen2_0_5b")
+    shape = SHAPES["decode_32k"]
+    hbm = step_hbm_bytes(cfg, shape, chips=256, model_par=16)
+    assert hbm["total"] == pytest.approx(hbm["weights"] + hbm["cache"])
+    assert hbm["weights"] > 0 and hbm["cache"] > 0
+
+
+def test_analytic_roofline_terms_positive():
+    cfg = get_config("minitron_4b")
+    shape = SHAPES["train_4k"]
+    ar = analytic_roofline(
+        cfg, shape, chips=256,
+        collective_bytes_by_kind={"all-reduce": 1e9, "all-gather": 5e8},
+        model_par=16,
+    )
+    assert ar.compute_s > 0 and ar.memory_s > 0 and ar.collective_s > 0
+    assert ar.dominant in ("compute", "memory", "collective")
+    assert 0 < ar.useful_ratio < 1.5
+    assert 0 < ar.roofline_fraction <= 1.0
+
+
+def test_windowed_cache_shrinks_memory():
+    g = get_config("gemma3_27b")
+    shape = SHAPES["decode_32k"]
+    from repro.tools.analytic import _cache_bytes
+
+    with_window = _cache_bytes(g, shape.global_batch, shape.seq_len, 256, 16)
+    import dataclasses
+
+    no_window = _cache_bytes(
+        dataclasses.replace(g, window=0, local_global_ratio=0),
+        shape.global_batch, shape.seq_len, 256, 16,
+    )
+    assert with_window < 0.3 * no_window  # 52/62 layers cache 1k not 32k

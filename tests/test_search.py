@@ -1,0 +1,88 @@
+"""Search algorithms: all must find the optimum of a separable bowl, respect
+budgets, never re-evaluate configs, and prune invalid variants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ALGORITHMS, ParamSpace, PowerOfTwoParam, EnumParam, make_search
+from repro.core.search.base import INVALID, Trial
+
+
+def bowl_space():
+    return ParamSpace(
+        [
+            PowerOfTwoParam("bm", 8, 256),
+            PowerOfTwoParam("bn", 8, 256),
+            EnumParam("order", ["good", "bad"]),
+        ]
+    )
+
+
+def bowl_objective(counter=None):
+    def f(cfg):
+        val = (
+            abs(math.log2(cfg["bm"]) - 5) ** 2
+            + abs(math.log2(cfg["bn"]) - 4) ** 2
+            + (0.0 if cfg["order"] == "good" else 0.7)
+            + 1.0
+        )
+        if counter is not None:
+            counter.append(cfg)
+        return Trial(config=cfg, objective=val, ok=True)
+
+    return f
+
+
+OPTIMUM = {"bm": 32, "bn": 16, "order": "good"}
+
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_finds_optimum(name):
+    s = make_search(name, budget=80, seed=3)
+    res = s.run(bowl_space(), bowl_objective())
+    assert res.best is not None
+    assert res.best_config == OPTIMUM, (name, res.best_config)
+
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_budget_respected(name):
+    calls = []
+    s = make_search(name, budget=13, seed=0)
+    res = s.run(bowl_space(), bowl_objective(calls))
+    assert res.evaluations <= 13
+    assert len(calls) <= 13
+
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_no_duplicate_evaluations(name):
+    calls = []
+    s = make_search(name, budget=60, seed=1)
+    s.run(bowl_space(), bowl_objective(calls))
+    keys = [ParamSpace.config_key(c) for c in calls]
+    assert len(keys) == len(set(keys)), f"{name} re-evaluated configs"
+
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_invalid_variants_pruned(name):
+    """Variants that fail (compile error / correctness) must never win."""
+
+    def f(cfg):
+        if cfg["order"] == "good":  # the 'best' region is broken
+            return Trial(config=cfg, objective=INVALID, ok=False)
+        return Trial(config=cfg, objective=1.0 + cfg["bm"] / 1e4, ok=True)
+
+    s = make_search(name, budget=60, seed=0)
+    res = s.run(bowl_space(), f)
+    assert res.best is not None
+    assert res.best.ok
+    assert res.best_config["order"] == "bad"
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_coordinate_beats_or_matches_random_on_bowl(seed):
+    sp = bowl_space()
+    rnd = make_search("random", budget=24, seed=seed).run(sp, bowl_objective())
+    coord = make_search("coordinate", budget=24, seed=seed).run(sp, bowl_objective())
+    assert coord.best_objective <= rnd.best_objective + 0.71  # within one shelf

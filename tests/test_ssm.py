@@ -1,0 +1,103 @@
+"""SSM mixer invariants: chunked-parallel forms ≡ sequential decode, state
+handoff across prefill→decode, chunk-size invariance (the tunable must not
+change math).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ssm
+
+B, S, D, H = 2, 24, 32, 4
+
+
+def _x(seed=1, s=S):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, s, D)) * 0.5
+
+
+def test_mamba_parallel_equals_sequential(rs):
+    p, _ = ssm.mamba_init(jax.random.PRNGKey(0), D, jnp.float32)
+    x = _x()
+    y_par, st_par = ssm.mamba_forward(p, x, chunk=8, return_state=True)
+    state = {"h": jnp.zeros((B, 2 * D, 16)), "conv": jnp.zeros((B, 3, 2 * D))}
+    ys = []
+    for t in range(S):
+        yt, state = ssm.mamba_decode(p, x[:, t : t + 1], state)
+        ys.append(yt)
+    np.testing.assert_allclose(y_par, jnp.concatenate(ys, 1), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(st_par["h"], state["h"], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(st_par["conv"], state["conv"], rtol=1e-5, atol=1e-6)
+
+
+@given(chunk=st.sampled_from([1, 3, 8, 24, 32]))
+@settings(max_examples=5, deadline=None)
+def test_mamba_chunk_invariance(chunk):
+    """The chunk knob is a pure performance parameter — math must not move."""
+    p, _ = ssm.mamba_init(jax.random.PRNGKey(0), D, jnp.float32)
+    x = _x()
+    base = ssm.mamba_forward(p, x, chunk=S)
+    out = ssm.mamba_forward(p, x, chunk=chunk)
+    np.testing.assert_allclose(out, base, rtol=1e-4, atol=1e-5)
+
+
+def test_mlstm_parallel_equals_sequential():
+    p, _ = ssm.mlstm_init(jax.random.PRNGKey(0), D, H, jnp.float32)
+    x = _x()
+    y_par, st_par = ssm.mlstm_forward(p, x, n_heads=H, chunk=8, return_state=True)
+    hd = 2 * D // H
+    state = {
+        "C": jnp.zeros((B, H, hd, hd)),
+        "n": jnp.zeros((B, H, hd)),
+        "m": jnp.zeros((B, H)),
+    }
+    ys = []
+    for t in range(S):
+        yt, state = ssm.mlstm_decode(p, x[:, t : t + 1], state, n_heads=H)
+        ys.append(yt)
+    np.testing.assert_allclose(y_par, jnp.concatenate(ys, 1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st_par["C"], state["C"], rtol=1e-4, atol=1e-4)
+
+
+@given(chunk=st.sampled_from([2, 6, 12, 24]))
+@settings(max_examples=4, deadline=None)
+def test_mlstm_chunk_invariance(chunk):
+    p, _ = ssm.mlstm_init(jax.random.PRNGKey(0), D, H, jnp.float32)
+    x = _x()
+    base = ssm.mlstm_forward(p, x, n_heads=H, chunk=S)
+    out = ssm.mlstm_forward(p, x, n_heads=H, chunk=chunk)
+    np.testing.assert_allclose(out, base, rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_parallel_equals_sequential():
+    p, _ = ssm.slstm_init(jax.random.PRNGKey(0), D, H, jnp.float32)
+    x = _x()
+    y_par, st_par = ssm.slstm_forward(p, x, n_heads=H, return_state=True)
+    state = {k: jnp.zeros((B, D)) for k in ("c", "n", "h", "m")}
+    ys = []
+    for t in range(S):
+        yt, state = ssm.slstm_decode(p, x[:, t : t + 1], state, n_heads=H)
+        ys.append(yt)
+    np.testing.assert_allclose(y_par, jnp.concatenate(ys, 1), rtol=1e-4, atol=1e-5)
+    for k in state:
+        np.testing.assert_allclose(st_par[k], state[k], rtol=1e-4, atol=1e-5)
+
+
+def test_slstm_unroll_invariance():
+    p, _ = ssm.slstm_init(jax.random.PRNGKey(0), D, H, jnp.float32)
+    x = _x()
+    base = ssm.slstm_forward(p, x, n_heads=H, unroll=1)
+    out = ssm.slstm_forward(p, x, n_heads=H, unroll=4)
+    np.testing.assert_allclose(out, base, rtol=1e-5, atol=1e-6)
+
+
+def test_no_nans_with_extreme_gates():
+    """Exp gating must stay stabilized for large inputs (long sequences)."""
+    p, _ = ssm.mlstm_init(jax.random.PRNGKey(0), D, H, jnp.float32)
+    x = _x() * 20.0
+    out = ssm.mlstm_forward(p, x, n_heads=H, chunk=8)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    p2, _ = ssm.slstm_init(jax.random.PRNGKey(0), D, H, jnp.float32)
+    out2 = ssm.slstm_forward(p2, x, n_heads=H)
+    assert bool(jnp.all(jnp.isfinite(out2)))

@@ -1,0 +1,115 @@
+"""End-to-end tuner tests: the paper's §2 loop on a real (tiny) tunable."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Constraint,
+    EnumParam,
+    ParamSpace,
+    PowerOfTwoParam,
+    Record,
+    TuningDatabase,
+    WallClockEvaluator,
+    autotune,
+    correctness_gate,
+    make_key,
+    shape_bucket,
+    tunable,
+    tune_or_lookup,
+)
+from repro.core.search import ExhaustiveSearch
+
+
+def make_toy_tunable(name="toy_sum"):
+    space = ParamSpace([PowerOfTwoParam("chunk", 8, 64), EnumParam("mode", ["a", "b"])])
+
+    def ref(x):
+        return jnp.sum(x * x)
+
+    @tunable(name, space=space, reference=ref)
+    def toy(x, *, chunk, mode):
+        if mode == "b":  # wrong math: must be pruned by the gate
+            return jnp.sum(x)
+        n = x.shape[0]
+        pad = (-n) % chunk
+        xp = jnp.pad(x, (0, pad))
+        return jnp.sum((xp * xp).reshape(-1, chunk).sum(1))
+
+    return toy
+
+
+def test_autotune_rejects_incorrect_variants(tmp_path):
+    toy = make_toy_tunable("toy1")
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    x = jnp.asarray(np.random.RandomState(0).randn(100), jnp.float32)
+    res = autotune(
+        toy, (x,), search=ExhaustiveSearch(budget=100),
+        evaluator=WallClockEvaluator(repeats=1, warmup=0), db=db,
+    )
+    assert res.best_config["mode"] == "a"  # 'b' variants fail the gate
+    trials_b = [t for t in res.search.trials if t.config["mode"] == "b"]
+    assert trials_b and all(not t.ok for t in trials_b)
+
+
+def test_tune_or_lookup_roundtrip(tmp_path):
+    toy = make_toy_tunable("toy2")
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    x = jnp.asarray(np.random.RandomState(0).randn(64), jnp.float32)
+    res = autotune(
+        toy, (x,), search=ExhaustiveSearch(budget=100),
+        evaluator=WallClockEvaluator(repeats=1, warmup=0), db=db,
+    )
+    # DB hit returns the stored winner without tuning
+    cfg = tune_or_lookup(toy, (x,), db=db, allow_tune=False)
+    assert cfg == res.best_config
+    # same shape bucket (65 -> 128 vs 64) is a different key
+    y = jnp.asarray(np.random.RandomState(0).randn(65), jnp.float32)
+    cfg2 = tune_or_lookup(toy, (y,), db=db, allow_tune=False)
+    assert cfg2 == toy.default_config(y)  # miss -> heuristic default
+
+
+def test_database_persistence_and_better_record_wins(tmp_path):
+    path = str(tmp_path / "db.json")
+    db = TuningDatabase(path)
+    key = make_key("k", "cpu-host", [(64, 64)], "float32")
+    db.put(Record(key, {"a": 1}, 2.0, "wallclock", 5, 0.0))
+    db.put(Record(key, {"a": 2}, 5.0, "wallclock", 5, 1.0))  # worse: ignored
+    db2 = TuningDatabase(path)
+    assert db2.lookup(key).config == {"a": 1}
+    db.put(Record(key, {"a": 3}, 1.0, "wallclock", 5, 2.0))  # better: replaces
+    assert TuningDatabase(path).lookup(key).config == {"a": 3}
+
+
+def test_platform_key_isolation(tmp_path):
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    k_cpu = make_key("k", "cpu-host", [(64,)], "f32")
+    k_tpu = make_key("k", "tpu-v5e", [(64,)], "f32")
+    db.put(Record(k_cpu, {"a": 1}, 1.0, "wallclock", 1, 0.0))
+    assert db.lookup(k_tpu) is None
+    assert db.platforms() == {"cpu-host": 1}
+
+
+def test_shape_bucketing():
+    assert shape_bucket((5,)) == (5,)           # small dims exact
+    assert shape_bucket((100,)) == (128,)
+    assert shape_bucket((128,)) == (128,)
+    assert shape_bucket((129, 1000)) == (256, 1024)
+
+
+def test_correctness_gate():
+    a = jnp.ones((4, 4))
+    assert correctness_gate(a, a + 1e-7)
+    assert not correctness_gate(a, a + 1.0)
+    assert not correctness_gate(a, jnp.ones((4, 5)))
+    assert not correctness_gate(jnp.full((2,), jnp.nan), jnp.ones((2,)))
+
+
+def test_variant_invalid_config_raises():
+    toy = make_toy_tunable("toy3")
+    with pytest.raises(ValueError):
+        toy.variant(chunk=7, mode="a")
