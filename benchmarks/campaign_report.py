@@ -1,0 +1,102 @@
+"""Campaign report: what a finished (or interrupted) campaign bought.
+
+Reads a campaign manifest + tuning database and reports, per kernel:
+  * jobs done/pending/failed and evaluations spent vs allocated;
+  * banked speedups (default heuristic vs tuned winner, from the records);
+  * transfer effectiveness: evaluations of warm-started vs cold jobs;
+  * cover-set compression: distinct winners vs tuned buckets ('a few fit
+    most' — the smaller the cover, the more an unseen shape benefits).
+
+Run after a campaign:
+    PYTHONPATH=src python -m benchmarks.campaign_report \
+        --manifest campaign.json --db tuning.json [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+from repro.campaign.scheduler import CampaignManifest
+from repro.campaign.transfer import cluster_winners
+from repro.core import TuningDatabase, split_key
+
+RESULTS = os.path.join("benchmarks", "results")
+
+
+def kernel_rows(manifest: CampaignManifest, db: TuningDatabase) -> List[Dict]:
+    by_kernel: Dict[str, List] = {}
+    for job in manifest.jobs:
+        by_kernel.setdefault(job.kernel, []).append(job)
+    rows = []
+    for kernel, jobs in sorted(by_kernel.items()):
+        done = [j for j in jobs if j.status == "done"]
+        speedups = [
+            j.default_objective / j.best_objective
+            for j in done if j.best_objective > 0 and j.default_objective > 0
+        ]
+        warm = [j.evaluations for j in done if j.seeded]
+        cold = [j.evaluations for j in done if not j.seeded]
+        recs = [r for r in db.records()
+                if split_key(r.key)[0] == kernel
+                and split_key(r.key)[1] == manifest.platform]
+        cover = cluster_winners(recs) if recs else []
+        rows.append({
+            "kernel": kernel,
+            "jobs": len(jobs),
+            "done": len(done),
+            "failed": sum(1 for j in jobs if j.status == "failed"),
+            "evals_spent": sum(j.evaluations for j in jobs),
+            "evals_allocated": sum(j.budget for j in jobs),
+            "mean_speedup": sum(speedups) / len(speedups) if speedups else 0.0,
+            "max_speedup": max(speedups) if speedups else 0.0,
+            "warm_jobs": len(warm),
+            "mean_evals_warm": sum(warm) / len(warm) if warm else 0.0,
+            "mean_evals_cold": sum(cold) / len(cold) if cold else 0.0,
+            "tuned_buckets": len(recs),
+            "distinct_winners": len({str(sorted(r.config.items())) for r in recs}),
+            "cover_size": len(cover),
+            "cover_share": sum(e["share"] for e in cover),
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--manifest", default="campaign.json")
+    ap.add_argument("--db", default=None)
+    ap.add_argument("--json", default=None, help="also write the report here")
+    args = ap.parse_args()
+
+    manifest = CampaignManifest.load(args.manifest)
+    db = TuningDatabase(
+        args.db or os.environ.get("REPRO_TUNING_DB", ".repro_tuning.json")
+    )
+    rows = kernel_rows(manifest, db)
+    report = {"summary": manifest.summary(), "kernels": rows}
+
+    s = report["summary"]
+    print(f"campaign on {s['platform']}: {s['done']}/{s['jobs']} jobs done, "
+          f"{s['evaluations_spent']}/{s['total_budget']} evals spent, "
+          f"mean speedup {s['mean_speedup']:.2f}x, "
+          f"{s['seeded_jobs']} warm-started")
+    hdr = (f"{'kernel':<16} {'done':>6} {'evals':>7} {'speedup':>8} "
+           f"{'warm-evals':>10} {'cold-evals':>10} {'buckets':>8} {'cover':>6}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['kernel']:<16} {r['done']:>4}/{r['jobs']:<2}"
+              f" {r['evals_spent']:>6} {r['mean_speedup']:>7.2f}x"
+              f" {r['mean_evals_warm']:>10.1f} {r['mean_evals_cold']:>10.1f}"
+              f" {r['tuned_buckets']:>8} {r['cover_size']:>3}/{r['distinct_winners']}")
+
+    if args.json:
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)), exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -50,8 +50,11 @@ def main():
     cfg = get_config("qwen2-0.5b").reduced()
     # a small but real shape so compiles stay ~seconds
     shape = ShapeSpec("mini_train", seq_len=128, global_batch=8, kind="train")
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
     evaluator = CostModelEvaluator(chips=8)
 
     def lower_variant(**knobs):

@@ -1,0 +1,42 @@
+"""Offline tuning-campaign orchestration: plan → schedule → transfer → export.
+
+The paper's deliverable is *generic code + a per-platform tuning database*.
+The core layer already has every primitive — annotated tunables, budgeted
+search strategies, evaluators, the keyed database — but only reactively, one
+kernel at a time inside ``tune_or_lookup``. This subsystem turns those
+primitives into the artifact pipeline:
+
+  plan      derive the concrete tuning jobs (kernel × shape-bucket × dtype)
+            a deployment will actually hit: train-step shapes from the
+            registered ArchConfigs plus the serving engine's (batch,
+            seq-bucket) jit keys                          → campaign.planner
+  schedule  dedup jobs by database key, rank them by the analytic roofline
+            seconds at stake, split a global evaluation budget, persist a
+            resumable manifest                            → campaign.scheduler
+  run       execute jobs best-first, warm-starting each search from the
+            nearest existing record (transfer tuning)     → campaign.runner
+  export    cluster winners into a small 'few fit most' cover set and write
+            the shippable per-platform database           → campaign.runner
+
+CLI: ``python -m repro.campaign {plan,run,status,export}``.
+"""
+from .planner import TuningJob, plan_jobs, plan_serving_jobs, plan_train_jobs
+from .scheduler import CampaignManifest, allocate_budget, dedupe_jobs, prioritize_jobs
+from .transfer import cluster_winners, compute_covers, warm_start_configs
+from .runner import export_campaign_db, run_campaign
+
+__all__ = [
+    "TuningJob",
+    "plan_jobs",
+    "plan_serving_jobs",
+    "plan_train_jobs",
+    "CampaignManifest",
+    "allocate_budget",
+    "dedupe_jobs",
+    "prioritize_jobs",
+    "warm_start_configs",
+    "cluster_winners",
+    "compute_covers",
+    "run_campaign",
+    "export_campaign_db",
+]

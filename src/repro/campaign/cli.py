@@ -1,0 +1,201 @@
+"""``python -m repro.campaign`` — the campaign operator interface.
+
+    plan    derive + schedule jobs, write the resumable manifest
+    run     execute pending jobs best-first (interrupt-safe; rerun resumes)
+    status  show the manifest's progress and banked speedups
+    export  write the shippable per-platform database (records + cover sets)
+
+A CPU smoke campaign end-to-end (the TPU flow is identical minus --reduced):
+
+    python -m repro.campaign plan --reduced --arches qwen2_0_5b,minitron_4b,qwen2_5_3b \
+        --budget 120 --max-tokens 256 --serving 4x64 --out campaign.json
+    python -m repro.campaign run --manifest campaign.json --db tuning.json
+    python -m repro.campaign status --manifest campaign.json
+    python -m repro.campaign export --db tuning.json --out cpu-host.db.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from ..core.database import TuningDatabase
+from ..core.evaluate import WallClockEvaluator
+from ..core.platform import detect_platform
+from . import planner, runner, scheduler
+
+DEFAULT_ARCHES = "qwen2_0_5b,minitron_4b,qwen2_5_3b,gemma3_27b"
+
+
+def _db_path(args) -> str:
+    return args.db or os.environ.get("REPRO_TUNING_DB", ".repro_tuning.json")
+
+
+def _fmt_job(j: planner.TuningJob, platform: str) -> str:
+    shapes = "/".join("x".join(map(str, s)) for s in j.arg_shapes)
+    state = j.status if j.budget or j.status != "pending" else "deferred"
+    return (
+        f"  [{state:>8}] {j.kernel:<16} {shapes:<28} budget={j.budget:<4}"
+        f" prio={j.priority:.3g} × {len(j.scenarios)} scenario(s)"
+    )
+
+
+def cmd_plan(args) -> int:
+    arches = [a for a in args.arches.split(",") if a]
+    train_shapes = [s for s in args.train_shapes.split(",") if s]
+    kernels = tuple(k for k in args.kernels.split(",") if k)
+    serving = None
+    if args.serving:
+        try:
+            b, s = args.serving.lower().split("x")
+            serving = (int(b), int(s))
+        except ValueError:
+            raise SystemExit(
+                f"error: --serving expects MAXBATCHxMAXSEQ (e.g. 8x256), "
+                f"got {args.serving!r}"
+            )
+    jobs = planner.plan_jobs(
+        arches,
+        train_shapes=train_shapes,
+        serving=serving,
+        kernels=kernels,
+        reduced=args.reduced,
+        max_tokens=args.max_tokens,
+        max_seq=args.max_seq,
+    )
+    profile = detect_platform()
+    scen_sec = scheduler.analytic_scenario_seconds(
+        arches, train_shapes, reduced=args.reduced, profile=profile
+    )
+    manifest = scheduler.build_manifest(
+        jobs, args.budget, path=args.out, profile=profile,
+        min_budget=args.min_budget, max_budget=args.max_budget,
+        scenario_seconds=scen_sec,
+    )
+    print(f"planned {len(jobs)} jobs -> {len(manifest.jobs)} unique keys "
+          f"on {manifest.platform} (budget {args.budget} evals) -> {args.out}")
+    for j in manifest.jobs:
+        print(_fmt_job(j, manifest.platform))
+    return 0
+
+
+def cmd_run(args) -> int:
+    manifest = scheduler.CampaignManifest.load(args.manifest)
+    if args.budget is not None:
+        # re-split the new global budget across still-pending jobs
+        pending = [j for j in manifest.jobs if j.status == "pending"]
+        scheduler.allocate_budget(
+            pending, args.budget, min_budget=args.min_budget,
+            max_budget=args.max_budget,
+        )
+        manifest.total_budget = args.budget
+        manifest.save()
+    db = TuningDatabase(_db_path(args))
+    summary = runner.run_campaign(
+        manifest, db,
+        evaluator=WallClockEvaluator(repeats=args.repeats, warmup=1),
+        max_jobs=args.max_jobs,
+        warm_start=not args.no_warm_start,
+    )
+    print(json.dumps(summary, indent=1, sort_keys=True))
+    return 0
+
+
+def cmd_status(args) -> int:
+    manifest = scheduler.CampaignManifest.load(args.manifest)
+    print(json.dumps(manifest.summary(), indent=1, sort_keys=True))
+    for j in manifest.jobs:
+        line = _fmt_job(j, manifest.platform)
+        if j.status == "done" and j.best_objective > 0:
+            speed = (j.default_objective / j.best_objective
+                     if j.default_objective > 0 else 0.0)
+            line += f"  {speed:.2f}x in {j.evaluations} evals"
+            if j.seeded:
+                line += " (warm)"
+        elif j.status == "failed":
+            line += f"  ERROR {j.error[:60]}"
+        print(line)
+    return 0
+
+
+def cmd_export(args) -> int:
+    db = TuningDatabase(_db_path(args))
+    platform = args.platform or detect_platform().name
+    out = runner.export_campaign_db(
+        db, args.out, platform, cover_max_size=args.cover_size
+    )
+    covers = {k: len(v) for k, v in out.covers().items()}
+    print(f"exported {len(out)} records + {sum(covers.values())} cover "
+          f"entries for {platform} -> {args.out}")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.campaign",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    pp = sub.add_parser("plan", help="derive + schedule jobs, write the manifest")
+    pp.add_argument("--out", default="campaign.json", help="manifest path")
+    pp.add_argument("--db", default=None, help="tuning database path")
+    pp.add_argument("--arches", default=DEFAULT_ARCHES,
+                    help="comma-separated arch config names")
+    pp.add_argument("--train-shapes", default="train_4k",
+                    help="comma-separated ShapeSpec names")
+    pp.add_argument("--serving", default="8x256",
+                    help="serving buckets as MAXBATCHxMAXSEQ ('' to skip)")
+    pp.add_argument("--kernels", default=",".join(planner.DEFAULT_KERNELS))
+    pp.add_argument("--reduced", action="store_true",
+                    help="plan against the reduced smoke configs (CPU campaigns)")
+    pp.add_argument("--budget", type=int, default=256,
+                    help="global evaluation budget across all jobs")
+    pp.add_argument("--min-budget", type=int, default=6)
+    pp.add_argument("--max-budget", type=int, default=128)
+    pp.add_argument("--max-tokens", type=int, default=4096,
+                    help="cap on materialized leading (token) dims")
+    pp.add_argument("--max-seq", type=int, default=4096,
+                    help="cap on materialized attention sequence length")
+    pp.set_defaults(fn=cmd_plan)
+
+    pr = sub.add_parser("run", help="execute pending jobs (resumable)")
+    pr.add_argument("--manifest", default="campaign.json")
+    pr.add_argument("--db", default=None)
+    pr.add_argument("--budget", type=int, default=None,
+                    help="re-allocate this global budget over pending jobs")
+    pr.add_argument("--min-budget", type=int, default=6)
+    pr.add_argument("--max-budget", type=int, default=128)
+    pr.add_argument("--max-jobs", type=int, default=None,
+                    help="run at most N jobs this invocation")
+    pr.add_argument("--repeats", type=int, default=3,
+                    help="wall-clock evaluator repeats")
+    pr.add_argument("--no-warm-start", action="store_true",
+                    help="disable transfer seeding (cold-search control)")
+    pr.set_defaults(fn=cmd_run)
+
+    ps = sub.add_parser("status", help="show campaign progress")
+    ps.add_argument("--manifest", default="campaign.json")
+    ps.set_defaults(fn=cmd_status)
+
+    pe = sub.add_parser("export", help="write the per-platform database artifact")
+    pe.add_argument("--db", default=None)
+    pe.add_argument("--out", default="platform.db.json")
+    pe.add_argument("--platform", default=None,
+                    help="platform key (default: detected)")
+    pe.add_argument("--cover-size", type=int, default=4,
+                    help="max cover-set entries per kernel")
+    pe.set_defaults(fn=cmd_export)
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,263 @@
+"""Workload planner: real scenarios → concrete tuning jobs.
+
+A tuning job is (kernel × argument shapes × dtype × key_extra) — exactly the
+granularity of one database record. Jobs come from two scenario families:
+
+* **train/prefill cells**: for each registered :class:`ArchConfig` and each
+  requested :class:`ShapeSpec`, every kernel call site the model step makes
+  (qkv/o projections, FFN matmuls, RMSNorm rows, the fused loss, causal
+  attention) becomes one job, weighted by how many times the site executes
+  per step (layer counts from ``cfg.segments()``).
+* **serving buckets**: the :class:`~repro.serving.engine.ServingEngine` jits
+  one prefill/decode pair per (batch, seq-bucket); the planner enumerates
+  those buckets — powers of two up to (max_batch, max_seq), mirroring
+  ``database.shape_bucket`` — so a deployment can pre-tune exactly the
+  buckets it will serve (``ServingEngine.warmup`` calls back into this).
+
+The planner never evaluates anything: output is a deterministic, sorted job
+list; dedup/priorities/budget are the scheduler's concern. Leading (token)
+dims are capped by ``max_tokens`` so a campaign on a small host stays
+materializable — shape bucketing makes the records equally valid for the
+full-size step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..configs.base import SHAPES, ArchConfig, ShapeSpec, get_config
+from ..core.database import make_key, shape_bucket
+
+# Kernels a campaign tunes by default. `attn_chunks` is the model-level
+# chunked-attention tunable (meaningful on any platform); the other four are
+# the Pallas kernel sites behind kernels/ops.py dispatch.
+DEFAULT_KERNELS = (
+    "matmul",
+    "rmsnorm",
+    "flash_attention",
+    "softmax_xent",
+    "attn_chunks",
+)
+
+
+def _register_tunables() -> None:
+    """Import the modules whose @tunable decorators populate the registry."""
+    from .. import kernels  # noqa: F401  (matmul, rmsnorm, flash_attention, softmax_xent)
+    from ..models import tunables  # noqa: F401  (attn_chunks)
+
+
+@dataclasses.dataclass
+class TuningJob:
+    """One schedulable unit of tuning work + its manifest execution state."""
+
+    kernel: str                                   # tunable registry name
+    arg_shapes: Tuple[Tuple[int, ...], ...]       # concrete arrays to materialize
+    arg_dtypes: Tuple[str, ...]                   # one dtype per arg
+    key_extra: str = ""                           # e.g. flash attention's "cTruew0"
+    scenarios: Tuple[str, ...] = ()               # provenance, e.g. "qwen2_0_5b/train_4k"
+    weight: float = 1.0                           # executions of this site per step
+    # scheduler-assigned
+    priority: float = 0.0                         # analytic seconds at stake per step
+    budget: int = 0                               # allocated search evaluations
+    # runner-updated (persisted in the manifest → resumability)
+    status: str = "pending"                       # pending | done | failed
+    evaluations: int = 0
+    best_objective: float = 0.0
+    default_objective: float = 0.0
+    seeded: bool = False                          # warm-started from a transfer seed
+    error: str = ""
+
+    def db_key(self, platform: str) -> str:
+        # Must mirror tuner._args_key: all arg shapes, dtype of the last arg.
+        return make_key(
+            self.kernel, platform, self.arg_shapes, self.arg_dtypes[-1], self.key_extra
+        )
+
+    def bucketed_shapes(self) -> Tuple[Tuple[int, ...], ...]:
+        return tuple(shape_bucket(s) for s in self.arg_shapes)
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "TuningJob":
+        d = dict(d)
+        d["arg_shapes"] = tuple(tuple(int(x) for x in s) for s in d["arg_shapes"])
+        d["arg_dtypes"] = tuple(d["arg_dtypes"])
+        d["scenarios"] = tuple(d.get("scenarios", ()))
+        return TuningJob(**d)
+
+
+def _site_counts(cfg: ArchConfig) -> Dict[str, float]:
+    """Per-step execution counts of each kernel site family."""
+    n_attn = n_dense_ffn = n_norm = 0.0
+    for seg in cfg.segments():
+        for spec in seg.pattern:
+            if spec.mixer == "attn":
+                n_attn += seg.repeats
+            if spec.ffn in ("dense", "moe+dense"):
+                n_dense_ffn += seg.repeats
+            n_norm += 2 * seg.repeats            # pre-mixer + pre-ffn norms
+    return {"attn": n_attn, "ffn": n_dense_ffn, "norm": n_norm}
+
+
+def plan_train_jobs(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    kernels: Sequence[str] = DEFAULT_KERNELS,
+    max_tokens: int = 4096,
+    max_seq: int = 4096,
+) -> List[TuningJob]:
+    """Kernel jobs for one (arch × train/prefill shape) cell."""
+    _register_tunables()
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    f = str(cfg.jdtype)
+    scen = f"{cfg.name}/{shape.name}"
+    B, S = shape.global_batch, shape.seq_len
+    T = max(1, min(max_tokens, B * S))
+    counts = _site_counts(cfg)
+    jobs: List[TuningJob] = []
+
+    def add(kernel, shapes, dtypes, weight, extra=""):
+        if kernel in kernels and weight > 0:
+            jobs.append(TuningJob(
+                kernel=kernel,
+                arg_shapes=tuple(tuple(int(x) for x in s) for s in shapes),
+                arg_dtypes=tuple(dtypes),
+                key_extra=extra,
+                scenarios=(scen,),
+                weight=float(weight),
+            ))
+
+    # Projections and FFN gemms: x[T, d] @ w[d, n].
+    add("matmul", [(T, d), (d, H * hd)], [f, f], counts["attn"])
+    if cfg.d_ff > 0:
+        add("matmul", [(T, d), (d, cfg.d_ff)], [f, f], counts["ffn"])
+    add("rmsnorm", [(T, d), (d,)], [f, f], counts["norm"])
+    if shape.kind == "train":
+        add("softmax_xent", [(T, cfg.vocab_size), (T,)], [f, "int32"], 1.0)
+
+    # Causal attention over the (capped) sequence; batch fills max_tokens.
+    s_att = max(1, min(S, max_seq))
+    b_att = max(1, min(B, max_tokens // s_att))
+    q = (b_att, H, s_att, hd)
+    kv = (b_att, KV, s_att, hd)
+    # dispatch key_extra must match ops.flash_attention's f"c{causal}w{window}"
+    add("flash_attention", [q, kv, kv], [f, f, f], counts["attn"], extra="cTruew0")
+    add("attn_chunks", [q, kv, kv], [f, f, f], counts["attn"])
+    return jobs
+
+
+def serving_buckets(max_batch: int, max_seq: int, min_seq: int = 16) -> List[Tuple[int, int]]:
+    """The (batch, seq-bucket) jit keys a ServingEngine can hit.
+
+    Batches: powers of two up to max_batch (plus max_batch itself — the
+    engine packs up to exactly that many requests). Seqs: the power-of-two
+    buckets ``database.shape_bucket`` maps padded lengths to, up to the
+    cache capacity.
+    """
+    batches: List[int] = []
+    b = 1
+    while b < max_batch:
+        batches.append(b)
+        b <<= 1
+    batches.append(max_batch)
+    seqs: List[int] = []
+    s = min_seq
+    while s < max_seq:
+        seqs.append(s)
+        s <<= 1
+    seqs.append(shape_bucket((max_seq,))[0])
+    return sorted({(b, s) for b in batches for s in seqs})
+
+
+def plan_serving_jobs(
+    cfg: ArchConfig,
+    max_batch: int = 8,
+    max_seq: int = 256,
+    kernels: Sequence[str] = DEFAULT_KERNELS,
+    max_tokens: int = 4096,
+) -> List[TuningJob]:
+    """Kernel jobs for every (batch, seq-bucket) a ServingEngine will jit.
+
+    Prefill hits the token-parallel sites at (b·s) rows and causal attention
+    at [b, H, s, hd]; decode hits the same gemms/norms at b rows per step and
+    runs ~s times per request — hence the seq-length weight on decode jobs.
+    """
+    if cfg.frontend is not None:
+        return []                     # the toy engine serves token-in archs only
+    _register_tunables()
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    f = str(cfg.jdtype)
+    counts = _site_counts(cfg)
+    jobs: List[TuningJob] = []
+
+    def add(kernel, shapes, dtypes, weight, scen, extra=""):
+        if kernel in kernels and weight > 0:
+            jobs.append(TuningJob(
+                kernel=kernel,
+                arg_shapes=tuple(tuple(int(x) for x in s) for s in shapes),
+                arg_dtypes=tuple(dtypes),
+                key_extra=extra,
+                scenarios=(scen,),
+                weight=float(weight),
+            ))
+
+    for b, s in serving_buckets(max_batch, max_seq):
+        if b * s > max_tokens:
+            continue
+        scen_p = f"{cfg.name}/serve_prefill_b{b}s{s}"
+        scen_d = f"{cfg.name}/serve_decode_b{b}s{s}"
+        rows = b * s
+        add("matmul", [(rows, d), (d, H * hd)], [f, f], counts["attn"], scen_p)
+        if cfg.d_ff > 0:
+            add("matmul", [(rows, d), (d, cfg.d_ff)], [f, f], counts["ffn"], scen_p)
+        add("rmsnorm", [(rows, d), (d,)], [f, f], counts["norm"], scen_p)
+        q = (b, H, s, hd)
+        kv = (b, KV, s, hd)
+        add("flash_attention", [q, kv, kv], [f, f, f], counts["attn"], scen_p,
+            extra="cTruew0")
+        add("attn_chunks", [q, kv, kv], [f, f, f], counts["attn"], scen_p)
+        # decode: b-row gemms/norms, executed once per generated token
+        add("matmul", [(b, d), (d, H * hd)], [f, f], counts["attn"] * s, scen_d)
+        if cfg.d_ff > 0:
+            add("matmul", [(b, d), (d, cfg.d_ff)], [f, f], counts["ffn"] * s, scen_d)
+        add("rmsnorm", [(b, d), (d,)], [f, f], counts["norm"] * s, scen_d)
+    return jobs
+
+
+def plan_jobs(
+    arch_names: Sequence[str],
+    train_shapes: Sequence[str] = ("train_4k",),
+    serving: Optional[Tuple[int, int]] = (8, 256),
+    kernels: Sequence[str] = DEFAULT_KERNELS,
+    reduced: bool = False,
+    max_tokens: int = 4096,
+    max_seq: int = 4096,
+) -> List[TuningJob]:
+    """The full campaign workload, deterministically ordered.
+
+    `reduced=True` plans against the family-preserving smoke configs — the
+    CPU-runnable campaign used by tests/examples; a TPU campaign plans the
+    real dims. `serving=(max_batch, max_seq)` adds the engine buckets for
+    every servable (token-in/token-out) arch; None skips them.
+    """
+    _register_tunables()
+    jobs: List[TuningJob] = []
+    for name in arch_names:
+        cfg = get_config(name)
+        if reduced:
+            cfg = cfg.reduced()
+        for shape_name in train_shapes:
+            shape = SHAPES[shape_name]
+            jobs.extend(plan_train_jobs(
+                cfg, shape, kernels=kernels, max_tokens=max_tokens, max_seq=max_seq
+            ))
+        if serving is not None:
+            jobs.extend(plan_serving_jobs(
+                cfg, serving[0], serving[1], kernels=kernels, max_tokens=max_tokens
+            ))
+    jobs.sort(key=lambda j: (j.kernel, j.arg_shapes, j.key_extra, j.scenarios))
+    return jobs

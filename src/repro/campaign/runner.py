@@ -1,0 +1,127 @@
+"""Campaign runner: execute the manifest best-first, bank results, export.
+
+Each job materializes representative arguments (seeded, so a re-run measures
+the same tensors), pulls warm-start seeds from the transfer layer, runs the
+budgeted search through :func:`repro.core.tuner.autotune` (which writes the
+database record), and persists the manifest after *every* job — kill the
+process at any point and the next `campaign run` resumes at the first
+pending job.
+
+Export clusters the platform's winners into cover sets (transfer layer) and
+writes the shippable single-platform database — the artifact a deployment
+pairs with the generic code for zero-tuning serve-time specialization.
+"""
+from __future__ import annotations
+
+import logging
+import zlib
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from ..core.annotate import get_tunable
+from ..core.database import TuningDatabase
+from ..core.evaluate import Evaluator, WallClockEvaluator
+from ..core.search import CoordinateDescent, SearchAlgorithm
+from ..core.tuner import autotune
+from .planner import TuningJob, _register_tunables
+from .scheduler import CampaignManifest
+from .transfer import compute_covers, warm_start_configs
+
+log = logging.getLogger("repro.campaign")
+
+
+def materialize_args(job: TuningJob, seed: int = 0):
+    """Seeded representative tensors for one job.
+
+    Float args are unit-scale gaussians (what the correctness gates and the
+    paper's own measurements use); integer args are labels/ids drawn against
+    the first arg's trailing dim (the vocab for softmax_xent).
+    """
+    import jax.numpy as jnp
+
+    # crc32, not hash(): str hashes are salted per process and the tensors
+    # must be identical across resumed runs.
+    rs = np.random.RandomState(seed ^ (zlib.crc32(job.kernel.encode()) & 0xFFFF))
+    args = []
+    hi = max(2, int(job.arg_shapes[0][-1]))       # vocab bound for label args
+    for shape, dtype in zip(job.arg_shapes, job.arg_dtypes):
+        if dtype.startswith("int") or dtype.startswith("uint"):
+            args.append(jnp.asarray(rs.randint(0, hi, size=shape), jnp.int32))
+        else:
+            scale = 0.3 if job.kernel in ("flash_attention", "attn_chunks") else 1.0
+            args.append(jnp.asarray(rs.randn(*shape) * scale, jnp.dtype(dtype)))
+    return tuple(args)
+
+
+def run_campaign(
+    manifest: CampaignManifest,
+    db: TuningDatabase,
+    evaluator: Optional[Evaluator] = None,
+    search_factory: Optional[Callable[[TuningJob], SearchAlgorithm]] = None,
+    max_jobs: Optional[int] = None,
+    warm_start: bool = True,
+    arg_seed: int = 0,
+) -> Dict:
+    """Execute pending jobs best-first; returns the updated summary.
+
+    `max_jobs` bounds this invocation (the rest stays pending — that is the
+    resumability story, and also how tests exercise interrupt/resume).
+    `search_factory` lets callers swap the per-job strategy; the default is
+    coordinate descent at the job's allocated budget, the workhorse for tile
+    spaces.
+    """
+    _register_tunables()
+    evaluator = evaluator or WallClockEvaluator(repeats=3, warmup=1)
+    ran = 0
+    for job in manifest.pending():
+        if max_jobs is not None and ran >= max_jobs:
+            break
+        ran += 1
+        tunable = get_tunable(job.kernel)
+        seeds = []
+        if warm_start:
+            seeds = warm_start_configs(
+                db, job.kernel, manifest.platform, job.arg_shapes,
+                job.arg_dtypes[-1], job.key_extra, space=tunable.space,
+            )
+        search = (
+            search_factory(job) if search_factory
+            else CoordinateDescent(budget=job.budget, restarts=2)
+        )
+        try:
+            args = materialize_args(job, seed=arg_seed)
+            res = autotune(
+                tunable, args,
+                search=search, evaluator=evaluator, db=db,
+                key_extra=job.key_extra, seed_configs=seeds,
+            )
+            job.status = "done"
+            job.evaluations = res.evaluations
+            job.best_objective = res.best_objective
+            job.default_objective = res.default_objective
+            job.seeded = bool(seeds)
+            job.error = ""
+            log.info(
+                "job %s %s: %.3g -> %.3g (%d evals%s)",
+                job.kernel, job.arg_shapes, res.default_objective,
+                res.best_objective, res.evaluations,
+                ", seeded" if seeds else "",
+            )
+        except Exception as e:  # a failed job must not sink the campaign
+            job.status = "failed"
+            job.error = f"{type(e).__name__}: {e}"
+            log.warning("job %s %s failed: %s", job.kernel, job.arg_shapes, job.error)
+        manifest.save()                      # resume point after every job
+    return manifest.summary()
+
+
+def export_campaign_db(
+    db: TuningDatabase,
+    out_path: str,
+    platform: str,
+    cover_max_size: int = 4,
+) -> TuningDatabase:
+    """Cluster winners into cover sets, then write the per-platform artifact."""
+    compute_covers(db, platform, max_size=cover_max_size, save=bool(db.path))
+    return db.export(out_path, platform=platform)

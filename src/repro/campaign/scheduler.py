@@ -1,0 +1,282 @@
+"""Campaign scheduler: dedup → prioritize → budget → resumable manifest.
+
+Evaluation budget is the scarce resource (each evaluation is a compile+run),
+so the scheduler spends it where the analytic model says time actually goes:
+
+* **dedup** — shape bucketing means many scenarios land on the same database
+  key (the 0.5B FFN gemm at train and the 27B serving prefill can share a
+  bucket); tuning it twice is pure waste. Duplicate jobs merge, their
+  per-step weights add, provenance is unioned.
+* **priority** — per job, a first-principles roofline time (max of FLOP time
+  and HBM time on the detected platform profile, the same model
+  ``tools/analytic.py`` builds its step estimates from) × how often the site
+  runs per step = seconds-at-stake. Jobs are tuned best-first so an
+  interrupted campaign has already banked the biggest wins.
+* **budget** — a global evaluation budget splits across jobs proportionally
+  to priority (with a floor, so tail jobs still get a usable search).
+* **manifest** — the whole schedule plus per-job execution state persists as
+  JSON after every job; rerunning `campaign run` picks up exactly where the
+  interrupt hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Sequence
+
+from ..core.database import atomic_write_json
+from ..core.platform import HardwareProfile, detect_platform
+from .planner import TuningJob
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4, "int64": 8}
+
+
+def _bytes_of(dtype: str) -> int:
+    return _DTYPE_BYTES.get(dtype, 4)
+
+
+def job_roofline_seconds(job: TuningJob, profile: HardwareProfile) -> float:
+    """max(FLOP time, HBM time) of one execution of the job's kernel site.
+
+    Same modelling discipline as tools/analytic.py (multiply-add = 2 FLOPs,
+    explicit per-site byte counts), specialized to the four kernel families.
+    """
+    sh = job.arg_shapes
+    dt = _bytes_of(job.arg_dtypes[0])
+    if job.kernel == "matmul" and len(sh) >= 2 and len(sh[0]) == 2:
+        m, k = sh[0]
+        n = sh[1][1]
+        flops = 2.0 * m * k * n
+        mem = (m * k + k * n + m * n) * dt
+    elif job.kernel == "rmsnorm":
+        rows, d = sh[0]
+        flops = 4.0 * rows * d                       # square, mean, rsqrt-mul, scale
+        mem = 2.0 * rows * d * dt                    # one read + one write
+    elif job.kernel == "softmax_xent":
+        rows, vocab = sh[0]
+        flops = 6.0 * rows * vocab                   # max/exp/sum + label gather
+        mem = rows * vocab * dt                      # single streamed read
+    elif job.kernel in ("flash_attention", "attn_chunks"):
+        b, h, s, hd = sh[0]
+        flops = 2.0 * 2.0 * b * h * s * (s / 2.0) * hd   # qk^T + p@v, causal half
+        mem = (sum(_prod(x) for x in sh) + _prod(sh[0])) * dt  # q,k,v read + o write
+    else:
+        elems = sum(_prod(s) for s in sh)
+        flops = 2.0 * elems
+        mem = elems * dt * 2
+    return max(flops / profile.peak_flops_bf16, mem / profile.hbm_bandwidth)
+
+
+def _prod(seq) -> float:
+    out = 1.0
+    for x in seq:
+        out *= x
+    return out
+
+
+def dedupe_jobs(jobs: Sequence[TuningJob], platform: str) -> List[TuningJob]:
+    """Merge jobs that share a database key; weights add, scenarios union."""
+    merged: Dict[str, TuningJob] = {}
+    for job in jobs:
+        key = job.db_key(platform)
+        prev = merged.get(key)
+        if prev is None:
+            merged[key] = dataclasses.replace(job)
+        else:
+            prev.weight += job.weight
+            prev.scenarios = tuple(sorted(set(prev.scenarios) | set(job.scenarios)))
+    return sorted(
+        merged.values(), key=lambda j: (j.kernel, j.arg_shapes, j.key_extra)
+    )
+
+
+def analytic_scenario_seconds(
+    arch_names: Sequence[str],
+    train_shapes: Sequence[str] = ("train_4k",),
+    reduced: bool = False,
+    profile: Optional[HardwareProfile] = None,
+    chips: int = 1,
+) -> Dict[str, float]:
+    """Analytic step seconds per train scenario (tools/analytic.py reuse).
+
+    This is the cross-arch weighting: a kernel job from an arch whose step
+    costs 10× more wall-time deserves proportionally more tuning budget, even
+    when the per-site shapes look alike.
+    """
+    from ..configs.base import SHAPES, get_config
+    from ..tools import analytic
+
+    profile = profile or detect_platform()
+    out: Dict[str, float] = {}
+    for name in arch_names:
+        cfg = get_config(name)
+        if reduced:
+            cfg = cfg.reduced()
+        for shape_name in train_shapes:
+            shape = SHAPES[shape_name]
+            fl = analytic.step_flops(cfg, shape)
+            hbm = analytic.step_hbm_bytes(cfg, shape, chips=chips, model_par=1)
+            out[f"{cfg.name}/{shape.name}"] = max(
+                fl["total"] / chips / profile.peak_flops_bf16,
+                hbm["total"] / profile.hbm_bandwidth,
+            )
+    return out
+
+
+def prioritize_jobs(
+    jobs: Sequence[TuningJob],
+    profile: Optional[HardwareProfile] = None,
+    scenario_seconds: Optional[Dict[str, float]] = None,
+) -> List[TuningJob]:
+    """Rank by seconds-at-stake: per-site roofline time × per-step weight.
+
+    With `scenario_seconds` (see :func:`analytic_scenario_seconds`), each
+    job's stake is additionally scaled by the share of total analytic step
+    time its scenarios account for, so budget flows toward the archs where
+    wall-time actually goes.
+    """
+    profile = profile or detect_platform()
+    total_scen = sum(scenario_seconds.values()) if scenario_seconds else 0.0
+    out = []
+    for job in jobs:
+        j = dataclasses.replace(job)
+        j.priority = job_roofline_seconds(j, profile) * max(j.weight, 1e-9)
+        if scenario_seconds and total_scen > 0:
+            known = [scenario_seconds[s] for s in j.scenarios if s in scenario_seconds]
+            if known:
+                j.priority *= sum(known) / total_scen * len(scenario_seconds)
+        out.append(j)
+    out.sort(key=lambda j: (-j.priority, j.kernel, j.arg_shapes, j.key_extra))
+    return out
+
+
+def allocate_budget(
+    jobs: Sequence[TuningJob],
+    total_budget: int,
+    min_budget: int = 6,
+    max_budget: int = 128,
+) -> List[TuningJob]:
+    """Split a global evaluation budget across jobs proportionally to priority.
+
+    Every funded job gets at least `min_budget` evaluations (a search below
+    that cannot even sweep one knob); if the total cannot fund all jobs at
+    the floor, the lowest-priority tail is deferred (budget 0, skipped by the
+    runner but kept in the manifest so a bigger budget can revive them).
+    """
+    jobs = list(jobs)
+    n_funded = max(0, min(len(jobs), total_budget // min_budget))
+    funded, deferred = jobs[:n_funded], jobs[n_funded:]
+    total_pri = sum(j.priority for j in funded) or 1.0
+    remaining = total_budget - min_budget * len(funded)
+    for j in funded:
+        extra = int(remaining * (j.priority / total_pri))
+        j.budget = min(max_budget, min_budget + extra)
+    # Redistribute what the max_budget clamp (and int truncation) stranded:
+    # fill best-first so the requested global budget is actually spent.
+    leftover = total_budget - sum(j.budget for j in funded)
+    for j in funded:
+        if leftover <= 0:
+            break
+        add = min(max_budget - j.budget, leftover)
+        j.budget += add
+        leftover -= add
+    for j in deferred:
+        j.budget = 0
+    return funded + deferred
+
+
+@dataclasses.dataclass
+class CampaignManifest:
+    """The persisted campaign: schedule + execution state, atomic on disk."""
+
+    path: Optional[str]
+    platform: str
+    jobs: List[TuningJob]
+    created: float = dataclasses.field(default_factory=time.time)
+    total_budget: int = 0
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        blob = {
+            "version": 1,
+            "platform": self.platform,
+            "created": self.created,
+            "total_budget": self.total_budget,
+            "meta": self.meta,
+            "jobs": [j.to_json() for j in self.jobs],
+        }
+        atomic_write_json(self.path, blob)
+
+    @staticmethod
+    def load(path: str) -> "CampaignManifest":
+        with open(path) as f:
+            blob = json.load(f)
+        return CampaignManifest(
+            path=path,
+            platform=blob["platform"],
+            jobs=[TuningJob.from_json(j) for j in blob["jobs"]],
+            created=blob.get("created", 0.0),
+            total_budget=blob.get("total_budget", 0),
+            meta=blob.get("meta", {}),
+        )
+
+    # -- queries --------------------------------------------------------------
+    def pending(self) -> List[TuningJob]:
+        """Runnable jobs, best-first (priority already baked into order)."""
+        out = [j for j in self.jobs if j.status == "pending" and j.budget > 0]
+        out.sort(key=lambda j: -j.priority)
+        return out
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {"pending": 0, "done": 0, "failed": 0, "deferred": 0}
+        for j in self.jobs:
+            if j.status == "pending" and j.budget == 0:
+                out["deferred"] += 1
+            else:
+                out[j.status] = out.get(j.status, 0) + 1
+        return out
+
+    def summary(self) -> Dict:
+        done = [j for j in self.jobs if j.status == "done"]
+        spent = sum(j.evaluations for j in self.jobs)
+        speedups = [
+            j.default_objective / j.best_objective
+            for j in done
+            if j.best_objective > 0 and j.default_objective > 0
+        ]
+        return {
+            "platform": self.platform,
+            "jobs": len(self.jobs),
+            **self.counts(),
+            "evaluations_spent": spent,
+            "total_budget": self.total_budget,
+            "mean_speedup": (sum(speedups) / len(speedups)) if speedups else 0.0,
+            "seeded_jobs": sum(1 for j in done if j.seeded),
+        }
+
+
+def build_manifest(
+    jobs: Sequence[TuningJob],
+    total_budget: int,
+    path: Optional[str] = None,
+    platform: Optional[str] = None,
+    profile: Optional[HardwareProfile] = None,
+    min_budget: int = 6,
+    max_budget: int = 128,
+    scenario_seconds: Optional[Dict[str, float]] = None,
+) -> CampaignManifest:
+    """plan output → deduped, prioritized, budgeted, persisted schedule."""
+    profile = profile or detect_platform()
+    platform = platform or profile.name
+    scheduled = allocate_budget(
+        prioritize_jobs(dedupe_jobs(jobs, platform), profile, scenario_seconds),
+        total_budget, min_budget=min_budget, max_budget=max_budget,
+    )
+    m = CampaignManifest(
+        path=path, platform=platform, jobs=list(scheduled), total_budget=total_budget
+    )
+    m.save()
+    return m

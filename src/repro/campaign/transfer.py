@@ -1,0 +1,139 @@
+"""Transfer layer: warm starts from neighbours + 'few fit most' cover sets.
+
+Two observations make tuning campaigns cheap and their databases general:
+
+* **warm starts** — the winning config for a kernel varies smoothly with the
+  shape bucket (Figure 1 of the paper shows dependence, not chaos), so the
+  nearest tuned neighbour — same kernel on the closest bucket, or the same
+  bucket on a sibling platform — is an excellent first evaluation. Seeded
+  local search converges in a fraction of a cold search's evaluations.
+* **cover sets** — after a campaign, the distinct winners per kernel are few
+  ("A Few Fit Most", Hochgraf & Pai 2025): clustering records by winning
+  config yields a handful of entries that cover most tuned buckets. Shipping
+  that cover set inside the database gives *unseen* shapes a measured
+  fallback that beats the analytical heuristic, with zero serve-time tuning.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.database import (
+    Record,
+    TuningDatabase,
+    shape_bucket,
+    shape_distance,
+    split_key,
+)
+from ..core.params import Config, ParamSpace
+
+
+def warm_start_configs(
+    db: TuningDatabase,
+    kernel: str,
+    platform: str,
+    arg_shapes: Sequence[Sequence[int]],
+    dtype: str,
+    key_extra: str = "",
+    space: Optional[ParamSpace] = None,
+    k: int = 3,
+) -> List[Config]:
+    """Up to `k` seed configs from the nearest existing records.
+
+    Ranking: same (platform, dtype, extra) by shape distance first, then
+    same-platform records regardless of dtype/extra, then sibling platforms
+    (a TPU winner is still a far better guess on a new TPU generation than
+    the space default). The exact target key is excluded — that case is a
+    plain database hit, not a transfer.
+    """
+    target_shapes = tuple(shape_bucket(s) for s in arg_shapes)
+    scored: List[Tuple[Tuple[int, float, float], Config]] = []
+    for rec in db.records():
+        r_kernel, r_platform, r_shapes, r_dtype, r_extra = split_key(rec.key)
+        if r_kernel != kernel:
+            continue
+        dist = shape_distance(target_shapes, r_shapes)
+        if r_platform == platform and r_dtype == dtype and r_extra == key_extra:
+            if dist == 0.0:
+                continue                      # exact key = db hit, not transfer
+            tier = 0
+        elif r_platform == platform:
+            tier = 1
+        else:
+            tier = 2
+        if math.isinf(dist):
+            continue
+        scored.append(((tier, dist, rec.objective), dict(rec.config)))
+    scored.sort(key=lambda t: t[0])
+
+    out: List[Config] = []
+    seen = set()
+    for _, cfg in scored:
+        if space is not None and not space.is_valid(cfg):
+            continue
+        key = ParamSpace.config_key(cfg)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(cfg)
+        if len(out) >= k:
+            break
+    return out
+
+
+def cluster_winners(
+    records: Sequence[Record],
+    max_size: int = 4,
+    coverage: float = 0.95,
+) -> List[Dict]:
+    """Cluster records by winning config into a ranked cover set.
+
+    Greedy set cover on exact config identity: take the config that wins the
+    most buckets, then the next, until `coverage` of the records are covered
+    or `max_size` entries exist. Each entry carries its supporting shape
+    buckets so lookup can route an unseen shape to its nearest cluster.
+    """
+    if not records:
+        return []
+    groups: Dict[str, Dict] = {}
+    for rec in records:
+        ck = ParamSpace.config_key(rec.config)
+        g = groups.setdefault(ck, {"config": dict(rec.config), "support": []})
+        g["support"].append([list(s) for s in split_key(rec.key)[2]])
+    ranked = sorted(groups.values(), key=lambda g: -len(g["support"]))
+    total = len(records)
+    out: List[Dict] = []
+    covered = 0
+    for g in ranked:
+        if len(out) >= max_size or covered / total >= coverage:
+            break
+        covered += len(g["support"])
+        out.append({
+            "config": g["config"],
+            "support": g["support"],
+            "share": len(g["support"]) / total,
+        })
+    return out
+
+
+def compute_covers(
+    db: TuningDatabase,
+    platform: str,
+    max_size: int = 4,
+    save: bool = True,
+) -> Dict[str, List[Dict]]:
+    """Cluster every kernel's winners on `platform` and store the cover sets."""
+    by_kernel: Dict[str, List[Record]] = {}
+    for rec in db.records():
+        kernel, r_platform, _, _, _ = split_key(rec.key)
+        if r_platform == platform:
+            by_kernel.setdefault(kernel, []).append(rec)
+    covers: Dict[str, List[Dict]] = {}
+    for kernel, recs in sorted(by_kernel.items()):
+        entries = cluster_winners(recs, max_size=max_size)
+        if entries:
+            db.put_cover(kernel, platform, entries, save=False)
+            covers[kernel] = entries
+    if save:
+        db.save()
+    return covers

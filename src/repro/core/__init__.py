@@ -19,7 +19,16 @@ from .params import (
     PowerOfTwoParam,
 )
 from .annotate import Tunable, get_tunable, registered, tunable
-from .database import Record, TuningDatabase, default_db, make_key, set_default_db, shape_bucket
+from .database import (
+    Record,
+    TuningDatabase,
+    default_db,
+    make_key,
+    set_default_db,
+    shape_bucket,
+    shape_distance,
+    split_key,
+)
 from .evaluate import (
     CostModelEvaluator,
     Evaluator,

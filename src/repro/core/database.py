@@ -17,13 +17,35 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
+import math
 import os
 import tempfile
 import threading
 import time
-from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+log = logging.getLogger("repro.database")
 
 SCHEMA_VERSION = 2
+
+
+def atomic_write_json(path: str, blob: Dict[str, Any]) -> None:
+    """Write-to-temp + rename so readers never see a torn file.
+
+    Shared by the tuning database and the campaign manifest (same discipline
+    as the checkpoint writer).
+    """
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 def shape_bucket(shape: Sequence[int]) -> Tuple[int, ...]:
@@ -52,6 +74,40 @@ def make_key(
     if extra:
         key += f"|{extra}"
     return key
+
+
+def split_key(key: str) -> Tuple[str, str, Tuple[Tuple[int, ...], ...], str, str]:
+    """Inverse of :func:`make_key`: (kernel, platform, shapes, dtype, extra)."""
+    parts = key.split("|")
+    kernel, platform = parts[0], parts[1] if len(parts) > 1 else "?"
+    shapes: Tuple[Tuple[int, ...], ...] = ()
+    if len(parts) > 2 and parts[2]:
+        shapes = tuple(
+            tuple(int(d) for d in s.split("x") if d) for s in parts[2].split("/") if s
+        )
+    dtype = parts[3] if len(parts) > 3 else ""
+    extra = "|".join(parts[4:]) if len(parts) > 4 else ""
+    return kernel, platform, shapes, dtype, extra
+
+
+def shape_distance(
+    a: Sequence[Sequence[int]], b: Sequence[Sequence[int]]
+) -> float:
+    """Log2 distance between two bucketed shape tuples (transfer metric).
+
+    Sum over all dims of |log2(a_d) - log2(b_d)|; infinite when ranks differ
+    (a record for a different-rank call is not a meaningful neighbour).
+    """
+    if len(a) != len(b):
+        return math.inf
+    total = 0.0
+    for sa, sb in zip(a, b):
+        if len(sa) != len(sb):
+            return math.inf
+        for da, db in zip(sa, sb):
+            da, db = max(int(da), 1), max(int(db), 1)
+            total += abs(math.log2(da) - math.log2(db))
+    return total
 
 
 @dataclasses.dataclass
@@ -84,6 +140,10 @@ class TuningDatabase:
         self.path = path
         self._lock = threading.Lock()
         self._records: Dict[str, Record] = {}
+        # Cover sets: "kernel|platform" -> ordered list of
+        # {"config": {...}, "support": [[dims...],...], "share": float}
+        # entries — the 'few fit most' fallback for unseen shape buckets.
+        self._covers: Dict[str, List[Dict[str, Any]]] = {}
         if path and os.path.exists(path):
             self._load()
 
@@ -93,11 +153,18 @@ class TuningDatabase:
             blob = json.load(f)
         if blob.get("schema", 0) != SCHEMA_VERSION:
             # Old schema: start fresh rather than misread stale records.
+            log.warning(
+                "tuning db %s has schema %s != %s; ignoring its records "
+                "(a fresh tuning pass will rebuild them)",
+                self.path, blob.get("schema", 0), SCHEMA_VERSION,
+            )
             self._records = {}
+            self._covers = {}
             return
         self._records = {
             k: Record.from_json(v) for k, v in blob.get("records", {}).items()
         }
+        self._covers = dict(blob.get("covers", {}))
 
     def save(self) -> None:
         if not self.path:
@@ -106,16 +173,9 @@ class TuningDatabase:
             "schema": SCHEMA_VERSION,
             "records": {k: r.to_json() for k, r in self._records.items()},
         }
-        d = os.path.dirname(os.path.abspath(self.path))
-        os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(blob, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
+        if self._covers:
+            blob["covers"] = self._covers
+        atomic_write_json(self.path, blob)
 
     # -- access ---------------------------------------------------------------
     def lookup(self, key: str) -> Optional[Record]:
@@ -134,6 +194,9 @@ class TuningDatabase:
     def keys(self) -> Iterable[str]:
         return list(self._records)
 
+    def records(self) -> List[Record]:
+        return list(self._records.values())
+
     def __len__(self) -> int:
         return len(self._records)
 
@@ -142,6 +205,117 @@ class TuningDatabase:
         for k in self._records:
             plat = k.split("|")[1] if "|" in k else "?"
             out[plat] = out.get(plat, 0) + 1
+        return out
+
+    # -- cover sets ('a few fit most') ---------------------------------------
+    @staticmethod
+    def cover_key(kernel: str, platform: str) -> str:
+        return f"{kernel}|{platform}"
+
+    def covers(self) -> Dict[str, List[Dict[str, Any]]]:
+        """All stored cover sets, keyed "kernel|platform"."""
+        return {k: [dict(e) for e in v] for k, v in self._covers.items()}
+
+    def put_cover(
+        self,
+        kernel: str,
+        platform: str,
+        entries: Sequence[Dict[str, Any]],
+        save: bool = True,
+    ) -> None:
+        """Store the clustered cover set for (kernel, platform).
+
+        Each entry is {"config", "support", "share"}: a winning config, the
+        bucketed shape tuples it won on, and the fraction of tuned keys it
+        covers. Entries are kept in descending-share order so lookup's first
+        valid entry is the broadest specialization.
+        """
+        with self._lock:
+            self._covers[self.cover_key(kernel, platform)] = [
+                dict(e) for e in entries
+            ]
+            if save:
+                self.save()
+
+    def lookup_cover(
+        self,
+        kernel: str,
+        platform: str,
+        shapes: Optional[Sequence[Sequence[int]]] = None,
+    ) -> List[Dict[str, Any]]:
+        """Cover entries for (kernel, platform), best-first for `shapes`.
+
+        With `shapes`, entries are re-ranked by the minimum log2 distance
+        between the query's shape buckets and each entry's support set, so an
+        unseen shape lands on the specialization tuned for its nearest
+        neighbours; ties keep the descending-share order.
+        """
+        entries = self._covers.get(self.cover_key(kernel, platform), [])
+        if not entries:
+            return []
+        if shapes is None:
+            return [dict(e) for e in entries]
+        q = tuple(shape_bucket(s) for s in shapes)
+
+        def dist(entry: Dict[str, Any]) -> float:
+            support = entry.get("support") or []
+            ds = [shape_distance(q, [tuple(dim) for dim in sup]) for sup in support]
+            ds = [d for d in ds if d < math.inf]
+            return min(ds) if ds else math.inf
+
+        order = sorted(range(len(entries)), key=lambda i: (dist(entries[i]), i))
+        return [dict(entries[i]) for i in order]
+
+    # -- bulk operations ------------------------------------------------------
+    def merge(
+        self,
+        other: Union["TuningDatabase", Iterable[Record]],
+        save: bool = True,
+    ) -> int:
+        """Fold another database (or an iterable of records) into this one.
+
+        Better-record-wins per key, same as :meth:`put`; cover sets from the
+        other database overwrite ours key-by-key (they are derived data and
+        the incoming campaign is assumed fresher). Returns the number of
+        records that were accepted (new or improved).
+        """
+        if isinstance(other, TuningDatabase):
+            records: Iterable[Record] = other.records()
+            covers = other._covers
+        else:
+            records, covers = other, {}
+        accepted = 0
+        for rec in records:
+            prev = self._records.get(rec.key)
+            if prev is None or rec.objective <= prev.objective:
+                accepted += 1
+            self.put(rec, save=False)
+        with self._lock:
+            self._covers.update({k: [dict(e) for e in v] for k, v in covers.items()})
+            if save:
+                self.save()
+        return accepted
+
+    def export(
+        self, path: str, platform: Optional[str] = None
+    ) -> "TuningDatabase":
+        """Write a standalone database at `path` (optionally one platform).
+
+        This is the paper's shippable artifact: generic code + this file is a
+        deployment for `platform`. Covers ride along so unseen shapes fall
+        back to the campaign's 'few fit most' set rather than the heuristic.
+        """
+        out = TuningDatabase(None)
+        for rec in self.records():
+            if platform is None or split_key(rec.key)[1] == platform:
+                out.put(rec, save=False)
+        out._covers = {
+            k: [dict(e) for e in v]
+            for k, v in self._covers.items()
+            if platform is None or k.split("|")[-1] == platform
+        }
+        out.path = path
+        out.save()
         return out
 
 

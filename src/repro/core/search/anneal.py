@@ -2,8 +2,9 @@
 from __future__ import annotations
 
 import math
+from typing import Sequence
 
-from ..params import ParamSpace
+from ..params import Config, ParamSpace
 from .base import INVALID, SearchAlgorithm, SearchResult, ObjectiveFn, _Memo, make_rng
 
 
@@ -21,12 +22,24 @@ class SimulatedAnnealing(SearchAlgorithm):
         self.t0 = t0
         self.cooling = cooling
 
-    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+    def run(
+        self,
+        space: ParamSpace,
+        objective: ObjectiveFn,
+        seeds: Sequence[Config] = (),
+    ) -> SearchResult:
         rng = make_rng(self.seed)
         memo = _Memo(objective)
 
-        current = space.sample(rng)
+        # Start from the best-ranked seed; extra seeds are measured only while
+        # budget remains (each evaluation is a compile+run — never overdraw).
+        warm = self._valid_seeds(space, seeds)
+        current = warm[0] if warm else space.sample(rng)
         cur = memo(current)
+        for cfg in warm[1:]:
+            if memo.evaluations >= self.budget:
+                break
+            memo(cfg)
         t = self.t0
         proposals = 0
         # proposals cap: neighborhoods are finite, so once every neighbor is

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..params import Config, ParamSpace
 
@@ -51,7 +51,14 @@ ObjectiveFn = Callable[[Config], Trial]
 
 
 class SearchAlgorithm:
-    """Base class: drive `objective` for at most `budget` evaluations."""
+    """Base class: drive `objective` for at most `budget` evaluations.
+
+    ``seeds`` are externally-suggested starting configs (transfer tuning:
+    winners from a neighbouring shape bucket or a sibling platform). Every
+    strategy evaluates the valid seeds first — a good seed costs one
+    evaluation and lets local strategies converge in a single sweep instead
+    of climbing from the space default.
+    """
 
     name = "base"
 
@@ -59,7 +66,12 @@ class SearchAlgorithm:
         self.budget = int(budget)
         self.seed = int(seed)
 
-    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+    def run(
+        self,
+        space: ParamSpace,
+        objective: ObjectiveFn,
+        seeds: Sequence[Config] = (),
+    ) -> SearchResult:
         raise NotImplementedError
 
     # Shared bookkeeping ----------------------------------------------------
@@ -68,6 +80,20 @@ class SearchAlgorithm:
         ok = [t for t in trials if t.ok and t.objective < INVALID]
         best = min(ok, key=lambda t: t.objective) if ok else None
         return SearchResult(best=best, trials=trials, evaluations=len(trials))
+
+    @staticmethod
+    def _valid_seeds(space: ParamSpace, seeds: Sequence[Config]) -> List[Config]:
+        """Filter + dedup seed configs; invalid suggestions are just dropped."""
+        out: List[Config] = []
+        seen = set()
+        for s in seeds:
+            if not space.is_valid(s):
+                continue
+            k = ParamSpace.config_key(s)
+            if k not in seen:
+                seen.add(k)
+                out.append(dict(s))
+        return out
 
 
 class _Memo:

@@ -6,6 +6,8 @@ O(sum-of-domain-sizes) evaluations instead of O(product).
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 from ..params import Config, ParamSpace
 from .base import INVALID, SearchAlgorithm, SearchResult, ObjectiveFn, _Memo, make_rng
 
@@ -17,7 +19,12 @@ class CoordinateDescent(SearchAlgorithm):
         super().__init__(budget, seed)
         self.restarts = restarts
 
-    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+    def run(
+        self,
+        space: ParamSpace,
+        objective: ObjectiveFn,
+        seeds: Sequence[Config] = (),
+    ) -> SearchResult:
         rng = make_rng(self.seed)
         memo = _Memo(objective)
 
@@ -48,9 +55,18 @@ class CoordinateDescent(SearchAlgorithm):
                         cur_obj = best_o
                         improved = True
 
-        for r in range(max(1, self.restarts)):
+        # Warm start: climb from each transferred seed. A seed near the
+        # optimum converges in one sweep, so the climb terminates well under
+        # budget — that saved budget is the whole point of transfer tuning.
+        warm = self._valid_seeds(space, seeds)
+        for start in warm:
             if memo.evaluations >= self.budget:
                 break
-            start = space.default() if r == 0 else space.sample(rng)
             climb(start)
+        if not warm:
+            for r in range(max(1, self.restarts)):
+                if memo.evaluations >= self.budget:
+                    break
+                start = space.default() if r == 0 else space.sample(rng)
+                climb(start)
         return self._mk_result(memo.trials)

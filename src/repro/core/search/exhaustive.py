@@ -1,15 +1,28 @@
 """Exhaustive search — ground truth for small spaces (Orio's `Exhaustive`)."""
 from __future__ import annotations
 
-from ..params import ParamSpace
+from typing import Sequence
+
+from ..params import Config, ParamSpace
 from .base import SearchAlgorithm, SearchResult, ObjectiveFn, _Memo
 
 
 class ExhaustiveSearch(SearchAlgorithm):
     name = "exhaustive"
 
-    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+    def run(
+        self,
+        space: ParamSpace,
+        objective: ObjectiveFn,
+        seeds: Sequence[Config] = (),
+    ) -> SearchResult:
         memo = _Memo(objective)
+        # Seeds first: if the budget truncates the enumeration, the suggested
+        # region still gets measured (memoization makes re-visits free).
+        for cfg in self._valid_seeds(space, seeds):
+            if memo.evaluations >= self.budget:
+                break
+            memo(cfg)
         for cfg in space.enumerate():
             if memo.evaluations >= self.budget:
                 break

@@ -6,7 +6,9 @@ must co-vary) where coordinate descent stalls on ridges.
 """
 from __future__ import annotations
 
-from ..params import ParamSpace
+from typing import Sequence
+
+from ..params import Config, ParamSpace
 from .base import INVALID, SearchAlgorithm, SearchResult, ObjectiveFn, _Memo, make_rng
 
 
@@ -26,12 +28,22 @@ class GeneticSearch(SearchAlgorithm):
         self.mutation_rate = mutation_rate
         self.elite = elite
 
-    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+    def run(
+        self,
+        space: ParamSpace,
+        objective: ObjectiveFn,
+        seeds: Sequence[Config] = (),
+    ) -> SearchResult:
         rng = make_rng(self.seed)
         memo = _Memo(objective)
 
+        # Seeds join the founding population; the rest is random immigrants.
         pop = []
-        for _ in range(self.population):
+        for cfg in self._valid_seeds(space, seeds)[: self.population]:
+            if memo.evaluations >= self.budget:
+                break
+            pop.append((memo(cfg).objective, cfg))
+        while len(pop) < self.population:
             if memo.evaluations >= self.budget:
                 break
             cfg = space.sample(rng)

@@ -5,16 +5,27 @@ control every guided strategy must beat in ``benchmarks/search_convergence``.
 """
 from __future__ import annotations
 
-from ..params import ParamSpace
+from typing import Sequence
+
+from ..params import Config, ParamSpace
 from .base import SearchAlgorithm, SearchResult, ObjectiveFn, _Memo, make_rng
 
 
 class RandomSearch(SearchAlgorithm):
     name = "random"
 
-    def run(self, space: ParamSpace, objective: ObjectiveFn) -> SearchResult:
+    def run(
+        self,
+        space: ParamSpace,
+        objective: ObjectiveFn,
+        seeds: Sequence[Config] = (),
+    ) -> SearchResult:
         rng = make_rng(self.seed)
         memo = _Memo(objective)
+        for cfg in self._valid_seeds(space, seeds):
+            if memo.evaluations >= self.budget:
+                break
+            memo(cfg)
         tries = 0
         # Allow a few duplicates' worth of extra draws, then stop.
         while memo.evaluations < self.budget and tries < self.budget * 4:

@@ -66,8 +66,15 @@ def autotune(
     db: Optional[TuningDatabase] = None,
     key_extra: str = "",
     save: bool = True,
+    seed_configs: Optional[Sequence[Config]] = None,
 ) -> TuningResult:
-    """Full tuning pass for `tunable` on concrete `args`."""
+    """Full tuning pass for `tunable` on concrete `args`.
+
+    `seed_configs` warm-start the search (transfer tuning): configs that won
+    on a neighbouring shape bucket or sibling platform are evaluated first,
+    so local strategies converge in far fewer evaluations than a cold start.
+    Invalid seeds are silently dropped by the strategy.
+    """
     search = search or CoordinateDescent(budget=48)
     evaluator = evaluator or WallClockEvaluator()
     platform = detect_platform().name
@@ -87,7 +94,7 @@ def autotune(
         return Trial(config=config, objective=m.objective, ok=m.ok, meta=m.meta)
 
     t0 = time.perf_counter()
-    result = search.run(tunable.space, objective)
+    result = search.run(tunable.space, objective, seeds=tuple(seed_configs or ()))
     elapsed = time.perf_counter() - t0
     if result.best is None:
         raise RuntimeError(
@@ -100,6 +107,12 @@ def autotune(
     base = evaluator.evaluate(tunable.variant(**default_cfg), args, reference=reference)
     default_obj = base.objective if base.ok else INVALID
 
+    # The tuner must never regress (claim C3): a budget too small to rediscover
+    # the baseline keeps the measured default as the winner.
+    best_config, best_objective = result.best_config, result.best_objective
+    if base.ok and tunable.space.is_valid(default_cfg) and default_obj < best_objective:
+        best_config, best_objective = dict(default_cfg), default_obj
+
     # 5. Persist.
     if db is None:
         db = default_db()
@@ -107,8 +120,8 @@ def autotune(
     db.put(
         Record(
             key=key,
-            config=result.best_config,
-            objective=result.best_objective,
+            config=best_config,
+            objective=best_objective,
             evaluator=evaluator.name,
             evaluations=result.evaluations,
             timestamp=now(),
@@ -122,13 +135,13 @@ def autotune(
     )
     log.info(
         "tuned %s: %.3gs -> %.3gs (%.2fx) in %d evals",
-        key, default_obj, result.best_objective,
-        (default_obj / result.best_objective if result.best_objective else 1.0),
+        key, default_obj, best_objective,
+        (default_obj / best_objective if best_objective else 1.0),
         result.evaluations,
     )
     return TuningResult(
-        best_config=result.best_config,
-        best_objective=result.best_objective,
+        best_config=best_config,
+        best_objective=best_objective,
         default_objective=default_obj,
         evaluations=result.evaluations,
         search=result,
@@ -141,9 +154,15 @@ def tune_or_lookup(
     db: Optional[TuningDatabase] = None,
     allow_tune: bool = False,
     key_extra: str = "",
+    allow_cover: bool = True,
     **tune_kwargs,
 ) -> Config:
-    """Deployment-time config resolution (DB hit > tune-now > heuristic)."""
+    """Deployment-time config resolution.
+
+    Precedence: exact DB hit > tune-now (`allow_tune`) > cover-set entry for
+    the nearest tuned shape ('a few fit most': a small set of campaign
+    winners covers most unseen buckets) > the shape heuristic default.
+    """
     db = db or default_db()
     platform = detect_platform().name
     key = _args_key(tunable, args, platform, key_extra)
@@ -152,4 +171,10 @@ def tune_or_lookup(
         return dict(rec.config)
     if allow_tune:
         return autotune(tunable, args, db=db, key_extra=key_extra, **tune_kwargs).best_config
+    if allow_cover:
+        shapes = [tuple(a.shape) for a in args if hasattr(a, "shape")]
+        for entry in db.lookup_cover(tunable.name, platform, shapes):
+            cfg = entry.get("config")
+            if cfg is not None and tunable.space.is_valid(cfg):
+                return dict(cfg)
     return tunable.default_config(*args)

@@ -1,0 +1,15 @@
+"""Version shims for the Pallas TPU API.
+
+`pltpu.TPUCompilerParams` was renamed to `pltpu.CompilerParams` upstream;
+this container may carry either vintage of jax, so resolve whichever name
+exists once and let every kernel import the result.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if CompilerParams is None:  # pragma: no cover - very old jax
+    raise ImportError("pallas tpu has neither CompilerParams nor TPUCompilerParams")

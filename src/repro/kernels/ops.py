@@ -3,15 +3,22 @@
 This is where the paper's 'sustainable performance portability' is cashed
 out at runtime: callers use `ops.matmul(x, w)` and get
 
-  1. the stored best variant for (platform, shape-bucket, dtype) if the
-     tuning database has one (zero-cost specialization),
-  2. else the shape heuristic default (the 'vendor baseline'),
-  3. or the pure-jnp reference path when Pallas is disabled
+  1. the stored best variant for (platform, kernel, shape-bucket, dtype) if
+     the tuning database has one (zero-cost specialization — a campaign-
+     exported database makes this the common case),
+  2. else the nearest 'few fit most' cover-set entry the campaign clustered
+     from its winners — a measured config from the closest tuned bucket,
+     still zero tuning at serve time,
+  3. else the shape heuristic default (the 'vendor baseline'),
+  4. or the pure-jnp reference path when Pallas is disabled
      (`REPRO_USE_PALLAS=0`, or during multi-pod dry-runs, where Pallas
      cannot lower for TPU from a CPU host).
 
-`set_kernel_mode` flips the whole model stack between kernel and reference
-paths; both compute identical math (enforced by tests/test_kernels_*).
+Populate the database offline with ``python -m repro.campaign`` (plan →
+run → export); `ServingEngine.warmup` pre-resolves every serving bucket
+through this same chain. `set_kernel_mode` flips the whole model stack
+between kernel and reference paths; both compute identical math (enforced
+by tests/test_kernels_*).
 """
 from __future__ import annotations
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import _compat
 from ..core import Constraint, ParamSpace, PowerOfTwoParam, tunable
 from ..core.platform import TPU_V5E
 from . import ref
@@ -51,7 +52,7 @@ def rmsnorm_pallas(
         ],
         out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=_compat.CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xp, weight[None, :])
     return out[:rows] if pad else out

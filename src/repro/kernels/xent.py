@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import _compat
 from ..core import Constraint, ParamSpace, PowerOfTwoParam, tunable
 from ..core.platform import TPU_V5E
 from . import ref
@@ -96,7 +97,7 @@ def softmax_xent_pallas(
             pltpu.VMEM((block_rows, 1), jnp.float32),
             pltpu.VMEM((block_rows, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

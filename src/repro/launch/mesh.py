@@ -15,6 +15,15 @@ import math
 import jax
 
 
+def _mk_mesh(shape, axes, devices) -> jax.sharding.Mesh:
+    # jax.sharding.AxisType (explicit-sharding API) does not exist in older
+    # jax; Auto is also the default there, so omitting axis_types is exact.
+    if hasattr(jax.sharding, "AxisType"):
+        auto = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, devices=devices, axis_types=auto)
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -26,13 +35,9 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             "dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before importing jax"
         )
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, devices=devs[:n], axis_types=auto)
+    return _mk_mesh(shape, axes, devs[:n])
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Degenerate 1×1 mesh for CPU smoke tests and examples."""
-    auto = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh(
-        (1, 1), ("data", "model"), devices=jax.devices()[:1], axis_types=auto
-    )
+    return _mk_mesh((1, 1), ("data", "model"), jax.devices()[:1])

@@ -2,14 +2,18 @@
 
 A deliberately small continuous-batching core:
   * requests queue up; the engine packs up to `max_batch` of them,
-    right-pads to a shared prefill length, prefills once, then decodes
-    lock-step until every sequence hits its stop length;
+    left-pads to a shared prefill length (so every sequence's last prompt
+    token sits at the same position and decode starts aligned), prefills
+    once, then decodes lock-step until every sequence hits its stop length;
   * per-layer caches come from the model (`lm.cache_specs` layouts): rolling
     windows for SWA layers, O(1) states for SSM layers, ring-less full
     caches for global attention;
   * both steps are jitted once per (batch, seq-bucket) — the tuning
     database's shape-bucketing logic is reused for the serving buckets, so
-    a production deployment warms exactly the buckets it serves.
+    a production deployment warms exactly the buckets it serves:
+    :meth:`ServingEngine.warmup` resolves (or tunes) the kernel configs for
+    every bucket this engine can jit, straight from a campaign-exported
+    per-platform database.
 
 Sampling: greedy or temperature; seeded per request for reproducibility.
 """
@@ -37,7 +41,8 @@ class Request:
     seed: int = 0
     # filled by the engine:
     output: Optional[np.ndarray] = None
-    latency_s: float = 0.0
+    latency_s: float = 0.0          # batch start -> THIS request's last token
+    batch_latency_s: float = 0.0    # whole-batch wall time (shared by the batch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,8 +101,17 @@ class ServingEngine:
         outs = np.zeros((B, max_new), np.int32)
         rngs = [np.random.default_rng(r.seed) for r in reqs]
         cur = self._sample(logits, reqs, rngs)
+        # Lock-step decode still finishes short requests early in wall-clock
+        # terms: a request's latency is the time to ITS last token, not the
+        # batch's (the whole-batch time is kept separately for throughput
+        # accounting — charging it to every request overstates p50 latency).
+        done_at = np.zeros((B,), np.float64)
         for step in range(max_new):
             outs[:, step] = np.asarray(cur)
+            now = time.perf_counter() - t0
+            for i, r in enumerate(reqs):
+                if r.max_new_tokens == step + 1:
+                    done_at[i] = now
             pos = jnp.asarray(plen + step, jnp.int32)
             logits, caches = self._decode(
                 self.params, jnp.asarray(cur)[:, None], caches, pos
@@ -107,7 +121,8 @@ class ServingEngine:
         dt = time.perf_counter() - t0
         for i, r in enumerate(reqs):
             r.output = outs[i, : r.max_new_tokens]
-            r.latency_s = dt
+            r.latency_s = float(done_at[i]) if done_at[i] > 0 else dt
+            r.batch_latency_s = dt
         return reqs
 
     def _sample(self, logits, reqs, rngs) -> np.ndarray:
@@ -123,6 +138,68 @@ class ServingEngine:
                 p /= p.sum()
                 out[i] = int(rngs[i].choice(len(p), p=p))
         return out
+
+    # ---------------------------------------------------------------- warmup
+    def serving_buckets(self) -> List[tuple]:
+        """The (batch, seq-bucket) jit keys this engine can hit."""
+        from ..campaign.planner import serving_buckets
+
+        return serving_buckets(self.ecfg.max_batch, self.ecfg.max_seq)
+
+    def warmup(
+        self,
+        db=None,
+        allow_tune: bool = False,
+        install: bool = True,
+        max_tokens: int = 65536,
+        **tune_kwargs,
+    ) -> Dict[str, Dict]:
+        """Pre-resolve kernel configs for every bucket this engine serves.
+
+        This is the deployment end of a tuning campaign: pair the generic
+        engine with a campaign-exported per-platform database and every
+        (batch, seq-bucket) the engine will jit resolves its kernel configs
+        up front — exact record, else cover-set entry, else heuristic — so
+        no request ever pays tuning or heuristic-miss cost mid-flight. With
+        `allow_tune=True` missing buckets are tuned on the spot instead
+        (an online mini-campaign for this engine only).
+
+        `install=True` (default) makes a passed `db` the process-wide
+        default, because the kernels/ops dispatch the model executes under
+        `_prefill`/`_decode` resolves through ``default_db()`` — warming one
+        database while serving reads another would silently waste the
+        artifact.
+
+        Returns {db_key: resolved config} for observability.
+        """
+        from ..core.annotate import get_tunable
+        from ..core.database import default_db, set_default_db
+        from ..core.tuner import tune_or_lookup
+        from ..core.platform import detect_platform
+        from ..campaign.planner import plan_serving_jobs
+        from ..campaign.runner import materialize_args
+
+        if db is None:
+            db = default_db()
+        elif install:
+            set_default_db(db)
+        platform = detect_platform().name
+        jobs = plan_serving_jobs(
+            self.cfg, self.ecfg.max_batch, self.ecfg.max_seq,
+            max_tokens=max_tokens,
+        )
+        resolved: Dict[str, Dict] = {}
+        for job in jobs:
+            key = job.db_key(platform)
+            if key in resolved:
+                continue
+            tunable = get_tunable(job.kernel)
+            args = materialize_args(job)
+            resolved[key] = tune_or_lookup(
+                tunable, args, db=db, allow_tune=allow_tune,
+                key_extra=job.key_extra, **tune_kwargs,
+            )
+        return resolved
 
     def serve(self) -> List[Request]:
         """Drain the queue in max_batch groups."""

@@ -44,8 +44,11 @@ _RING_SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from repro.distributed.collectives import ring_all_reduce
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((8,), ("x",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    else:
+        mesh = jax.make_mesh((8,), ("x",))
     x = jnp.asarray(np.random.RandomState(0).randn(8, 37), jnp.float32)
     out = jax.jit(lambda v: ring_all_reduce(v, mesh, "x"))(x)
     want = jnp.broadcast_to(x.sum(0), x.shape)
@@ -60,7 +63,9 @@ def test_ring_all_reduce_8dev():
     r = subprocess.run(
         [sys.executable, "-c", _RING_SCRIPT],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        # JAX_PLATFORMS=cpu: without it jax probes the bundled libtpu on this
+        # image and hangs for minutes before falling back to CPU
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
         cwd=".",
     )
     assert "RING_OK" in r.stdout, r.stderr[-2000:]

@@ -1,0 +1,127 @@
+"""TuningDatabase invariants: schema gating, bucket edge cases, put/merge
+semantics, per-platform export, and cover-set storage/lookup."""
+import json
+import math
+
+import pytest
+
+from repro.core import (
+    Record,
+    TuningDatabase,
+    make_key,
+    shape_bucket,
+    shape_distance,
+    split_key,
+)
+from repro.core.database import SCHEMA_VERSION
+
+
+def rec(key, config, objective, ts=0.0):
+    return Record(key, config, objective, "wallclock", 1, ts)
+
+
+# ---------------------------------------------------------------- shape keys
+
+
+def test_shape_bucket_edge_cases():
+    assert shape_bucket((0,)) == (0,)            # degenerate dim kept exact
+    assert shape_bucket((1,)) == (1,)
+    assert shape_bucket((8,)) == (8,)            # boundary: <= 8 stays exact
+    assert shape_bucket((9,)) == (16,)           # first bucketed size
+    assert shape_bucket((2**20,)) == (2**20,)    # exact power of two unchanged
+    assert shape_bucket((2**20 + 1,)) == (2**21,)
+
+
+def test_shape_bucket_non_int_dims():
+    import numpy as np
+
+    # numpy scalar dims (what jax shapes sometimes carry) must coerce
+    assert shape_bucket((np.int64(100), np.int32(8))) == (128, 8)
+    assert shape_bucket((float(9.0),)) == (16,)
+
+
+def test_split_key_roundtrip():
+    key = make_key("matmul", "tpu-v5e", [(100, 128), (128, 64)], "bfloat16", "cTruew0")
+    kernel, platform, shapes, dtype, extra = split_key(key)
+    assert kernel == "matmul" and platform == "tpu-v5e"
+    assert shapes == ((128, 128), (128, 64))      # bucketed by make_key
+    assert dtype == "bfloat16" and extra == "cTruew0"
+
+
+def test_shape_distance():
+    assert shape_distance([(64, 64)], [(64, 64)]) == 0.0
+    assert shape_distance([(64,)], [(128,)]) == 1.0
+    assert math.isinf(shape_distance([(64,)], [(64, 64)]))   # rank mismatch
+    assert math.isinf(shape_distance([(4, 4)], [(4,)]))
+
+
+# ---------------------------------------------------------------- put / load
+
+
+def test_schema_mismatch_drops_all_records(tmp_path):
+    path = str(tmp_path / "db.json")
+    db = TuningDatabase(path)
+    db.put(rec("k|cpu-host|8|f32", {"a": 1}, 1.0))
+    blob = json.load(open(path))
+    blob["schema"] = SCHEMA_VERSION - 1
+    json.dump(blob, open(path, "w"))
+    # old-schema records must not be misread — a fresh pass rebuilds them
+    db2 = TuningDatabase(path)
+    assert len(db2) == 0
+    assert db2.lookup("k|cpu-host|8|f32") is None
+
+
+def test_put_better_record_wins(tmp_path):
+    path = str(tmp_path / "db.json")
+    db = TuningDatabase(path)
+    key = "k|cpu-host|64|f32"
+    db.put(rec(key, {"a": 1}, 2.0, ts=0.0))
+    db.put(rec(key, {"a": 2}, 3.0, ts=1.0))      # worse (noise): ignored
+    assert db.lookup(key).config == {"a": 1}
+    db.put(rec(key, {"a": 3}, 2.0, ts=2.0))      # tie: newer record accepted
+    assert db.lookup(key).config == {"a": 3}
+    db.put(rec(key, {"a": 4}, 0.5, ts=3.0))      # better: replaces
+    assert TuningDatabase(path).lookup(key).config == {"a": 4}
+
+
+def test_merge_better_record_wins(tmp_path):
+    a = TuningDatabase(str(tmp_path / "a.json"))
+    b = TuningDatabase(str(tmp_path / "b.json"))
+    a.put(rec("k1|p|8|f32", {"a": 1}, 1.0))
+    a.put(rec("k2|p|8|f32", {"a": 1}, 5.0))
+    b.put(rec("k2|p|8|f32", {"a": 9}, 1.0))      # better than a's k2
+    b.put(rec("k3|p|8|f32", {"a": 7}, 2.0))      # new key
+    accepted = a.merge(b)
+    assert accepted == 2
+    assert a.lookup("k1|p|8|f32").config == {"a": 1}
+    assert a.lookup("k2|p|8|f32").config == {"a": 9}
+    assert a.lookup("k3|p|8|f32").config == {"a": 7}
+    # merge persisted through the atomic writer
+    assert len(TuningDatabase(str(tmp_path / "a.json"))) == 3
+
+
+def test_export_filters_platform(tmp_path):
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    db.put(rec(make_key("k", "cpu-host", [(64,)], "f32"), {"a": 1}, 1.0))
+    db.put(rec(make_key("k", "tpu-v5e", [(64,)], "f32"), {"a": 2}, 1.0))
+    db.put_cover("k", "cpu-host", [{"config": {"a": 1}, "support": [[[64]]], "share": 1.0}])
+    db.put_cover("k", "tpu-v5e", [{"config": {"a": 2}, "support": [[[64]]], "share": 1.0}])
+    out = db.export(str(tmp_path / "tpu.json"), platform="tpu-v5e")
+    assert out.platforms() == {"tpu-v5e": 1}
+    loaded = TuningDatabase(str(tmp_path / "tpu.json"))
+    assert loaded.platforms() == {"tpu-v5e": 1}
+    assert loaded.lookup_cover("k", "tpu-v5e")[0]["config"] == {"a": 2}
+    assert loaded.lookup_cover("k", "cpu-host") == []
+
+
+def test_cover_lookup_ranks_by_shape_distance(tmp_path):
+    db = TuningDatabase(None)
+    db.put_cover("k", "p", [
+        {"config": {"a": "small"}, "support": [[[16]]], "share": 0.6},
+        {"config": {"a": "big"}, "support": [[[4096]]], "share": 0.4},
+    ])
+    # no shapes: descending-share order preserved
+    assert db.lookup_cover("k", "p")[0]["config"] == {"a": "small"}
+    # a big query re-ranks the far cluster first
+    assert db.lookup_cover("k", "p", [(2048,)])[0]["config"] == {"a": "big"}
+    assert db.lookup_cover("k", "p", [(16,)])[0]["config"] == {"a": "small"}

@@ -46,8 +46,11 @@ _MINI_DRYRUN = textwrap.dedent(
     from repro.launch import steps
     from repro.models.transformer import RunConfig
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
     cfg = get_config("qwen2-0.5b").reduced()
     layout = Layout(counts=(("heads", cfg.num_heads), ("kv_heads", cfg.num_kv_heads)),
                     head_aware=True)
@@ -80,7 +83,9 @@ def test_mini_dryrun_all_step_kinds():
     r = subprocess.run(
         [sys.executable, "-c", _MINI_DRYRUN],
         capture_output=True, text=True, timeout=560,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        # JAX_PLATFORMS=cpu: without it jax probes the bundled libtpu on this
+        # image and hangs for minutes before falling back to CPU
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
         cwd=".",
     )
     line = next(

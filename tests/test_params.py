@@ -2,6 +2,8 @@
 import random
 
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; collection must not die
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

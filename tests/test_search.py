@@ -3,6 +3,8 @@ budgets, never re-evaluate configs, and prune invalid variants."""
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; collection must not die
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ALGORITHMS, ParamSpace, PowerOfTwoParam, EnumParam, make_search

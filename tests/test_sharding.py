@@ -5,6 +5,8 @@ cache solver shards what it can.
 import jax
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; collection must not die
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; collection must not die
 from hypothesis import given, settings, strategies as st
 
 from repro.models import ssm
