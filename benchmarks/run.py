@@ -5,6 +5,8 @@ Emits ``name,us_per_call,derived`` CSV rows (derived = %speedup or context).
   fig1.*       — the paper's Figure 1 protocol: autotuned vs default across
                  input sizes (benchmarks/fig1_autotune.py)
   search.*     — Orio-style search-strategy comparison
+  serving.*    — continuous (slot-pool) vs lock-step engine under Poisson
+                 arrivals (benchmarks/serving_throughput.py)
   kernel.*     — Pallas-kernel interpret-mode correctness-at-speed spot check
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
@@ -68,6 +70,21 @@ def main() -> None:
                 f"evals_to_best={r['evals_to_best']}",
             )
         )
+
+    # --- serving: slot-pool vs lock-step scheduling -------------------------
+    from benchmarks import serving_throughput
+
+    sres = serving_throughput.bench(quick=args.quick)
+    for eng_name, r in sres.items():
+        rows.append((
+            f"serving.{eng_name}.decode_steps", float(r["decode_steps"]),
+            f"tok_per_step={r['tok_per_step']:.2f}",
+        ))
+    rows.append((
+        "serving.continuous.steps_saved_pct",
+        sres["continuous"]["steps_saved_pct"],
+        "vs lockstep",
+    ))
 
     # --- kernels (interpret-mode; correctness-weighted spot check) ---------
     from repro.kernels import ref

@@ -1,4 +1,17 @@
-"""Batched serving example: prefill + lock-step decode with KV caches.
+"""Continuous-batching serving example: slot pool + in-flight admission.
+
+The engine owns `max_batch` slots, each one batch row of a shared KV/SSM
+cache. Requests are admitted one at a time — prompt right-padded to a
+power-of-two bucket, prefilled at batch 1, cache inserted into a free slot
+— and the whole pool decodes in ONE jitted step per tick with per-slot
+positions. A request that hits its own `max_new_tokens` frees its slot
+immediately; queued traffic (staggered here via `arrival_time` ticks) is
+admitted mid-flight while other slots keep decoding.
+
+jit-key invariant: prefill keys are (1, seq-bucket), decode is a single
+(max_batch,) pool key — exactly the buckets a tuning campaign warms via
+``ServingEngine.warmup`` (see examples/run_campaign.py), so per-platform
+databases stay valid while batch composition changes continuously.
 
     PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b
     PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b   # SWA cache
@@ -41,8 +54,11 @@ def main():
     for i in range(args.requests):
         prompt = rs.randint(0, cfg.vocab_size, 16).astype(np.int32)
         engine.submit(Request(
-            prompt=prompt, max_new_tokens=args.new_tokens,
+            prompt=prompt,
+            # skewed lengths + staggered arrivals: slots retire and re-admit
+            max_new_tokens=args.new_tokens if i % 3 else 3 * args.new_tokens,
             temperature=0.8 if i % 2 else 0.0, seed=i,
+            arrival_time=2.0 * i,
         ))
 
     t0 = time.time()
@@ -51,9 +67,15 @@ def main():
     toks = sum(len(r.output) for r in done)
     for i, r in enumerate(done):
         mode = "sampled" if i % 2 else "greedy"
-        print(f"req{i} ({mode}): {r.output.tolist()}")
+        print(f"req{i} ({mode}, slot {r.slot}, "
+              f"admit@{r.admitted_step} lat {r.latency_steps} ticks): "
+              f"{r.output.tolist()}")
+    st = engine.stats
     print(f"\n{len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU)")
+    print(f"pool: {st['decode_steps']} decode steps, {st['prefill_calls']} "
+          f"admission prefills, {st['tokens_out']/max(1, st['decode_steps']):.2f} tok/step, "
+          f"{st['slot_steps_idle']} idle slot-steps")
 
 
 if __name__ == "__main__":

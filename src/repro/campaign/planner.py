@@ -149,27 +149,28 @@ def plan_train_jobs(
     return jobs
 
 
-def serving_buckets(max_batch: int, max_seq: int, min_seq: int = 16) -> List[Tuple[int, int]]:
-    """The (batch, seq-bucket) jit keys a ServingEngine can hit.
-
-    Batches: powers of two up to max_batch (plus max_batch itself — the
-    engine packs up to exactly that many requests). Seqs: the power-of-two
-    buckets ``database.shape_bucket`` maps padded lengths to, up to the
-    cache capacity.
-    """
-    batches: List[int] = []
-    b = 1
-    while b < max_batch:
-        batches.append(b)
-        b <<= 1
-    batches.append(max_batch)
+def _seq_buckets(max_seq: int, min_seq: int = 16) -> List[int]:
     seqs: List[int] = []
     s = min_seq
     while s < max_seq:
         seqs.append(s)
         s <<= 1
     seqs.append(shape_bucket((max_seq,))[0])
-    return sorted({(b, s) for b in batches for s in seqs})
+    return sorted(set(seqs))
+
+
+def serving_buckets(max_batch: int, max_seq: int, min_seq: int = 16) -> List[Tuple[int, int]]:
+    """The (batch, seq-bucket) jit keys a slot-pool ServingEngine can hit.
+
+    The continuous engine admits one request at a time: each admission
+    prefill jits at batch 1 × a power-of-two seq bucket (``(1, s)``), and
+    the decode pool jits ONCE at the full slot width, touching the cache at
+    every seq bucket up to capacity (``(max_batch, s)``). Bucket keys use
+    the same ``database.shape_bucket`` discipline as the static engine, so
+    campaign databases exported before the slot-pool rebuild stay valid.
+    """
+    seqs = _seq_buckets(max_seq, min_seq)
+    return sorted({(1, s) for s in seqs} | {(max_batch, s) for s in seqs})
 
 
 def plan_serving_jobs(
@@ -179,14 +180,16 @@ def plan_serving_jobs(
     kernels: Sequence[str] = DEFAULT_KERNELS,
     max_tokens: int = 4096,
 ) -> List[TuningJob]:
-    """Kernel jobs for every (batch, seq-bucket) a ServingEngine will jit.
+    """Kernel jobs for every slot-pool bucket a continuous ServingEngine jits.
 
-    Prefill hits the token-parallel sites at (b·s) rows and causal attention
-    at [b, H, s, hd]; decode hits the same gemms/norms at b rows per step and
-    runs ~s times per request — hence the seq-length weight on decode jobs.
+    Admission prefills run at batch 1 × seq-bucket: token-parallel sites see
+    s rows, causal attention sees [1, H, s, hd]. The decode pool runs at the
+    full slot width every tick: gemms/norms at `max_batch` rows, and
+    decode-shaped attention lookups (q_len = 1 against an s-deep cache) —
+    executed ~s times per request, hence the seq-length weight.
     """
     if cfg.frontend is not None:
-        return []                     # the toy engine serves token-in archs only
+        return []                     # the engine serves token-in archs only
     _register_tunables()
     d, hd = cfg.d_model, cfg.hd
     H, KV = cfg.num_heads, cfg.num_kv_heads
@@ -205,26 +208,38 @@ def plan_serving_jobs(
                 weight=float(weight),
             ))
 
-    for b, s in serving_buckets(max_batch, max_seq):
-        if b * s > max_tokens:
+    B = max_batch
+    seqs = _seq_buckets(max_seq)
+    for s in seqs:
+        # --- admission prefill: batch-1, right-padded to the seq bucket
+        if s <= max_tokens:
+            scen_p = f"{cfg.name}/serve_prefill_b1s{s}"
+            add("matmul", [(s, d), (d, H * hd)], [f, f], counts["attn"], scen_p)
+            if cfg.d_ff > 0:
+                add("matmul", [(s, d), (d, cfg.d_ff)], [f, f], counts["ffn"], scen_p)
+            add("rmsnorm", [(s, d), (d,)], [f, f], counts["norm"], scen_p)
+            q = (1, H, s, hd)
+            kv = (1, KV, s, hd)
+            add("flash_attention", [q, kv, kv], [f, f, f], counts["attn"], scen_p,
+                extra="cTruew0")
+            add("attn_chunks", [q, kv, kv], [f, f, f], counts["attn"], scen_p)
+        # --- decode pool: max_batch rows, once per generated token
+        if B * s > max_tokens:
             continue
-        scen_p = f"{cfg.name}/serve_prefill_b{b}s{s}"
-        scen_d = f"{cfg.name}/serve_decode_b{b}s{s}"
-        rows = b * s
-        add("matmul", [(rows, d), (d, H * hd)], [f, f], counts["attn"], scen_p)
+        scen_d = f"{cfg.name}/serve_decode_b{B}s{s}"
+        add("matmul", [(B, d), (d, H * hd)], [f, f], counts["attn"] * s, scen_d)
         if cfg.d_ff > 0:
-            add("matmul", [(rows, d), (d, cfg.d_ff)], [f, f], counts["ffn"], scen_p)
-        add("rmsnorm", [(rows, d), (d,)], [f, f], counts["norm"], scen_p)
-        q = (b, H, s, hd)
-        kv = (b, KV, s, hd)
-        add("flash_attention", [q, kv, kv], [f, f, f], counts["attn"], scen_p,
-            extra="cTruew0")
-        add("attn_chunks", [q, kv, kv], [f, f, f], counts["attn"], scen_p)
-        # decode: b-row gemms/norms, executed once per generated token
-        add("matmul", [(b, d), (d, H * hd)], [f, f], counts["attn"] * s, scen_d)
-        if cfg.d_ff > 0:
-            add("matmul", [(b, d), (d, cfg.d_ff)], [f, f], counts["ffn"] * s, scen_d)
-        add("rmsnorm", [(b, d), (d,)], [f, f], counts["norm"] * s, scen_d)
+            add("matmul", [(B, d), (d, cfg.d_ff)], [f, f], counts["ffn"] * s, scen_d)
+        add("rmsnorm", [(B, d), (d,)], [f, f], counts["norm"] * s, scen_d)
+    # decode-shaped attention lookup: one query row against the pool cache.
+    # The slot pool allocates its cache at max_seq depth ONCE — decode never
+    # sees a shallower kv tensor, so only the max_seq bucket is a live key.
+    s_max = seqs[-1]
+    if B * s_max <= max_tokens:
+        qd = (B, H, 1, hd)
+        kvd = (B, KV, s_max, hd)
+        add("attn_chunks", [qd, kvd, kvd], [f, f, f], counts["attn"] * s_max,
+            f"{cfg.name}/serve_decode_b{B}s{s_max}")
     return jobs
 
 

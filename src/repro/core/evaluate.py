@@ -44,21 +44,38 @@ def tolerance_for(dtype) -> Tuple[float, float]:
 
 
 def correctness_gate(out, ref, rtol: Optional[float] = None, atol: Optional[float] = None) -> bool:
-    """True iff `out` matches the reference pytree within dtype tolerance."""
+    """True iff `out` matches the reference pytree within dtype tolerance.
+
+    Structure, shape, and NaN discipline: mismatched tree *structures* fail
+    even when leaf counts happen to agree; a NaN in `out` where the
+    reference is finite fails; NaNs in the same positions as reference NaNs
+    pass (the reference defines them as expected). Tolerance is dtype-aware
+    — the coarser of the two leaves' dtypes decides (a bf16 variant judged
+    against an f32 reference gets bf16 tolerance), evaluated *before* the
+    float32 upcast used for comparison. Zero-size leaves trivially pass.
+    """
+    if jax.tree_util.tree_structure(out) != jax.tree_util.tree_structure(ref):
+        return False
     outs = jax.tree_util.tree_leaves(out)
     refs = jax.tree_util.tree_leaves(ref)
-    if len(outs) != len(refs):
-        return False
     for o, r in zip(outs, refs):
+        if rtol is not None:
+            rt, at = rtol, atol
+        else:
+            rt_o, at_o = tolerance_for(getattr(o, "dtype", np.float32))
+            rt_r, at_r = tolerance_for(getattr(r, "dtype", np.float32))
+            rt, at = max(rt_o, rt_r), max(at_o, at_r)
         o = np.asarray(o, dtype=np.float32)
         r = np.asarray(r, dtype=np.float32)
         if o.shape != r.shape:
             return False
-        rt, at = (rtol, atol) if rtol is not None else tolerance_for(r.dtype)
-        scale = max(1.0, float(np.max(np.abs(r))) if r.size else 1.0)
-        if not np.allclose(o, r, rtol=rt or 1e-5, atol=(at or 1e-5) * scale):
+        if not r.size:
+            continue
+        scale = max(1.0, float(np.max(np.abs(r[np.isfinite(r)]), initial=0.0)))
+        if np.any(np.isnan(o) & ~np.isnan(r)):
             return False
-        if np.any(np.isnan(o)) and not np.any(np.isnan(r)):
+        if not np.allclose(o, r, rtol=rt or 1e-5, atol=(at or 1e-5) * scale,
+                           equal_nan=True):
             return False
     return True
 

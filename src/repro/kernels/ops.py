@@ -15,8 +15,13 @@ out at runtime: callers use `ops.matmul(x, w)` and get
      cannot lower for TPU from a CPU host).
 
 Populate the database offline with ``python -m repro.campaign`` (plan →
-run → export); `ServingEngine.warmup` pre-resolves every serving bucket
-through this same chain. `set_kernel_mode` flips the whole model stack
+run → export); `ServingEngine.warmup` pre-resolves every slot-pool bucket
+through this same chain. Serving dispatch sees two shape families: batch-1
+admission prefills at power-of-two seq buckets, and decode-pool calls at
+`max_batch` rows (gemm/norm x-shapes of [max_batch, d], attention lookups
+with a single query row against an s-deep cache). `shape_bucket` keeps
+dims ≤ 8 exact, so small decode batches hit their own records rather than
+aliasing a prefill bucket. `set_kernel_mode` flips the whole model stack
 between kernel and reference paths; both compute identical math (enforced
 by tests/test_kernels_*).
 """

@@ -1,4 +1,4 @@
-"""Production serving launcher: prefill/decode engine on the chosen mesh.
+"""Production serving launcher: continuous-batching engine on the chosen mesh.
 
     # pod:
     python -m repro.launch.serve --arch qwen2.5-3b --requests 64
@@ -59,12 +59,17 @@ def main():
                 max_new_tokens=args.new_tokens,
                 temperature=0.7 if i % 2 else 0.0,
                 seed=i,
+                arrival_time=float(i),   # staggered: exercises in-flight admission
             )
         )
     done = engine.serve()
     toks = sum(len(r.output) for r in done)
+    st = engine.stats
     print(f"served {len(done)} requests / {toks} tokens; "
-          f"p50 latency {sorted(r.latency_s for r in done)[len(done)//2]:.2f}s")
+          f"p50 latency {sorted(r.latency_s for r in done)[len(done)//2]:.2f}s "
+          f"({sorted(r.latency_steps for r in done)[len(done)//2]} ticks); "
+          f"{st['decode_steps']} pool decode steps, "
+          f"{st['tokens_out']/max(1, st['decode_steps']):.2f} tok/step")
 
 
 if __name__ == "__main__":

@@ -63,7 +63,7 @@ def chunked_attention(
     scale: Optional[float] = None,
     q_chunk: int = 512,
     k_chunk: int = 1024,
-    kv_valid_len: Optional[jax.Array] = None,  # mask cache positions >= this
+    kv_valid_len: Optional[jax.Array] = None,  # scalar or [b]: mask cache positions >= this
 ) -> jax.Array:
     b, h, s_q, d = q.shape
     _, kv, s_k, _ = k.shape
@@ -104,9 +104,16 @@ def chunked_attention(
             if window > 0:
                 mask &= (q_ids[:, None] - k_ids[None, :]) < window
             mask &= (k_ids < s_k)[None, :]
+            full = mask[None, None, None]            # [1, 1, 1, q, k]
             if kv_valid_len is not None:
-                mask &= k_ids[None, :] < kv_valid_len
-            s = jnp.where(mask[None, None, None], s, NEG_INF)
+                vl = jnp.asarray(kv_valid_len)
+                if vl.ndim == 0:
+                    full = full & (k_ids[None, :] < vl)[None, None, None]
+                else:
+                    # per-sequence valid length (slot-pool decode: each slot
+                    # sits at its own absolute position)
+                    full = full & (k_ids[None, :] < vl[:, None])[:, None, None, None, :]
+            s = jnp.where(full, s, NEG_INF)
             m_new = jnp.maximum(m, s.max(-1))
             alpha = jnp.exp(m - m_new)
             p = jnp.exp(s - m_new[..., None])
@@ -167,8 +174,18 @@ def attention_forward(
     k_chunk: int = 1024,
     return_cache: bool = False,
     cache_len: Optional[int] = None,   # prefill: allocate cache of this length
+    true_len: Optional[jax.Array] = None,  # prefill: real prompt length (s may be right-padded)
 ):
-    """Training / prefill forward. Returns y or (y, cache)."""
+    """Training / prefill forward. Returns y or (y, cache).
+
+    `true_len` supports bucketed (right-padded) prefill: the input holds
+    `true_len` real tokens followed by pads. Causality already keeps pads out
+    of real positions' outputs; `true_len` additionally makes the *rolling
+    window cache* ring-consistent — slots are filled from real positions
+    (pos % clen alignment at `true_len`), so decode can continue at absolute
+    position `true_len`. Full caches need no change: rows are positions, and
+    decode masks rows >= its own position.
+    """
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.arange(s)
@@ -188,6 +205,18 @@ def attention_forward(
     clen = cache_len or s
     if window > 0:
         clen = min(clen, window)
+        if true_len is not None:
+            # Ring slots from *real* positions: slot j holds the largest
+            # position p < true_len with p % clen == j (junk for p < 0 is
+            # zeroed; decode masks unwritten slots anyway).
+            last = jnp.asarray(true_len) - 1
+            j = jnp.arange(clen)
+            pidx = last - jnp.mod(last - j, clen)
+            ok = (pidx >= 0)[None, :, None, None]
+            pc = jnp.clip(pidx, 0, s - 1)
+            k_tail = jnp.where(ok, jnp.take(k, pc, axis=1), 0).astype(k.dtype)
+            v_tail = jnp.where(ok, jnp.take(v, pc, axis=1), 0).astype(v.dtype)
+            return out, {"k": k_tail, "v": v_tail}
         if s >= clen:
             # keep the last `clen` positions, rolled so slot = pos % clen
             k_tail = jnp.roll(k[:, -clen:], s % clen, axis=1)
@@ -222,7 +251,7 @@ def attention_decode(
     p: Params,
     x: jax.Array,               # [b, 1, d_model]
     cache: Dict[str, jax.Array],
-    pos: jax.Array,             # scalar int32: absolute position of new token
+    pos: jax.Array,             # int32 scalar or [b]: absolute position per sequence
     *,
     n_heads: int,
     n_kv: int,
@@ -231,40 +260,47 @@ def attention_decode(
     window: int = 0,
     k_chunk: int = 1024,
 ):
-    """One-token decode against a cache. Returns (y, new_cache)."""
+    """One-token decode against a cache. Returns (y, new_cache).
+
+    `pos` may be a vector: in the slot-pool serving engine every cache row is
+    an independent sequence at its own absolute position, so RoPE, the cache
+    write slot, and the validity mask are all per-row.
+    """
     b = x.shape[0]
     q = _split_heads(dense(p["q"], x), n_heads, head_dim)
     k = _split_heads(dense(p["k"], x), n_kv, head_dim)
     v = _split_heads(dense(p["v"], x), n_kv, head_dim)
-    posv = jnp.asarray(pos)[None]
-    q = apply_rope(q, posv, rope_theta)
-    k = apply_rope(k, posv, rope_theta)
+    posv = jnp.broadcast_to(jnp.asarray(pos), (b,))            # [b]
+    q = apply_rope(q, posv[:, None], rope_theta)
+    k = apply_rope(k, posv[:, None], rope_theta)
 
     clen = cache["k"].shape[1]
-    slot = jnp.mod(pos, clen) if window > 0 else pos
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    slot = jnp.mod(posv, clen) if window > 0 else posv          # [b]
+    # per-row one-hot write (each sequence writes its own slot)
+    hit = (jnp.arange(clen)[None, :] == slot[:, None])[:, :, None, None]
+    ck = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
+    cv = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
 
     qh = jnp.swapaxes(q, 1, 2)
     kh = jnp.swapaxes(ck, 1, 2)
     vh = jnp.swapaxes(cv, 1, 2)
     if window > 0:
         # Rolling cache: every slot is within the window by construction;
-        # mask only the slots not yet written (pos < window).
-        valid = jnp.arange(clen) <= pos
+        # mask only the slots not yet written (pos < window), per row.
+        valid = jnp.arange(clen)[None, :] <= posv[:, None]      # [b, clen]
         s = jnp.einsum(
             "bkgqd,bkcd->bkgqc",
             qh.reshape(b, n_kv, n_heads // n_kv, 1, head_dim).astype(jnp.float32),
             kh.astype(jnp.float32),
         ) * (head_dim ** -0.5)
-        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
         pattn = jax.nn.softmax(s, axis=-1)
         y = jnp.einsum("bkgqc,bkcd->bkgqd", pattn, vh.astype(jnp.float32))
         y = y.reshape(b, n_heads, 1, head_dim).astype(x.dtype)
     else:
         y = chunked_attention(
             qh, kh, vh, causal=False, k_chunk=k_chunk,
-            kv_valid_len=pos + 1,
+            kv_valid_len=posv + 1,
         )
     y = jnp.swapaxes(y, 1, 2).reshape(b, 1, n_heads * head_dim)
     return dense(p["o"], y), {"k": ck, "v": cv}

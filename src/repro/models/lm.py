@@ -132,10 +132,12 @@ def _embed_inputs(params, batch: Batch, cfg: ArchConfig):
 
 
 def forward(params, batch: Batch, cfg: ArchConfig, run: tf.RunConfig,
-            mode: str = "train", cache_len: Optional[int] = None):
+            mode: str = "train", cache_len: Optional[int] = None,
+            true_len=None):
     x = _embed_inputs(params, batch, cfg)
     x, aux, caches = tf.stack_apply(
-        params["segments"], x, cfg, run, mode, cache_len=cache_len
+        params["segments"], x, cfg, run, mode, cache_len=cache_len,
+        true_len=true_len,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return x, aux, caches
@@ -188,20 +190,34 @@ def loss_fn(params, batch: Batch, cfg: ArchConfig, run: tf.RunConfig,
 
 
 def prefill(params, batch: Batch, cfg: ArchConfig, run: tf.RunConfig,
-            cache_len: Optional[int] = None):
-    """Full-sequence forward emitting caches + logits of the last position."""
+            cache_len: Optional[int] = None, true_len=None):
+    """Full-sequence forward emitting caches + logits of the last position.
+
+    `true_len` (scalar, may be traced) enables bucketed prefill: the batch is
+    right-padded to a shape bucket, logits are read at position
+    ``true_len - 1`` and window caches are ring-aligned to `true_len` so
+    decode continues at absolute position `true_len`. Causality keeps the
+    pad tokens out of every real position's output.
+    """
     seq = (batch["embeds"].shape[1] if "tokens" not in batch else batch["tokens"].shape[1])
     if cfg.frontend == "vision_patches":
         seq = batch["embeds"].shape[1] + batch["tokens"].shape[1]
     x, _, caches = forward(
-        params, batch, cfg, run, mode="prefill", cache_len=cache_len or seq
+        params, batch, cfg, run, mode="prefill", cache_len=cache_len or seq,
+        true_len=true_len,
     )
-    logits = unembed(params["lm_head"], x[:, -1])
+    last = x[:, -1] if true_len is None else jnp.take(x, true_len - 1, axis=1)
+    logits = unembed(params["lm_head"], last)
     return logits, caches
 
 
 def decode_step(params, tokens, caches, pos, cfg: ArchConfig, run: tf.RunConfig):
-    """tokens: [b, 1] int32; pos: scalar absolute position. -> (logits, caches)."""
+    """tokens: [b, 1] int32; pos: scalar or [b] absolute position(s).
+
+    A vector `pos` decodes each batch row at its own absolute position —
+    the slot-pool serving engine's contract, where every row is an
+    independent in-flight request. Returns (logits, caches).
+    """
     x = embed(params["embed"], tokens)
     x, _, caches = tf.stack_apply(
         params["segments"], x, cfg, run, mode="decode", caches=caches, pos=pos
@@ -213,3 +229,25 @@ def decode_step(params, tokens, caches, pos, cfg: ArchConfig, run: tf.RunConfig)
 
 def cache_specs(cfg: ArchConfig, batch: int, cache_len: int):
     return tf.cache_specs(cfg, batch, cache_len)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    """Zero-filled cache pytree for a `batch`-slot decode pool."""
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, cache_len)
+    )
+
+
+def insert_cache(pool, new, slot):
+    """Overwrite slot `slot`'s cache region with a freshly prefilled cache.
+
+    Cache leaves are stacked (repeats, batch, ...) — batch is axis 1. `new`
+    comes from a batch-1 prefill at the same cache_len; the write covers the
+    slot's entire region, so nothing from the previous occupant survives.
+    """
+    return jax.tree_util.tree_map(
+        lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+            a, b.astype(a.dtype), slot, axis=1
+        ),
+        pool, new,
+    )

@@ -117,7 +117,7 @@ def segment_init(rng, cfg: ArchConfig, seg: Segment) -> Tuple[Params, Axes]:
 
 
 def _mixer_apply(p, x, spec: LayerSpec, cfg: ArchConfig, run: RunConfig,
-                 mode: str, cache, pos):
+                 mode: str, cache, pos, true_len=None):
     kw = {}
     if spec.mixer == "attn":
         common = dict(
@@ -131,7 +131,7 @@ def _mixer_apply(p, x, spec: LayerSpec, cfg: ArchConfig, run: RunConfig,
         if mode == "prefill":
             y, c = attn.attention_forward(
                 p, x, q_chunk=run.q_chunk, k_chunk=run.k_chunk,
-                return_cache=True, cache_len=cache, **common
+                return_cache=True, cache_len=cache, true_len=true_len, **common
             )
             return y, c
         return attn.attention_decode(p, x, cache, pos, k_chunk=run.k_chunk, **common)
@@ -164,10 +164,11 @@ def _mixer_apply(p, x, spec: LayerSpec, cfg: ArchConfig, run: RunConfig,
 
 
 def layer_apply(p, x, spec: LayerSpec, cfg: ArchConfig, run: RunConfig,
-                mode: str, cache=None, pos=None):
+                mode: str, cache=None, pos=None, true_len=None):
     """Returns (x, aux_loss, new_cache_or_None)."""
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
-    y, new_cache = _mixer_apply(p["mixer"], h, spec, cfg, run, mode, cache, pos)
+    y, new_cache = _mixer_apply(p["mixer"], h, spec, cfg, run, mode, cache, pos,
+                                true_len=true_len)
     x = x + y
 
     aux = jnp.zeros((), jnp.float32)
@@ -187,7 +188,7 @@ def layer_apply(p, x, spec: LayerSpec, cfg: ArchConfig, run: RunConfig,
 
 
 def superblock_apply(p, x, pattern, cfg, run, mode, caches=None, pos=None,
-                     cache_len=None):
+                     cache_len=None, true_len=None):
     """Apply one super-block. caches: dict l{i} -> cache (decode) or None."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = {}
@@ -197,7 +198,8 @@ def superblock_apply(p, x, pattern, cfg, run, mode, caches=None, pos=None,
             c = caches[f"l{i}"]
         elif mode == "prefill":
             c = cache_len
-        x, aux, nc = layer_apply(p[f"l{i}"], x, spec, cfg, run, mode, c, pos)
+        x, aux, nc = layer_apply(p[f"l{i}"], x, spec, cfg, run, mode, c, pos,
+                                 true_len=true_len)
         aux_total = aux_total + aux
         if mode != "train":
             new_caches[f"l{i}"] = nc
@@ -220,7 +222,8 @@ def _remat_wrap(fn, run: RunConfig):
 
 
 def stack_apply(segments_params, x, cfg: ArchConfig, run: RunConfig,
-                mode: str, caches=None, pos=None, cache_len=None):
+                mode: str, caches=None, pos=None, cache_len=None,
+                true_len=None):
     """Apply all segments. Returns (x, aux, caches_or_None).
 
     segments_params: tuple of stacked segment params.
@@ -246,7 +249,8 @@ def stack_apply(segments_params, x, cfg: ArchConfig, run: RunConfig,
             def body(carry, p_sb):
                 xx, aux = carry
                 xx, a, cc = superblock_apply(
-                    p_sb, xx, pattern, cfg, run, "prefill", cache_len=cache_len
+                    p_sb, xx, pattern, cfg, run, "prefill", cache_len=cache_len,
+                    true_len=true_len,
                 )
                 return (xx, aux + a), cc
 

@@ -1,1 +1,3 @@
-from .engine import EngineConfig, Request, ServingEngine
+from .engine import EngineConfig, LockStepEngine, Request, ServingEngine
+
+__all__ = ["EngineConfig", "LockStepEngine", "Request", "ServingEngine"]

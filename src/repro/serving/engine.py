@@ -1,33 +1,65 @@
-"""Batched serving engine: prefill + decode with windowed/SSM caches.
+"""Continuous-batching serving engine: slot pool, in-flight admission,
+per-slot completion.
 
-A deliberately small continuous-batching core:
-  * requests queue up; the engine packs up to `max_batch` of them,
-    left-pads to a shared prefill length (so every sequence's last prompt
-    token sits at the same position and decode starts aligned), prefills
-    once, then decodes lock-step until every sequence hits its stop length;
-  * per-layer caches come from the model (`lm.cache_specs` layouts): rolling
-    windows for SWA layers, O(1) states for SSM layers, ring-less full
-    caches for global attention;
-  * both steps are jitted once per (batch, seq-bucket) — the tuning
-    database's shape-bucketing logic is reused for the serving buckets, so
-    a production deployment warms exactly the buckets it serves:
-    :meth:`ServingEngine.warmup` resolves (or tunes) the kernel configs for
-    every bucket this engine can jit, straight from a campaign-exported
-    per-platform database.
+The engine owns a fixed pool of ``max_batch`` *slots*. Each slot is one
+batch row of a shared cache pytree (allocated once at ``max_seq`` capacity)
+plus host-side per-slot state: the request occupying it, its absolute
+position, its sampling RNG, and the tokens emitted so far. The serve loop
+is::
 
-Sampling: greedy or temperature; seeded per request for reproducibility.
+    admit   — while a slot is free and a request has arrived, right-pad its
+              prompt to a power-of-two bucket, prefill it at batch 1, and
+              *insert* the fresh cache into the slot (a full overwrite —
+              nothing from the previous occupant survives);
+    decode  — ONE jitted step over the whole pool per tick, with a per-slot
+              position vector; inactive slots decode a dummy token that is
+              never read;
+    retire  — a slot whose request hit its own ``max_new_tokens`` is freed
+              immediately and the next queued request is admitted mid-flight,
+              while the other slots keep decoding.
+
+Compare :class:`LockStepEngine` (the old static batcher, kept for
+regression benchmarks): it packs a whole batch, decodes until *every*
+member finishes, and only then admits new traffic. On skewed workloads the
+slot pool strictly reduces total decode steps (see
+``tests/test_serving_throughput.py`` and ``benchmarks/serving_throughput.py``).
+
+jit-key invariant: admission prefills compile one (1, seq-bucket) key per
+power-of-two bucket and decode compiles ONE (max_batch,) pool key — exactly
+the slot-pool buckets ``campaign.planner.serving_buckets`` enumerates, so a
+campaign-exported per-platform database warmed via :meth:`ServingEngine.warmup`
+keeps hitting while the batch composition changes continuously. Database
+bucket keys are unchanged from the static engine (same ``shape_bucket``
+discipline), so existing campaign exports stay valid.
+
+Equivalence contract: greedy (and seeded-temperature) outputs are
+token-for-token identical to running each request alone, for any arrival
+pattern — causal masking keeps right-pad tokens out of real positions,
+window caches are ring-aligned to the true prompt length, and decode masks
+each slot's unwritten cache rows (property-tested in
+``tests/test_serving_continuous.py``). Archs with SSM mixers prefill at the
+exact prompt length instead (a state polluted by pad tokens cannot be
+masked after the fact); MoE archs need capacity headroom, as ever, since
+expert capacity couples batch rows.
+
+Timing: the engine has a virtual tick clock (1 tick = one pool decode
+step; ``Request.arrival_time`` is in ticks) for deterministic scheduling
+tests, and an injectable wall clock for latency. ``latency_s`` measures
+admission → the request's own last token, so late-admitted requests are
+not charged for time they spent unqueued or for earlier occupants' work.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
+from ..core.database import shape_bucket
 from ..distributed import sharding as shd
 from ..models import lm
 from ..models.transformer import RunConfig
@@ -39,19 +71,48 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0        # 0 = greedy
     seed: int = 0
+    arrival_time: float = 0.0       # engine ticks (decode steps); 0 = already here
     # filled by the engine:
     output: Optional[np.ndarray] = None
-    latency_s: float = 0.0          # batch start -> THIS request's last token
-    batch_latency_s: float = 0.0    # whole-batch wall time (shared by the batch)
+    latency_s: float = 0.0          # admission -> THIS request's last token (wall)
+    latency_steps: int = 0          # admission -> last token, in decode ticks
+    queue_steps: int = 0            # arrival -> admission, in decode ticks
+    admitted_step: int = -1
+    finished_step: int = -1
+    slot: int = -1
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    max_batch: int = 8
-    max_seq: int = 256              # cache capacity (prefill + decode)
+    max_batch: int = 8              # slot-pool width (= the one decode jit key)
+    max_seq: int = 256              # per-slot cache capacity (prefill + decode)
+    min_prefill_bucket: int = 16    # smallest admission-prefill seq bucket
+
+
+def _sample_one(logits_row: np.ndarray, req: Request, rng) -> int:
+    if req.temperature <= 0:
+        return int(np.argmax(logits_row))
+    z = logits_row / req.temperature
+    z = z - z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    return int(rng.choice(len(p), p=p))
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    rng: Any
+    cur: int                        # next token to feed
+    pos: int                        # absolute position `cur` will occupy
+    max_new: int
+    emitted: List[int]
+    t_admit: float
 
 
 class ServingEngine:
+    """Slot-pool continuous-batching engine (see module docstring)."""
+
     def __init__(
         self,
         cfg: ArchConfig,
@@ -60,91 +121,163 @@ class ServingEngine:
         mesh: jax.sharding.Mesh,
         layout: shd.Layout,
         ecfg: EngineConfig = EngineConfig(),
+        clock: Callable[[], float] = time.perf_counter,
     ):
         if cfg.frontend is not None:
             raise NotImplementedError(
-                "the toy engine serves token-in/token-out archs; frontend "
+                "the engine serves token-in/token-out archs; frontend "
                 "archs need an embedding service in front"
             )
         self.cfg, self.run, self.ecfg = cfg, run, ecfg
         self.params = params
         self.mesh, self.layout = mesh, layout
+        self.clock = clock
+        self._has_ssm = any(
+            spec.mixer != "attn" for seg in cfg.segments() for spec in seg.pattern
+        )
         self._prefill = jax.jit(
-            lambda p, b: lm.prefill(p, b, cfg, run, cache_len=ecfg.max_seq)
+            lambda p, toks, L: lm.prefill(
+                p, {"tokens": toks}, cfg, run, cache_len=ecfg.max_seq, true_len=L
+            )
         )
         self._decode = jax.jit(
             lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg, run)
         )
+        self._insert = jax.jit(lm.insert_cache)
+        self._caches = lm.init_cache(cfg, ecfg.max_batch, ecfg.max_seq)
+        self._slots: List[Optional[_Slot]] = [None] * ecfg.max_batch
         self.queue: List[Request] = []
+        self._order = 0
+        self.reset_stats()
 
+    # ----------------------------------------------------------------- stats
+    def reset_stats(self) -> None:
+        self.stats: Dict[str, int] = {
+            "decode_steps": 0,        # pool decode invocations (= ticks)
+            "prefill_calls": 0,
+            "prefill_tokens": 0,      # padded (bucketed) prefill tokens
+            "slot_steps_active": 0,   # slot·steps that produced a kept token
+            "slot_steps_idle": 0,     # slot·steps burned on empty slots
+            "tokens_out": 0,
+        }
+
+    # ----------------------------------------------------------------- queue
     def submit(self, req: Request) -> None:
+        L = len(req.prompt)
+        if not 1 <= L < self.ecfg.max_seq:
+            raise ValueError(
+                f"prompt length {L} not in [1, max_seq={self.ecfg.max_seq})"
+            )
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        req._order = self._order          # submission order, for serve()'s return
+        self._order += 1
         self.queue.append(req)
 
-    # ------------------------------------------------------------------ batch
-    def _pack(self, reqs: List[Request]):
-        B = len(reqs)
-        plen = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((B, plen), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
-        return jnp.asarray(toks), plen
+    def _bucket_len(self, prompt_len: int) -> int:
+        if self._has_ssm:
+            # SSM state integrates every input token — pad tokens cannot be
+            # masked out after the fact, so SSM archs prefill exact-length.
+            return prompt_len
+        b = max(self.ecfg.min_prefill_bucket, shape_bucket((prompt_len,))[0])
+        return min(b, self.ecfg.max_seq)
 
-    def run_batch(self, reqs: List[Request]) -> List[Request]:
-        t0 = time.perf_counter()
-        cfg, ecfg = self.cfg, self.ecfg
-        tokens, plen = self._pack(reqs)
-        B = tokens.shape[0]
-        logits, caches = self._prefill(self.params, {"tokens": tokens})
-        max_new = max(r.max_new_tokens for r in reqs)
-        max_new = min(max_new, ecfg.max_seq - plen)
+    # ------------------------------------------------------------- admission
+    def _admit(self, req: Request, slot: int, now: int, done: List[Request]) -> None:
+        L = len(req.prompt)
+        sb = self._bucket_len(L)
+        toks = np.zeros((1, sb), np.int32)
+        toks[0, :L] = req.prompt
+        logits, cache = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(L, jnp.int32)
+        )
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_tokens"] += sb
 
-        outs = np.zeros((B, max_new), np.int32)
-        rngs = [np.random.default_rng(r.seed) for r in reqs]
-        cur = self._sample(logits, reqs, rngs)
-        # Lock-step decode still finishes short requests early in wall-clock
-        # terms: a request's latency is the time to ITS last token, not the
-        # batch's (the whole-batch time is kept separately for throughput
-        # accounting — charging it to every request overstates p50 latency).
-        done_at = np.zeros((B,), np.float64)
-        for step in range(max_new):
-            outs[:, step] = np.asarray(cur)
-            now = time.perf_counter() - t0
-            for i, r in enumerate(reqs):
-                if r.max_new_tokens == step + 1:
-                    done_at[i] = now
-            pos = jnp.asarray(plen + step, jnp.int32)
-            logits, caches = self._decode(
-                self.params, jnp.asarray(cur)[:, None], caches, pos
+        req.admitted_step = now
+        req.queue_steps = max(0, now - int(np.ceil(req.arrival_time)))
+        req.slot = slot
+        t_admit = self.clock()
+        rng = np.random.default_rng(req.seed)
+        first = _sample_one(np.asarray(logits, np.float32)[0], req, rng)
+        max_new = min(req.max_new_tokens, self.ecfg.max_seq - L)
+        state = _Slot(req=req, rng=rng, cur=first, pos=L, max_new=max_new,
+                      emitted=[first], t_admit=t_admit)
+        if len(state.emitted) >= max_new:
+            self._finish(state, now)      # one-token request: never occupies
+            done.append(req)
+            return
+        self._caches = self._insert(self._caches, cache, jnp.asarray(slot, jnp.int32))
+        self._slots[slot] = state
+
+    def _finish(self, state: _Slot, now: int) -> None:
+        req = state.req
+        req.output = np.asarray(state.emitted, np.int32)
+        req.finished_step = now
+        req.latency_steps = now - req.admitted_step
+        req.latency_s = self.clock() - state.t_admit
+        self.stats["tokens_out"] += len(state.emitted)
+
+    # ----------------------------------------------------------------- serve
+    def serve(self) -> List[Request]:
+        """Run until the queue drains; return requests in submission order."""
+        pending = sorted(self.queue, key=lambda r: r.arrival_time)
+        self.queue = []
+        done: List[Request] = []
+        now = 0
+        B = self.ecfg.max_batch
+
+        def active() -> int:
+            return sum(s is not None for s in self._slots)
+
+        while pending or active():
+            if not active() and pending and pending[0].arrival_time > now:
+                now = int(np.ceil(pending[0].arrival_time))
+            # in-flight admission: fill every free slot with arrived traffic
+            free = [i for i in range(B) if self._slots[i] is None]
+            while free and pending and pending[0].arrival_time <= now:
+                i = free.pop(0)
+                self._admit(pending.pop(0), i, now, done)
+                if self._slots[i] is None:   # finished at admission: reusable
+                    free.append(i)
+            if not active():
+                continue
+
+            tokens = np.zeros((B, 1), np.int32)
+            pos = np.zeros((B,), np.int32)
+            for i, s in enumerate(self._slots):
+                if s is not None:
+                    tokens[i, 0] = s.cur
+                    pos[i] = s.pos
+            logits, self._caches = self._decode(
+                self.params, jnp.asarray(tokens), self._caches, jnp.asarray(pos)
             )
-            cur = self._sample(logits, reqs, rngs)
-
-        dt = time.perf_counter() - t0
-        for i, r in enumerate(reqs):
-            r.output = outs[i, : r.max_new_tokens]
-            r.latency_s = float(done_at[i]) if done_at[i] > 0 else dt
-            r.batch_latency_s = dt
-        return reqs
-
-    def _sample(self, logits, reqs, rngs) -> np.ndarray:
-        logits = np.asarray(logits, np.float32)  # [B, vocab]
-        out = np.zeros((len(reqs),), np.int32)
-        for i, r in enumerate(reqs):
-            if r.temperature <= 0:
-                out[i] = int(np.argmax(logits[i]))
-            else:
-                z = logits[i] / r.temperature
-                z = z - z.max()
-                p = np.exp(z)
-                p /= p.sum()
-                out[i] = int(rngs[i].choice(len(p), p=p))
-        return out
+            n_act = active()
+            self.stats["decode_steps"] += 1
+            self.stats["slot_steps_active"] += n_act
+            self.stats["slot_steps_idle"] += B - n_act
+            now += 1
+            logits_np = np.asarray(logits, np.float32)
+            for i, s in enumerate(self._slots):
+                if s is None:
+                    continue
+                nxt = _sample_one(logits_np[i], s.req, s.rng)
+                s.emitted.append(nxt)
+                s.pos += 1
+                s.cur = nxt
+                if len(s.emitted) >= s.max_new:
+                    self._finish(s, now)
+                    done.append(s.req)
+                    self._slots[i] = None     # freed: next arrival admits here
+        return sorted(done, key=lambda r: r._order)
 
     # ---------------------------------------------------------------- warmup
     def serving_buckets(self) -> List[tuple]:
-        """The (batch, seq-bucket) jit keys this engine can hit."""
+        """The (batch, seq-bucket) jit/db keys this engine can hit."""
         from ..campaign.planner import serving_buckets
 
-        return serving_buckets(self.ecfg.max_batch, self.ecfg.max_seq)
+        return serving_buckets(self.ecfg.max_batch, self.ecfg.max_seq,
+                               min_seq=self.ecfg.min_prefill_bucket)
 
     def warmup(
         self,
@@ -154,13 +287,14 @@ class ServingEngine:
         max_tokens: int = 65536,
         **tune_kwargs,
     ) -> Dict[str, Dict]:
-        """Pre-resolve kernel configs for every bucket this engine serves.
+        """Pre-resolve kernel configs for every slot-pool bucket this engine serves.
 
         This is the deployment end of a tuning campaign: pair the generic
         engine with a campaign-exported per-platform database and every
-        (batch, seq-bucket) the engine will jit resolves its kernel configs
-        up front — exact record, else cover-set entry, else heuristic — so
-        no request ever pays tuning or heuristic-miss cost mid-flight. With
+        admission-prefill (1, seq-bucket) and decode-pool (max_batch,) key
+        the engine will jit resolves its kernel configs up front — exact
+        record, else cover-set entry, else heuristic — so no request ever
+        pays tuning or heuristic-miss cost mid-flight. With
         `allow_tune=True` missing buckets are tuned on the spot instead
         (an online mini-campaign for this engine only).
 
@@ -201,8 +335,84 @@ class ServingEngine:
             )
         return resolved
 
+
+class LockStepEngine:
+    """The old static batcher, kept as the regression baseline.
+
+    Packs up to ``max_batch`` queued requests, left-pads to a shared prefill
+    length, then decodes lock-step until the *longest* member finishes; new
+    traffic waits for the whole batch. ``stats["decode_steps"]`` counts the
+    same unit as the continuous engine, so the two are directly comparable.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        run: RunConfig,
+        params,
+        mesh: jax.sharding.Mesh,
+        layout: shd.Layout,
+        ecfg: EngineConfig = EngineConfig(),
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if cfg.frontend is not None:
+            raise NotImplementedError("token-in/token-out archs only")
+        self.cfg, self.run, self.ecfg = cfg, run, ecfg
+        self.params = params
+        self.mesh, self.layout = mesh, layout
+        self.clock = clock
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(p, b, cfg, run, cache_len=ecfg.max_seq)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg, run)
+        )
+        self.queue: List[Request] = []
+        self.stats: Dict[str, int] = {"decode_steps": 0, "tokens_out": 0}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run_batch(self, reqs: List[Request]) -> List[Request]:
+        t0 = self.clock()
+        B = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        max_new = min(max(r.max_new_tokens for r in reqs), self.ecfg.max_seq - plen)
+
+        outs = np.zeros((B, max_new), np.int32)
+        rngs = [np.random.default_rng(r.seed) for r in reqs]
+        cur = np.asarray(
+            [_sample_one(np.asarray(logits, np.float32)[i], r, rngs[i])
+             for i, r in enumerate(reqs)], np.int32)
+        done_at = np.zeros((B,), np.float64)
+        for step in range(max_new):
+            outs[:, step] = cur
+            t_now = self.clock() - t0
+            for i, r in enumerate(reqs):
+                if r.max_new_tokens == step + 1:
+                    done_at[i] = t_now
+            pos = jnp.asarray(plen + step, jnp.int32)
+            logits, caches = self._decode(
+                self.params, jnp.asarray(cur)[:, None], caches, pos
+            )
+            self.stats["decode_steps"] += 1
+            cur = np.asarray(
+                [_sample_one(np.asarray(logits, np.float32)[i], r, rngs[i])
+                 for i, r in enumerate(reqs)], np.int32)
+
+        dt = self.clock() - t0
+        for i, r in enumerate(reqs):
+            r.output = outs[i, : r.max_new_tokens]
+            r.latency_s = float(done_at[i]) if done_at[i] > 0 else dt
+            self.stats["tokens_out"] += len(r.output)
+        return reqs
+
     def serve(self) -> List[Request]:
-        """Drain the queue in max_batch groups."""
+        """Drain the queue in max_batch groups (arrival times ignored)."""
         done: List[Request] = []
         while self.queue:
             batch, self.queue = (

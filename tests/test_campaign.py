@@ -262,7 +262,8 @@ def test_serving_engine_warmup(tmp_path):
     platform = detect_platform().name
     db = TuningDatabase(str(tmp_path / "db.json"))
     stored = {"block_rows": 16}
-    key = make_key("rmsnorm", platform, [(2 * 32, cfg.d_model), (cfg.d_model,)],
+    # slot-pool bucket: admission prefill is batch-1, rows = seq bucket
+    key = make_key("rmsnorm", platform, [(32, cfg.d_model), (cfg.d_model,)],
                    "float32")
     db.put(Record(key, stored, 1e-6, "wallclock", 1, 0.0))
     try:

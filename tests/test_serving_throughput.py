@@ -1,0 +1,169 @@
+"""Scheduling economics of the slot pool, on a deterministic fake clock.
+
+The engine's virtual clock IS the fake clock: 1 tick = one pool decode
+step, so `stats["decode_steps"]` and per-request `latency_steps` are exact
+integers — no wall-time flakiness. A counting wall clock is injected where
+wall latency attribution itself is under test.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.sharding import Layout
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.models.transformer import RunConfig
+from repro.serving.engine import (
+    EngineConfig, LockStepEngine, Request, ServingEngine,
+)
+
+RUN = RunConfig(remat="none", loss_chunk=16, q_chunk=16, k_chunk=16)
+
+
+class CountingClock:
+    """Deterministic wall clock: each reading is 1.0 later than the last."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        self.t += 1.0
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("qwen2_0_5b").reduced()
+    params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _reqs(cfg, spec):
+    """spec: list of (max_new, arrival). Prompts all length 9, deterministic."""
+    rs = np.random.RandomState(4)
+    out = []
+    for max_new, arrival in spec:
+        out.append(Request(
+            prompt=rs.randint(0, cfg.vocab_size, 9).astype(np.int32),
+            max_new_tokens=max_new, arrival_time=arrival,
+        ))
+    return out
+
+
+def test_inflight_admission_reduces_decode_steps(model):
+    """Skewed workload: one long request + many short ones. Lock-step decodes
+    the short ones at the long one's cadence batch after batch; the slot pool
+    retires them mid-flight and strictly saves pool decode steps."""
+    cfg, params = model
+    spec = [(24, 0.0), (4, 0.0), (4, 0.0), (4, 0.0), (4, 0.0), (4, 0.0)]
+
+    lock = LockStepEngine(
+        cfg, RUN, params, make_host_mesh(), Layout(),
+        EngineConfig(max_batch=2, max_seq=64),
+    )
+    for r in _reqs(cfg, spec):
+        lock.submit(r)
+    lock_done = lock.serve()
+    lock_steps = lock.stats["decode_steps"]
+
+    cont = ServingEngine(
+        cfg, RUN, params, make_host_mesh(), Layout(),
+        EngineConfig(max_batch=2, max_seq=64),
+    )
+    for r in _reqs(cfg, spec):
+        cont.submit(r)
+    cont_done = cont.serve()
+    cont_steps = cont.stats["decode_steps"]
+
+    assert len(lock_done) == len(cont_done) == len(spec)
+    # identical tokens out of both engines (greedy, same prompts)
+    for a, b in zip(lock_done, cont_done):
+        np.testing.assert_array_equal(a.output, b.output)
+    assert cont_steps < lock_steps, (cont_steps, lock_steps)
+    # exact accounting: lock-step pays max(new) per batch of 2:
+    #   [24,4] -> 24, [4,4] -> 4, [4,4] -> 4 = 32; the pool finishes when the
+    #   long request does (24 tokens = 23 decode ticks after its prefill)
+    assert lock_steps == 32
+    assert cont_steps == 23
+    # the saving is idle-slot work the pool reassigned mid-flight
+    assert cont.stats["tokens_out"] == sum(n for n, _ in spec)
+
+
+def test_decode_steps_equal_on_uniform_workload(model):
+    """No skew, full batches: the slot pool cannot do better than lock-step
+    (both decode max_new-1 ticks per wave) — guard against miscounting."""
+    cfg, params = model
+    spec = [(6, 0.0)] * 4
+    lock = LockStepEngine(cfg, RUN, params, make_host_mesh(), Layout(),
+                          EngineConfig(max_batch=4, max_seq=64))
+    cont = ServingEngine(cfg, RUN, params, make_host_mesh(), Layout(),
+                         EngineConfig(max_batch=4, max_seq=64))
+    for r in _reqs(cfg, spec):
+        lock.submit(r)
+    for r in _reqs(cfg, spec):
+        cont.submit(r)
+    lock.serve()
+    cont.serve()
+    # lock-step runs one extra step (it decodes after the last kept token)
+    assert cont.stats["decode_steps"] == 5
+    assert lock.stats["decode_steps"] == 6
+
+
+def test_latency_attributed_from_admission(model):
+    """Regression: a request admitted late (queued behind a long occupant)
+    is charged from ITS admission, not the batch/engine start."""
+    cfg, params = model
+    clock = CountingClock()
+    eng = ServingEngine(
+        cfg, RUN, params, make_host_mesh(), Layout(),
+        EngineConfig(max_batch=1, max_seq=64), clock=clock,
+    )
+    a, b = _reqs(cfg, [(10, 0.0), (10, 0.0)])
+    eng.submit(a)
+    eng.submit(b)
+    da, db = eng.serve()
+    # same work -> same tick latency, though b finished twice as late
+    assert da.latency_steps == db.latency_steps == 9
+    assert db.finished_step == 2 * da.finished_step == 18
+    assert db.admitted_step == 9
+    assert db.queue_steps == 9
+    # wall clock: one admission reading + one finish reading per request on
+    # the counting clock -> identical attributed latency for identical work
+    assert da.latency_s == db.latency_s
+    # steps-based p50 would have been 13.5 under whole-batch attribution
+    assert da.latency_steps + db.latency_steps == 18
+
+
+def test_late_arrival_not_charged_for_queue_wait(model):
+    """A request that ARRIVES late must not be charged for ticks before its
+    arrival either; queue_steps counts arrival -> admission only."""
+    cfg, params = model
+    eng = ServingEngine(
+        cfg, RUN, params, make_host_mesh(), Layout(),
+        EngineConfig(max_batch=2, max_seq=64),
+    )
+    spec = [(12, 0.0), (4, 5.0)]
+    a, b = _reqs(cfg, spec)
+    eng.submit(a)
+    eng.submit(b)
+    da, db = eng.serve()
+    assert db.admitted_step == 5           # a free slot was waiting
+    assert db.queue_steps == 0
+    assert db.latency_steps == 3           # its own 4 tokens, nothing else
+    assert da.latency_steps == 11
+
+
+def test_idle_engine_jumps_to_next_arrival(model):
+    """No busy-spinning: with nothing in flight the clock jumps straight to
+    the next arrival instead of burning decode steps."""
+    cfg, params = model
+    eng = ServingEngine(
+        cfg, RUN, params, make_host_mesh(), Layout(),
+        EngineConfig(max_batch=2, max_seq=64),
+    )
+    (r,) = _reqs(cfg, [(4, 100.0)])
+    eng.submit(r)
+    (done,) = eng.serve()
+    assert done.admitted_step == 100
+    assert eng.stats["decode_steps"] == 3  # only its own ticks
