@@ -7,6 +7,8 @@ Emits ``name,us_per_call,derived`` CSV rows (derived = %speedup or context).
   search.*     — Orio-style search-strategy comparison
   serving.*    — continuous (slot-pool) vs lock-step engine under Poisson
                  arrivals (benchmarks/serving_throughput.py)
+  dispatch.*   — runtime resolution overhead, cold pipeline vs warm cache
+                 (benchmarks/dispatch_overhead.py)
   kernel.*     — Pallas-kernel interpret-mode correctness-at-speed spot check
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
@@ -84,6 +86,19 @@ def main() -> None:
         "serving.continuous.steps_saved_pct",
         sres["continuous"]["steps_saved_pct"],
         "vs lockstep",
+    ))
+
+    # --- dispatch runtime: resolution-cache cold vs warm --------------------
+    from benchmarks import dispatch_overhead
+
+    dres = dispatch_overhead.bench(iters=50 if args.quick else 200)
+    rows.append((
+        "dispatch.resolve_cold", dres["cold_us"],
+        f"buckets={dres['buckets']}",
+    ))
+    rows.append((
+        "dispatch.resolve_warm", dres["warm_us"],
+        f"hit_rate={dres['cache_hit_rate']:.2f}",
     ))
 
     # --- kernels (interpret-mode; correctness-weighted spot check) ---------

@@ -23,6 +23,7 @@ import time
 import jax
 import numpy as np
 
+import repro
 from repro.configs import get_config
 from repro.distributed.sharding import Layout
 from repro.launch.mesh import make_host_mesh
@@ -45,9 +46,13 @@ def main():
 
     params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
     run = RunConfig(remat="none", loss_chunk=32, q_chunk=32, k_chunk=32)
+    # The engine gets its own scoped dispatch runtime: its kernel db/mode
+    # and telemetry are isolated from anything else in the process.
+    rt = repro.runtime(mode="auto", name="serve-example")
     engine = ServingEngine(
         cfg, run, params, make_host_mesh(), Layout(),
         EngineConfig(max_batch=4, max_seq=96),
+        runtime=rt,
     )
 
     rs = np.random.RandomState(0)
@@ -76,6 +81,9 @@ def main():
     print(f"pool: {st['decode_steps']} decode steps, {st['prefill_calls']} "
           f"admission prefills, {st['tokens_out']/max(1, st['decode_steps']):.2f} tok/step, "
           f"{st['slot_steps_idle']} idle slot-steps")
+    # Which resolution tier served each kernel×bucket during tracing
+    # (all-reference here unless REPRO_USE_PALLAS=1 / a tuned db is pinned):
+    print(rt.telemetry.report())
 
 
 if __name__ == "__main__":

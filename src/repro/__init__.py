@@ -1,4 +1,23 @@
 """repro — annotation-based autotuning for sustainable performance
 portability (Mametjanov & Norris, 2013) rebuilt as a production JAX/Pallas
-training + serving framework for TPU pods."""
-__version__ = "1.0.0"
+training + serving framework for TPU pods.
+
+Deployment API (the dispatch runtime)::
+
+    import repro
+
+    with repro.runtime(db=serve_db, mode="kernel") as rt:
+        ...                      # all kernel dispatch pinned to serve_db
+    print(rt.telemetry.report())
+
+See :mod:`repro.core.runtime` for scoped contexts, the pluggable
+ResolutionPolicy pipeline, and telemetry.
+"""
+from .core.runtime import (  # noqa: F401
+    TunedRuntime,
+    current_runtime,
+    dispatch,
+    runtime,
+)
+
+__version__ = "1.1.0"

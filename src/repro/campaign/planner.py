@@ -27,6 +27,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..configs.base import SHAPES, ArchConfig, ShapeSpec, get_config
 from ..core.database import make_key, shape_bucket
+from ..core.tuner import promoted_dtype
 
 # Kernels a campaign tunes by default. `attn_chunks` is the model-level
 # chunked-attention tunable (meaningful on any platform); the other four are
@@ -41,9 +42,10 @@ DEFAULT_KERNELS = (
 
 
 def _register_tunables() -> None:
-    """Import the modules whose @tunable decorators populate the registry."""
-    from .. import kernels  # noqa: F401  (matmul, rmsnorm, flash_attention, softmax_xent)
-    from ..models import tunables  # noqa: F401  (attn_chunks)
+    """Populate the tunable registry (delegates to the runtime's one list)."""
+    from ..core.runtime import ensure_registered
+
+    ensure_registered()
 
 
 @dataclasses.dataclass
@@ -68,9 +70,12 @@ class TuningJob:
     error: str = ""
 
     def db_key(self, platform: str) -> str:
-        # Must mirror tuner._args_key: all arg shapes, dtype of the last arg.
+        # Must mirror tuner._args_key: all arg shapes, the *promoted* dtype
+        # of all args (order-independent; e.g. softmax_xent's f32 logits ×
+        # int32 labels key as float32, not as the trailing labels dtype).
         return make_key(
-            self.kernel, platform, self.arg_shapes, self.arg_dtypes[-1], self.key_extra
+            self.kernel, platform, self.arg_shapes,
+            promoted_dtype(self.arg_dtypes), self.key_extra,
         )
 
     def bucketed_shapes(self) -> Tuple[Tuple[int, ...], ...]:

@@ -22,8 +22,9 @@ import numpy as np
 from ..core.annotate import get_tunable
 from ..core.database import TuningDatabase
 from ..core.evaluate import Evaluator, WallClockEvaluator
+from ..core.runtime import TunedRuntime
 from ..core.search import CoordinateDescent, SearchAlgorithm
-from ..core.tuner import autotune
+from ..core.tuner import autotune, promoted_dtype
 from .planner import TuningJob, _register_tunables
 from .scheduler import CampaignManifest
 from .transfer import compute_covers, warm_start_configs
@@ -74,6 +75,11 @@ def run_campaign(
     _register_tunables()
     evaluator = evaluator or WallClockEvaluator(repeats=3, warmup=1)
     ran = 0
+    # Scoped runtime for the whole campaign: any kernel dispatch nested
+    # inside variant/reference evaluation resolves against the campaign db
+    # without mutating the process default (no cross-talk with a serving
+    # engine or test running in the same process).
+    campaign_rt = TunedRuntime(db=db, name="campaign")
     for job in manifest.pending():
         if max_jobs is not None and ran >= max_jobs:
             break
@@ -83,7 +89,8 @@ def run_campaign(
         if warm_start:
             seeds = warm_start_configs(
                 db, job.kernel, manifest.platform, job.arg_shapes,
-                job.arg_dtypes[-1], job.key_extra, space=tunable.space,
+                promoted_dtype(job.arg_dtypes), job.key_extra,
+                space=tunable.space,
             )
         search = (
             search_factory(job) if search_factory
@@ -91,11 +98,12 @@ def run_campaign(
         )
         try:
             args = materialize_args(job, seed=arg_seed)
-            res = autotune(
-                tunable, args,
-                search=search, evaluator=evaluator, db=db,
-                key_extra=job.key_extra, seed_configs=seeds,
-            )
+            with campaign_rt:
+                res = autotune(
+                    tunable, args,
+                    search=search, evaluator=evaluator, db=db,
+                    key_extra=job.key_extra, seed_configs=seeds,
+                )
             job.status = "done"
             job.evaluations = res.evaluations
             job.best_objective = res.best_objective

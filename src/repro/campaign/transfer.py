@@ -45,6 +45,14 @@ def warm_start_configs(
     (a TPU winner is still a far better guess on a new TPU generation than
     the space default). The exact target key is excluded — that case is a
     plain database hit, not a transfer.
+
+    `dtype` must be the *promoted* dtype of the call's array args (see
+    :func:`repro.core.tuner.promoted_dtype`) — database keys are stored
+    under it, so passing a single argument's dtype would silently demote
+    every tier-0 candidate to tier-1. Pre-promotion records (keyed by the
+    last arg's dtype) still rank as tier-1 neighbours, which is exactly the
+    migration path: an old database warm-starts the re-tune that rebuilds
+    its records under the new keys.
     """
     target_shapes = tuple(shape_bucket(s) for s in arg_shapes)
     scored: List[Tuple[Tuple[int, float, float], Config]] = []

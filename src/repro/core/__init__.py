@@ -3,9 +3,14 @@
 Public API:
 
     from repro.core import (
-        tunable, ParamSpace, PowerOfTwoParam, EnumParam, IntParam, BoolParam,
-        Constraint, autotune, tune_or_lookup, TuningDatabase, default_db,
-        make_search, WallClockEvaluator, CostModelEvaluator, detect_platform,
+        tunable, DispatchSpec, ParamSpace, PowerOfTwoParam, EnumParam,
+        IntParam, BoolParam, Constraint, autotune, tune_or_lookup,
+        TuningDatabase, default_db, make_search, WallClockEvaluator,
+        CostModelEvaluator, detect_platform,
+        # dispatch runtime (see core/runtime.py for the policy pipeline;
+        # the `runtime(...)` factory lives at the top level: repro.runtime)
+        TunedRuntime, current_runtime, dispatch, entry_point,
+        ResolutionPolicy, ExactHit, TuneNow, CoverSet, Heuristic, Reference,
     )
 """
 from .params import (
@@ -18,7 +23,7 @@ from .params import (
     ParamSpace,
     PowerOfTwoParam,
 )
-from .annotate import Tunable, get_tunable, registered, tunable
+from .annotate import DispatchSpec, Tunable, get_tunable, registered, tunable
 from .database import (
     Record,
     TuningDatabase,
@@ -51,4 +56,24 @@ from .search import (
     SimulatedAnnealing,
     make_search,
 )
-from .tuner import TuningResult, autotune, tune_or_lookup
+from .tuner import TuningResult, autotune, promoted_dtype, tune_or_lookup
+# NOTE: the `runtime(...)` factory itself is deliberately NOT imported here —
+# binding that name in this package would shadow the `repro.core.runtime`
+# submodule. Use `repro.runtime(...)` (top-level re-export) or
+# `TunedRuntime(...)` directly.
+from .runtime import (
+    CoverSet,
+    ExactHit,
+    Heuristic,
+    Reference,
+    Resolution,
+    ResolutionPolicy,
+    ResolutionRequest,
+    Telemetry,
+    TunedRuntime,
+    TuneNow,
+    current_runtime,
+    default_policy,
+    dispatch,
+    entry_point,
+)

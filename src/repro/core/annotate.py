@@ -14,15 +14,64 @@ program still runs as the reference implementation.
     matmul(x, w)                  # default config (the 'unannotated' program)
     matmul.variant(bm=128, ...)   # one concrete variant (a transformed code)
     matmul.tune(x, w)             # run the autotuner -> best variant
+
+Deployment is declared here too: the optional ``dispatch=DispatchSpec(...)``
+argument tells the dispatch runtime (:mod:`repro.core.runtime`) everything it
+needs to auto-generate a deployment entry point — which reference fn backs
+the kernel, how to derive the database ``key_extra`` from call kwargs, and
+how to canonicalize arguments (e.g. rmsnorm's flatten-to-2D/reshape-back).
+A new kernel therefore needs exactly one decorator: no hand-written wrapper
+in ``kernels/ops.py``, no planner or serving edits.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Sequence
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 from .params import Config, ParamSpace
 
 _REGISTRY: Dict[str, "Tunable"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchSpec:
+    """Declarative deployment spec for one tunable.
+
+    The dispatch runtime consumes this to build the kernel's deployment
+    entry point; every field is optional:
+
+    * ``reference`` — the fallback / reference-mode implementation, called as
+      ``reference(*args, **call_kwargs)``. Defaults to the tunable's tuning
+      reference (``Tunable.reference``).
+    * ``key_extra`` — maps the *call kwargs* to the database key suffix
+      (e.g. flash attention's ``f"c{causal}w{window}"``), so semantically
+      different calls with identical shapes get distinct records.
+    * ``canonicalize`` — ``(*args) -> (canon_args, restore)``: rewrites the
+      positional args into the layout the kernel (and its db keys) expect,
+      plus a function applied to the kernel output to undo the rewrite.
+      rmsnorm uses this to flatten ``[..., d] -> [rows, d]`` and reshape
+      back. The reference path always sees the *original* args.
+    * ``example`` — ``() -> (args, kwargs)``: small representative arguments
+      (interpret-mode friendly) used by the registry parity tests and the
+      dispatch-overhead benchmark, so coverage of a new kernel is automatic.
+    """
+
+    reference: Optional[Callable] = None
+    key_extra: Optional[Callable[[Dict[str, Any]], str]] = None
+    canonicalize: Optional[Callable[..., Tuple[tuple, Callable]]] = None
+    example: Optional[Callable[[], Tuple[tuple, Dict[str, Any]]]] = None
+
+    def reference_for(self, tunable: "Tunable") -> Optional[Callable]:
+        return self.reference if self.reference is not None else tunable.reference
+
+    def extra_for(self, call_kwargs: Dict[str, Any]) -> str:
+        return self.key_extra(call_kwargs) if self.key_extra else ""
+
+    def canon(self, args: tuple) -> Tuple[tuple, Callable]:
+        if self.canonicalize is None:
+            return args, lambda out: out
+        return self.canonicalize(*args)
 
 
 class Tunable:
@@ -34,6 +83,7 @@ class Tunable:
         reference: Optional[Callable] = None,
         default: Optional[Config] = None,
         heuristic: Optional[Callable[..., Config]] = None,
+        dispatch: Optional[DispatchSpec] = None,
     ):
         self.name = name
         self.fn = fn
@@ -43,6 +93,10 @@ class Tunable:
         # Shape-aware default: maps concrete args -> a good starting config
         # (the 'vendor library' baseline the tuner must beat).
         self.heuristic = heuristic
+        # Deployment declaration consumed by repro.core.runtime (None means
+        # dispatch with defaults: tuning reference, no key_extra, identity
+        # canonicalization).
+        self.dispatch = dispatch
         functools.update_wrapper(self, fn)
 
     # -- variants -------------------------------------------------------------
@@ -63,9 +117,22 @@ class Tunable:
         return functools.partial(self.fn, **config)
 
     def __call__(self, *args, **overrides):
+        """Run with the default config, plus validated knob overrides.
+
+        Knob overrides (keys in the space) are merged into the default config
+        and the result is validated via ``space.why_invalid`` — an off-domain
+        or constraint-violating override raises with the reason, matching
+        :meth:`variant`. Non-knob kwargs (``eps``, ``causal``, ``interpret``,
+        ...) pass through to the implementation untouched.
+        """
         cfg = self.default_config(*args)
-        cfg.update(overrides)
-        return self.fn(*args, **cfg)
+        knobs = set(self.space.names)
+        passthrough = {k: v for k, v in overrides.items() if k not in knobs}
+        cfg.update({k: v for k, v in overrides.items() if k in knobs})
+        why = self.space.why_invalid(cfg)
+        if why is not None:
+            raise ValueError(f"invalid config for {self.name}: {why}")
+        return self.fn(*args, **cfg, **passthrough)
 
     # -- tuning ----------------------------------------------------------------
     def tune(self, *args, **kwargs):
@@ -83,9 +150,10 @@ def tunable(
     reference: Optional[Callable] = None,
     default: Optional[Config] = None,
     heuristic: Optional[Callable[..., Config]] = None,
+    dispatch: Optional[DispatchSpec] = None,
 ) -> Callable[[Callable], Tunable]:
     def deco(fn: Callable) -> Tunable:
-        t = Tunable(name, fn, space, reference, default, heuristic)
+        t = Tunable(name, fn, space, reference, default, heuristic, dispatch)
         _REGISTRY[name] = t
         return t
 

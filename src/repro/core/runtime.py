@@ -1,0 +1,585 @@
+"""The dispatch runtime: scoped tuned contexts + pluggable resolution.
+
+This module is the deployment half of the annotation story. ``@tunable``
+declares *what* can specialize (:mod:`repro.core.annotate`); the runtime
+decides, per call site, *which* implementation and config actually runs —
+and makes that decision scoped, swappable, and observable:
+
+* **Scoped contexts** — a :class:`TunedRuntime` pins a tuning database, a
+  mode (``"kernel"`` | ``"reference"`` | ``"auto"``), and a resolution
+  policy for everything executed under ``with`` it::
+
+      with repro.runtime(db=serve_db, mode="kernel") as rt:
+          engine.serve()            # every kernel dispatch uses serve_db
+      print(rt.telemetry.report())
+
+  Runtimes nest (inner wins; unspecified fields inherit from the enclosing
+  runtime at construction) and live on a context-local stack, so serving,
+  campaign evaluation, and tests each pin their own db/mode without
+  cross-talk — including across threads: a fresh thread starts at the
+  process-default runtime, never at another thread's scope.
+
+* **Pluggable resolution** — the exact→cover→heuristic chain that used to
+  be hard-coded in ``tune_or_lookup`` is a pipeline of
+  :class:`ResolutionPolicy` objects. The default is
+  ``(ExactHit, TuneNow, CoverSet, Heuristic, Reference)``; pass
+  ``policy=(ExactHit(), Reference())`` for a "run only measured configs,
+  else fall back to reference" deployment, or insert a custom policy (an
+  object with ``name`` and ``resolve(request)``) anywhere in the chain.
+
+* **Telemetry** — every dispatch records which tier served which
+  kernel×bucket (:class:`Telemetry`; tiers ``override | exact | tune |
+  cover | heuristic | reference`` plus cache hits). This is the paper's
+  sustained-performance accounting: after a warmed serving run,
+  ``telemetry.snapshot()`` shows exactly how much traffic ran on tuned
+  records vs cover-set entries vs the vendor-baseline heuristic.
+
+* **Resolution cache** — per-runtime ``{db key: Resolution}``; repeated jit
+  traces of the same shape bucket stop re-hitting the database (see
+  ``benchmarks/dispatch_overhead.py`` for the cold/warm gap).
+  ``clear_cache()`` after mutating the database mid-flight.
+
+Deployment entry points are generated from the registry
+(:func:`entry_point` / :func:`dispatch`): ``kernels/ops.py`` is nothing but
+back-compat shims over them, so adding a kernel is one ``@tunable(...,
+dispatch=DispatchSpec(...))`` decorator with zero edits anywhere else.
+
+Migration (old global-mode API → runtime API)::
+
+    ops.set_kernel_mode(True)          ->  with repro.runtime(mode="kernel"): ...
+    ops.kernels_enabled()              ->  repro.current_runtime().kernel_mode_active
+    set_default_db(db); ops.matmul(..) ->  with repro.runtime(db=db): dispatch("matmul", ..)
+
+The old names still work (they mutate/read the process-default runtime) but
+are deprecated; new code should never reach for process-global state.
+"""
+from __future__ import annotations
+
+import contextvars
+import dataclasses
+import os
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+from .annotate import DispatchSpec, Tunable, get_tunable
+from .database import TuningDatabase, default_db
+from .params import Config
+from .platform import detect_platform
+
+_MODES = ("kernel", "reference", "auto")
+
+_platform_name: Optional[str] = None
+
+
+def _platform() -> str:
+    """Memoized platform key: the backend cannot change within a process,
+    and ``jax.devices()`` per dispatch would dominate warm resolution."""
+    global _platform_name
+    if _platform_name is None:
+        _platform_name = detect_platform().name
+    return _platform_name
+
+# Resolution tiers, in the order the default pipeline consults them.
+TIERS = ("override", "exact", "tune", "cover", "heuristic", "reference")
+
+
+# ---------------------------------------------------------------------------
+# Resolution requests / results / policies
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ResolutionRequest:
+    """Everything a policy may consult to resolve one kernel×bucket."""
+
+    tunable: Tunable
+    args: tuple                      # canonicalized positional args
+    key: str                         # full database key (platform+bucket+dtype)
+    key_extra: str
+    db: TuningDatabase
+    platform: str
+    runtime: "TunedRuntime"
+    # Per-call effective tuning permissions (runtime defaults, possibly
+    # overridden by the resolve() caller — e.g. warmup(allow_tune=True)
+    # must not mutate a runtime other threads are dispatching through).
+    allow_tune: bool = False
+    tune_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Resolution:
+    """Outcome of resolving one kernel×bucket.
+
+    ``config=None`` means "execute the reference implementation" (the
+    terminal :class:`Reference` tier); otherwise the config is bound as a
+    kernel variant.
+    """
+
+    config: Optional[Config]
+    tier: str
+
+
+class ResolutionPolicy:
+    """One tier of the resolution pipeline.
+
+    ``resolve`` returns a :class:`Resolution` to stop the chain, or ``None``
+    to pass the request to the next policy. ``name`` is the telemetry tier
+    label.
+    """
+
+    name = "policy"
+
+    def resolve(self, req: ResolutionRequest) -> Optional[Resolution]:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__}>"
+
+
+class ExactHit(ResolutionPolicy):
+    """A stored record for this exact key: zero-cost specialization."""
+
+    name = "exact"
+
+    def resolve(self, req: ResolutionRequest) -> Optional[Resolution]:
+        rec = req.db.lookup(req.key)
+        if rec is not None and req.tunable.space.is_valid(rec.config):
+            return Resolution(dict(rec.config), self.name)
+        return None
+
+
+class TuneNow(ResolutionPolicy):
+    """Tune on the spot (writes the record) — only if the runtime allows it."""
+
+    name = "tune"
+
+    def __init__(self, **tune_kwargs: Any):
+        self.tune_kwargs = tune_kwargs
+
+    def resolve(self, req: ResolutionRequest) -> Optional[Resolution]:
+        if not req.allow_tune:
+            return None
+        from .tuner import autotune  # late: tuner imports annotate/database
+
+        kwargs = dict(self.tune_kwargs)
+        kwargs.update(req.tune_kwargs)
+        res = autotune(
+            req.tunable, req.args, db=req.db, key_extra=req.key_extra, **kwargs
+        )
+        return Resolution(dict(res.best_config), self.name)
+
+
+class CoverSet(ResolutionPolicy):
+    """Nearest 'few fit most' cover entry: measured config, unseen bucket."""
+
+    name = "cover"
+
+    def resolve(self, req: ResolutionRequest) -> Optional[Resolution]:
+        shapes = [tuple(a.shape) for a in req.args if hasattr(a, "shape")]
+        for entry in req.db.lookup_cover(req.tunable.name, req.platform, shapes):
+            cfg = entry.get("config")
+            if cfg is not None and req.tunable.space.is_valid(cfg):
+                return Resolution(dict(cfg), self.name)
+        return None
+
+
+class Heuristic(ResolutionPolicy):
+    """The shape heuristic default — the 'vendor baseline'. Always succeeds."""
+
+    name = "heuristic"
+
+    def resolve(self, req: ResolutionRequest) -> Optional[Resolution]:
+        return Resolution(req.tunable.default_config(*req.args), self.name)
+
+
+class Reference(ResolutionPolicy):
+    """Terminal tier: run the reference implementation, not a kernel variant.
+
+    In the default pipeline :class:`Heuristic` always resolves first, so
+    this only fires in trimmed pipelines such as ``(ExactHit(),
+    Reference())`` — "tuned configs or bust".
+    """
+
+    name = "reference"
+
+    def resolve(self, req: ResolutionRequest) -> Optional[Resolution]:
+        return Resolution(None, self.name)
+
+
+def default_policy() -> Tuple[ResolutionPolicy, ...]:
+    return (ExactHit(), TuneNow(), CoverSet(), Heuristic(), Reference())
+
+
+# ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+
+class Telemetry:
+    """Per-runtime counters: which tier served each kernel×bucket.
+
+    ``tiers``    — total dispatches per tier.
+    ``by_key``   — ``{db key: {tier: count}}`` (reference-mode and explicit
+                   ``config=`` dispatches, which never compute a bucket key,
+                   are recorded under ``"<kernel>|*"``).
+    ``cache_hits`` / ``calls`` — resolution-cache effectiveness.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        with getattr(self, "_lock", threading.Lock()):
+            self.tiers: Dict[str, int] = {}
+            self.by_key: Dict[str, Dict[str, int]] = {}
+            self.calls = 0
+            self.cache_hits = 0
+
+    def record(self, kernel: str, key: Optional[str], tier: str,
+               cached: bool = False) -> None:
+        k = key if key is not None else f"{kernel}|*"
+        with self._lock:
+            self.calls += 1
+            if cached:
+                self.cache_hits += 1
+            self.tiers[tier] = self.tiers.get(tier, 0) + 1
+            per = self.by_key.setdefault(k, {})
+            per[tier] = per.get(tier, 0) + 1
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache_hits / self.calls if self.calls else 0.0
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "calls": self.calls,
+                "cache_hits": self.cache_hits,
+                "cache_hit_rate": self.cache_hit_rate,
+                "tiers": dict(self.tiers),
+                "by_key": {k: dict(v) for k, v in self.by_key.items()},
+            }
+
+    def report(self) -> str:
+        """Human-readable sustained-performance accounting."""
+        snap = self.snapshot()
+        lines = [
+            "dispatch telemetry: %d calls, %d cache hits (%.0f%%)"
+            % (snap["calls"], snap["cache_hits"], 100 * snap["cache_hit_rate"])
+        ]
+        for tier in TIERS:
+            if tier in snap["tiers"]:
+                lines.append(f"  tier {tier:<9} {snap['tiers'][tier]}")
+        for key in sorted(snap["by_key"]):
+            per = snap["by_key"][key]
+            detail = ", ".join(f"{t}={per[t]}" for t in TIERS if t in per)
+            lines.append(f"  {key}: {detail}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+
+_INHERIT = object()
+
+# Context-local stack of active runtimes. contextvars give us both asyncio-
+# and thread-isolation: a new thread starts with an empty stack and falls
+# back to the process-default runtime.
+_stack: "contextvars.ContextVar[Tuple[TunedRuntime, ...]]" = contextvars.ContextVar(
+    "repro_runtime_stack", default=()
+)
+
+_root_lock = threading.Lock()
+_root: Optional["TunedRuntime"] = None
+
+
+class TunedRuntime:
+    """A scoped dispatch context: db × mode × policy × cache × telemetry.
+
+    Parameters left unspecified inherit from the runtime that is active at
+    construction time (ultimately the process-default runtime), so
+    ``repro.runtime(mode="reference")`` inside a serving scope keeps the
+    serving database while flipping the implementation path.
+
+    ``db=None`` is meaningful: it means "whatever :func:`default_db`
+    resolves to at call time" — the process-default runtime uses it so
+    ``set_default_db`` keeps working mid-session.
+    """
+
+    def __init__(
+        self,
+        db: Union[TuningDatabase, None, object] = _INHERIT,
+        mode: Union[str, object] = _INHERIT,
+        policy: Union[Sequence[ResolutionPolicy], None, object] = _INHERIT,
+        allow_tune: Union[bool, object] = _INHERIT,
+        tune_kwargs: Union[Dict[str, Any], None, object] = _INHERIT,
+        name: str = "",
+        _is_root: bool = False,
+    ):
+        parent = None if _is_root else current_runtime()
+        self.db = db if db is not _INHERIT else (parent.db if parent else None)
+        self.mode = mode if mode is not _INHERIT else (parent.mode if parent else "auto")
+        if self.mode not in _MODES:
+            raise ValueError(f"mode {self.mode!r} not in {_MODES}")
+        pol = policy if policy is not _INHERIT else (parent.policy if parent else None)
+        self.policy: Tuple[ResolutionPolicy, ...] = (
+            tuple(pol) if pol is not None else default_policy()
+        )
+        self.allow_tune = bool(
+            allow_tune if allow_tune is not _INHERIT
+            else (parent.allow_tune if parent else False)
+        )
+        tk = tune_kwargs if tune_kwargs is not _INHERIT else None
+        self.tune_kwargs: Dict[str, Any] = dict(tk or {})
+        self.name = name or ("default" if _is_root else f"runtime@{id(self):x}")
+        self.telemetry = Telemetry()
+        # key -> (db it was resolved against, Resolution). The db reference
+        # is validated on lookup so a swapped database (rt.db reassignment,
+        # or set_default_db for db=None runtimes) can never serve a stale
+        # resolution from its predecessor.
+        self._cache: Dict[str, Tuple[TuningDatabase, Resolution]] = {}
+        self._cache_lock = threading.Lock()
+
+    # -- scoping -------------------------------------------------------------
+    # Deliberately token-free: one runtime instance may be entered
+    # concurrently from several threads AND from interleaved asyncio tasks
+    # on one thread (each task/thread sees its own copy of the contextvar
+    # stack). A contextvar Token would have to be reset in the exact context
+    # that created it; popping the innermost occurrence of `self` from the
+    # current context's stack is equivalent for our usage and safe in all of
+    # the above.
+    def __enter__(self) -> "TunedRuntime":
+        _stack.set(_stack.get() + (self,))
+        return self
+
+    def __exit__(self, *exc) -> None:
+        s = _stack.get()
+        for i in range(len(s) - 1, -1, -1):
+            if s[i] is self:
+                _stack.set(s[:i] + s[i + 1:])
+                return
+
+    # -- mode ----------------------------------------------------------------
+    @property
+    def kernel_mode_active(self) -> bool:
+        """Whether dispatch takes the kernel path (vs reference).
+
+        ``"auto"`` reads ``REPRO_USE_PALLAS`` lazily, so flipping the env var
+        between calls behaves the same as the old import-time ``_STATE``
+        for test processes that set it up front, while also supporting
+        per-leg CI overrides.
+        """
+        if self.mode == "kernel":
+            return True
+        if self.mode == "reference":
+            return False
+        return os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+    # -- cache ---------------------------------------------------------------
+    def clear_cache(self) -> None:
+        with self._cache_lock:
+            self._cache.clear()
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    # -- resolution ----------------------------------------------------------
+    def resolve(self, tunable: Union[str, Tunable], args: Sequence[Any],
+                key_extra: str = "",
+                allow_tune: Optional[bool] = None,
+                tune_kwargs: Optional[Dict[str, Any]] = None) -> Resolution:
+        """Run the policy pipeline for (tunable, args), with caching.
+
+        Returns the cached :class:`Resolution` when this bucket key was
+        resolved before under this runtime against the same database
+        (telemetry still counts the call, flagged as a cache hit).
+
+        ``allow_tune`` / ``tune_kwargs`` override the runtime's defaults for
+        THIS call only (how warmup grants TuneNow permission without
+        mutating a runtime other threads may be dispatching through). A
+        cached resolution wins over ``allow_tune=True`` — ``clear_cache()``
+        first to force re-tuning of already-resolved buckets.
+        """
+        from .tuner import _args_key  # late: tuner imports this module's deps
+
+        tunable = _as_tunable(tunable)
+        db = self.db if self.db is not None else default_db()
+        platform = _platform()
+        key = _args_key(tunable, args, platform, key_extra)
+        with self._cache_lock:
+            hit = self._cache.get(key)
+        if hit is not None and hit[0] is db:
+            self.telemetry.record(tunable.name, key, hit[1].tier, cached=True)
+            return hit[1]
+        req = ResolutionRequest(
+            tunable=tunable, args=tuple(args), key=key, key_extra=key_extra,
+            db=db, platform=platform, runtime=self,
+            allow_tune=self.allow_tune if allow_tune is None else bool(allow_tune),
+            tune_kwargs={**self.tune_kwargs, **(tune_kwargs or {})},
+        )
+        res: Optional[Resolution] = None
+        for pol in self.policy:
+            res = pol.resolve(req)
+            if res is not None:
+                break
+        if res is None:
+            # An exhausted custom pipeline falls back to reference execution.
+            res = Resolution(None, "reference")
+        with self._cache_lock:
+            self._cache[key] = (db, res)
+        self.telemetry.record(tunable.name, key, res.tier)
+        return res
+
+    # -- dispatch ------------------------------------------------------------
+    def dispatch(self, tunable: Union[str, Tunable], *args,
+                 config: Optional[Config] = None, **kwargs):
+        """Execute one tunable through this runtime's resolution chain.
+
+        Reference mode wins over everything — including ``config=`` — just
+        like the old ``ops.*`` wrappers: it is the escape hatch for hosts
+        where the kernel cannot lower at all (multi-pod dry-runs), so an
+        explicit config must not force a kernel there. In kernel mode,
+        ``config=`` bypasses resolution (tier ``override``); otherwise the
+        resolved config is bound as a kernel variant on the canonicalized
+        arguments, and the :class:`Reference` tier executes the dispatch
+        spec's reference fn on the *original* arguments.
+        """
+        tunable = _as_tunable(tunable)
+        spec = tunable.dispatch or _DEFAULT_SPEC
+        if not self.kernel_mode_active:
+            self.telemetry.record(tunable.name, None, "reference")
+            return _reference_call(tunable, spec, args, kwargs)
+        if config is not None:
+            self.telemetry.record(tunable.name, None, "override")
+            cargs, restore = spec.canon(args)
+            return restore(tunable.variant(**config)(*cargs, **kwargs))
+        cargs, restore = spec.canon(args)
+        res = self.resolve(tunable, cargs, key_extra=spec.extra_for(kwargs))
+        if res.config is None:
+            return _reference_call(tunable, spec, args, kwargs)
+        return restore(tunable.variant(**res.config)(*cargs, **kwargs))
+
+    def __repr__(self) -> str:
+        db = "default" if self.db is None else (self.db.path or "memory")
+        return (
+            f"<TunedRuntime {self.name} mode={self.mode} db={db} "
+            f"policy=({', '.join(p.name for p in self.policy)})>"
+        )
+
+
+_DEFAULT_SPEC = DispatchSpec()
+
+
+def _reference_call(tunable: Tunable, spec: DispatchSpec, args, kwargs):
+    ref = spec.reference_for(tunable)
+    if ref is None:
+        raise TypeError(
+            f"tunable {tunable.name!r} has no reference implementation to "
+            "dispatch to in reference mode; declare one via @tunable("
+            "reference=...) or DispatchSpec(reference=...)"
+        )
+    return ref(*args, **kwargs)
+
+
+def _as_tunable(t: Union[str, Tunable]) -> Tunable:
+    if isinstance(t, Tunable):
+        return t
+    try:
+        return get_tunable(t)
+    except KeyError:
+        ensure_registered()
+        return get_tunable(t)
+
+
+def ensure_registered() -> None:
+    """Import the modules whose @tunable decorators populate the registry.
+
+    This is the ONE list of tunable-bearing modules (the campaign planner's
+    ``_register_tunables`` delegates here) — extend it when a new module
+    grows ``@tunable`` sites. The upward imports are deliberately lazy:
+    they run at first dispatch-by-name, never at ``repro.core`` import.
+    """
+    from .. import kernels  # noqa: F401
+    from ..models import tunables  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# Module-level API (what `repro` re-exports)
+# ---------------------------------------------------------------------------
+
+
+def _root_runtime() -> TunedRuntime:
+    global _root
+    if _root is None:
+        with _root_lock:
+            if _root is None:
+                _root = TunedRuntime(
+                    db=None, mode="auto", policy=None, allow_tune=False,
+                    tune_kwargs=None, name="default", _is_root=True,
+                )
+    return _root
+
+
+def current_runtime() -> TunedRuntime:
+    """The innermost active runtime, or the process-default one."""
+    s = _stack.get()
+    return s[-1] if s else _root_runtime()
+
+
+def runtime(
+    db: Union[TuningDatabase, None, object] = _INHERIT,
+    mode: Union[str, object] = _INHERIT,
+    policy: Union[Sequence[ResolutionPolicy], None, object] = _INHERIT,
+    allow_tune: Union[bool, object] = _INHERIT,
+    tune_kwargs: Union[Dict[str, Any], None, object] = _INHERIT,
+    name: str = "",
+) -> TunedRuntime:
+    """Create a scoped dispatch runtime (use as ``with repro.runtime(...)``)."""
+    return TunedRuntime(
+        db=db, mode=mode, policy=policy, allow_tune=allow_tune,
+        tune_kwargs=tune_kwargs, name=name,
+    )
+
+
+def dispatch(tunable: Union[str, Tunable], *args,
+             config: Optional[Config] = None, **kwargs):
+    """Dispatch through whichever runtime is active at the call."""
+    return current_runtime().dispatch(tunable, *args, config=config, **kwargs)
+
+
+def entry_point(name: str) -> Callable:
+    """An auto-generated deployment entry point for a registered tunable.
+
+    The returned callable has the old ``ops.<kernel>`` contract —
+    ``fn(*args, config=None, **call_kwargs)`` — and routes through
+    :func:`current_runtime`, so it honours whatever scope is active where
+    it is *called*, not where it was created.
+    """
+
+    def call(*args, config: Optional[Config] = None, **kwargs):
+        return current_runtime().dispatch(name, *args, config=config, **kwargs)
+
+    call.__name__ = name
+    call.__qualname__ = name
+    call.__doc__ = (
+        f"Registry-dispatched deployment entry point for tunable {name!r} "
+        "(resolution: the active TunedRuntime's policy pipeline)."
+    )
+    return call
+
+
+def kernels_enabled() -> bool:
+    """Deprecated shim: whether the active runtime takes the kernel path."""
+    return current_runtime().kernel_mode_active
+
+
+def set_kernel_mode(use_pallas: bool) -> None:
+    """Deprecated shim: flip the *process-default* runtime's mode.
+
+    Prefer ``with repro.runtime(mode=...)``. This mutates global state and
+    does not affect (or see) scoped runtimes already on the stack.
+    """
+    _root_runtime().mode = "kernel" if use_pallas else "reference"

@@ -15,6 +15,7 @@ either tune now (`allow_tune=True`) or fall back to the shape heuristic.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import logging
 import time
 from typing import Any, Callable, Dict, Optional, Sequence
@@ -48,14 +49,46 @@ class TuningResult:
         return self.default_objective / self.best_objective
 
 
+def promoted_dtype(dtypes: Sequence[Any]) -> str:
+    """Order-independent key dtype: the JAX type promotion of all array dtypes.
+
+    Keying on any *single* argument's dtype makes mixed-dtype calls (bf16
+    activations × f32 weights) produce argument-order-dependent database
+    keys. The promoted dtype is symmetric in the arguments and names the
+    precision the call actually computes in.
+
+    Migration note: keys for mixed-dtype calls recorded before this change
+    (which used the dtype of the *last* array argument — e.g. ``int32`` for
+    softmax_xent's labels) will no longer hit; a campaign re-run or re-tune
+    rebuilds them under the promoted-dtype key.
+    """
+    if not dtypes:
+        return "f32"
+    try:
+        return _promote_cached(tuple(dtypes))
+    except TypeError:          # unhashable dtype-likes: promote uncached
+        import jax.numpy as jnp
+
+        return str(jnp.result_type(*dtypes))
+
+
+@functools.lru_cache(maxsize=512)
+def _promote_cached(dtypes: tuple) -> str:
+    # jnp.result_type costs ~25us; dispatch pays this per call, so memoize
+    # on the (hashable) dtype tuple.
+    import jax.numpy as jnp
+
+    return str(jnp.result_type(*dtypes))
+
+
 def _args_key(tunable: Tunable, args: Sequence[Any], platform: str, extra: str = "") -> str:
     shapes = []
-    dtype = "f32"
+    dtypes = []
     for a in args:
         if hasattr(a, "shape"):
             shapes.append(tuple(a.shape))
-            dtype = str(getattr(a, "dtype", "f32"))
-    return make_key(tunable.name, platform, shapes, dtype, extra)
+            dtypes.append(getattr(a, "dtype", "float32"))
+    return make_key(tunable.name, platform, shapes, promoted_dtype(dtypes), extra)
 
 
 def autotune(

@@ -5,7 +5,7 @@ Modules:
   attention.py — flash attention (causal/SWA/GQA), tunable (block_q, block_k)
   rmsnorm.py   — fused RMSNorm, tunable block_rows
   xent.py      — fused large-vocab cross entropy, tunable (block_rows, block_v)
-  ops.py       — deployment dispatch via the tuning database
+  ops.py       — DEPRECATED shims over the dispatch runtime (repro.core.runtime)
   ref.py       — reference oracles (correctness gate + dry-run lowering path)
 """
 from . import ops, ref

@@ -23,7 +23,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from . import _compat
-from ..core import Constraint, ParamSpace, PowerOfTwoParam, tunable
+from ..core import Constraint, DispatchSpec, ParamSpace, PowerOfTwoParam, tunable
 from ..core.platform import TPU_V5E
 from . import ref
 
@@ -197,11 +197,26 @@ def _attn_heuristic(q, k, v):
             "block_k": 512 if s_k >= 512 else 128}
 
 
+def _attn_example():
+    import numpy as np
+
+    rs = np.random.RandomState(0)
+    mk = lambda *s: jnp.asarray(rs.randn(*s) * 0.3, jnp.float32)
+    return (mk(1, 4, 128, 16), mk(1, 2, 128, 16), mk(1, 2, 128, 16)), {"causal": True}
+
+
 @tunable(
     "flash_attention",
     space=ATTENTION_SPACE,
     reference=functools.partial(ref.attention, causal=True),
     heuristic=_attn_heuristic,
+    dispatch=DispatchSpec(
+        # Reference takes the same (causal, window, scale) call kwargs.
+        reference=ref.attention,
+        # Same shapes, different masking semantics => distinct db records.
+        key_extra=lambda kw: f"c{kw.get('causal', True)}w{kw.get('window', 0)}",
+        example=_attn_example,
+    ),
 )
 def flash_attention(
     q, k, v, *, block_q: int, block_k: int,

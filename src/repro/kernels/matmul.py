@@ -17,7 +17,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from . import _compat
-from ..core import Constraint, ParamSpace, PowerOfTwoParam, tunable
+from ..core import Constraint, DispatchSpec, ParamSpace, PowerOfTwoParam, tunable
 from ..core.platform import TPU_V5E
 from . import ref
 
@@ -118,7 +118,23 @@ def _matmul_heuristic(x, w):
     }
 
 
-@tunable("matmul", space=MATMUL_SPACE, reference=ref.matmul, heuristic=_matmul_heuristic)
+def _matmul_example():
+    import numpy as np
+
+    rs = np.random.RandomState(0)
+    return (
+        jnp.asarray(rs.randn(32, 64), jnp.float32),
+        jnp.asarray(rs.randn(64, 16), jnp.float32),
+    ), {}
+
+
+@tunable(
+    "matmul",
+    space=MATMUL_SPACE,
+    reference=ref.matmul,
+    heuristic=_matmul_heuristic,
+    dispatch=DispatchSpec(example=_matmul_example),
+)
 def matmul(x, w, *, bm: int, bn: int, bk: int, interpret: Optional[bool] = None):
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"

@@ -1,80 +1,73 @@
-"""Deployment wrappers: tuning-database dispatch + reference fallback.
+"""DEPRECATED deployment shims — migration guide from the global-mode API.
 
-This is where the paper's 'sustainable performance portability' is cashed
-out at runtime: callers use `ops.matmul(x, w)` and get
+This module used to *be* the deployment surface: a hand-written wrapper per
+kernel, a process-global ``_STATE`` mode dict, and a hard-coded
+exact→cover→heuristic chain inside each wrapper. All of that now lives in
+the dispatch runtime (:mod:`repro.core.runtime`); what remains here is a
+thin back-compat veneer generated from the tunable registry.
 
-  1. the stored best variant for (platform, kernel, shape-bucket, dtype) if
-     the tuning database has one (zero-cost specialization — a campaign-
-     exported database makes this the common case),
-  2. else the nearest 'few fit most' cover-set entry the campaign clustered
-     from its winners — a measured config from the closest tuned bucket,
-     still zero tuning at serve time,
-  3. else the shape heuristic default (the 'vendor baseline'),
-  4. or the pure-jnp reference path when Pallas is disabled
-     (`REPRO_USE_PALLAS=0`, or during multi-pod dry-runs, where Pallas
-     cannot lower for TPU from a CPU host).
+Old API (still works, discouraged)           New API
+-----------------------------------------    ----------------------------------
+``ops.set_kernel_mode(True)``                ``with repro.runtime(mode="kernel"): ...``
+``ops.kernels_enabled()``                    ``repro.current_runtime().kernel_mode_active``
+``set_default_db(db); ops.matmul(x, w)``     ``with repro.runtime(db=db): repro.dispatch("matmul", x, w)``
+``ops.matmul(x, w, config={...})``           unchanged (``config=`` bypasses resolution)
+hand-written wrapper per new kernel          none: ``@tunable(..., dispatch=DispatchSpec(...))``
+                                             auto-generates the entry point; this module
+                                             picks it up via ``__getattr__`` with zero edits
 
-Populate the database offline with ``python -m repro.campaign`` (plan →
-run → export); `ServingEngine.warmup` pre-resolves every slot-pool bucket
-through this same chain. Serving dispatch sees two shape families: batch-1
-admission prefills at power-of-two seq buckets, and decode-pool calls at
-`max_batch` rows (gemm/norm x-shapes of [max_batch, d], attention lookups
-with a single query row against an s-deep cache). `shape_bucket` keeps
-dims ≤ 8 exact, so small decode batches hit their own records rather than
-aliasing a prefill bucket. `set_kernel_mode` flips the whole model stack
-between kernel and reference paths; both compute identical math (enforced
-by tests/test_kernels_*).
+Why migrate:
+
+* **Scoped, nestable, thread-isolated** — serving, campaign evaluation, and
+  tests each pin their own db/mode on a context-local stack instead of
+  fighting over one global flag (``set_kernel_mode`` now mutates only the
+  process-*default* runtime and cannot see scoped ones).
+* **Pluggable resolution** — the tier chain (ExactHit → TuneNow → CoverSet
+  → Heuristic → Reference) is a policy pipeline you can reorder or extend.
+* **Observable** — per-call telemetry counts which tier served each
+  kernel×shape-bucket, and a per-runtime resolution cache keeps repeated
+  jit traces from re-hitting the database.
+
+Semantics are unchanged: ``ops.matmul`` et al. resolve through the *active*
+runtime, whose default policy reproduces the old precedence exactly —
+stored best variant for (platform, kernel, shape-bucket, dtype), else the
+campaign's 'few fit most' cover entry, else the shape heuristic, with the
+pure-jnp reference path when kernels are disabled (``REPRO_USE_PALLAS=0``
+or ``mode="reference"``).
 """
 from __future__ import annotations
 
-import os
-from typing import Optional
+from ..core import runtime as _rt
 
-import jax
+# Importing the kernel modules is what populates the tunable registry —
+# `from repro.kernels import ops` must keep working as a one-stop import.
+from . import ref  # noqa: F401  (re-exported: the reference oracles)
+from .attention import flash_attention as _flash_tunable  # noqa: F401
+from .matmul import matmul as _matmul_tunable  # noqa: F401
+from .rmsnorm import rmsnorm as _rmsnorm_tunable  # noqa: F401
+from .xent import softmax_xent as _xent_tunable  # noqa: F401
 
-from ..core import default_db, tune_or_lookup
-from . import ref
-from .attention import flash_attention as _flash_tunable
-from .matmul import matmul as _matmul_tunable
-from .rmsnorm import rmsnorm as _rmsnorm_tunable
-from .xent import softmax_xent as _xent_tunable
+# Deprecated: prefer `with repro.runtime(mode=...)` scopes.
+set_kernel_mode = _rt.set_kernel_mode
+kernels_enabled = _rt.kernels_enabled
 
-_STATE = {"use_pallas": os.environ.get("REPRO_USE_PALLAS", "0") == "1"}
-
-
-def set_kernel_mode(use_pallas: bool) -> None:
-    _STATE["use_pallas"] = bool(use_pallas)
-
-
-def kernels_enabled() -> bool:
-    return _STATE["use_pallas"]
-
-
-def matmul(x, w, *, config: Optional[dict] = None):
-    if not _STATE["use_pallas"]:
-        return ref.matmul(x, w)
-    cfg = config or tune_or_lookup(_matmul_tunable, (x, w))
-    return _matmul_tunable.variant(**cfg)(x, w)
+# Auto-generated entry points for the in-tree kernels (kept as real module
+# attributes so tooling and `from repro.kernels.ops import matmul` work).
+matmul = _rt.entry_point("matmul")
+flash_attention = _rt.entry_point("flash_attention")
+rmsnorm = _rt.entry_point("rmsnorm")
+softmax_xent = _rt.entry_point("softmax_xent")
 
 
-def flash_attention(q, k, v, *, causal=True, window=0, scale=None, config=None):
-    if not _STATE["use_pallas"]:
-        return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
-    cfg = config or tune_or_lookup(_flash_tunable, (q, k, v), key_extra=f"c{causal}w{window}")
-    return _flash_tunable.variant(**cfg)(q, k, v, causal=causal, window=window, scale=scale)
-
-
-def rmsnorm(x, weight, *, eps=1e-6, config=None):
-    if not _STATE["use_pallas"]:
-        return ref.rmsnorm(x, weight, eps)
-    shape = x.shape
-    x2 = x.reshape(-1, shape[-1])
-    cfg = config or tune_or_lookup(_rmsnorm_tunable, (x2, weight))
-    return _rmsnorm_tunable.variant(**cfg)(x2, weight, eps=eps).reshape(shape)
-
-
-def softmax_xent(logits, labels, *, config=None):
-    if not _STATE["use_pallas"]:
-        return ref.softmax_xent(logits, labels)
-    cfg = config or tune_or_lookup(_xent_tunable, (logits, labels))
-    return _xent_tunable.variant(**cfg)(logits, labels)
+def __getattr__(name: str):
+    """Any *other* registered tunable dispatches with zero edits here."""
+    if name.startswith("_"):
+        raise AttributeError(name)
+    try:
+        _rt._as_tunable(name)
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r} "
+            "(and no tunable of that name is registered)"
+        ) from None
+    return _rt.entry_point(name)

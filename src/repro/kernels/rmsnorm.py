@@ -17,7 +17,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from . import _compat
-from ..core import Constraint, ParamSpace, PowerOfTwoParam, tunable
+from ..core import Constraint, DispatchSpec, ParamSpace, PowerOfTwoParam, tunable
 from ..core.platform import TPU_V5E
 from . import ref
 
@@ -79,7 +79,35 @@ def _rmsnorm_heuristic(x, w):
     return {"block_rows": p}
 
 
-@tunable("rmsnorm", space=RMSNORM_SPACE, reference=ref.rmsnorm, heuristic=_rmsnorm_heuristic)
+def _rmsnorm_canon(x, weight):
+    """Flatten [..., d] -> [rows, d] for the kernel; reshape the output back.
+
+    Callers (the norm layer) hand over activations of any rank; the db key
+    and the kernel both want the 2D row view. The reference path is rank-
+    generic and never sees this.
+    """
+    shape = x.shape
+    return (x.reshape(-1, shape[-1]), weight), lambda out: out.reshape(shape)
+
+
+def _rmsnorm_example():
+    import numpy as np
+
+    rs = np.random.RandomState(0)
+    # 3D on purpose: exercises the flatten/reshape canonicalization.
+    return (
+        jnp.asarray(rs.randn(2, 16, 32), jnp.float32),
+        jnp.asarray(rs.randn(32), jnp.float32),
+    ), {}
+
+
+@tunable(
+    "rmsnorm",
+    space=RMSNORM_SPACE,
+    reference=ref.rmsnorm,
+    heuristic=_rmsnorm_heuristic,
+    dispatch=DispatchSpec(canonicalize=_rmsnorm_canon, example=_rmsnorm_example),
+)
 def rmsnorm(x, weight, *, block_rows: int, eps: float = 1e-6, interpret: Optional[bool] = None):
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"

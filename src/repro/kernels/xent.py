@@ -19,7 +19,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from . import _compat
-from ..core import Constraint, ParamSpace, PowerOfTwoParam, tunable
+from ..core import Constraint, DispatchSpec, ParamSpace, PowerOfTwoParam, tunable
 from ..core.platform import TPU_V5E
 from . import ref
 
@@ -125,7 +125,23 @@ def _xent_heuristic(logits, labels):
             "block_v": min(8192, max(512, vocab if vocab < 512 else 8192))}
 
 
-@tunable("softmax_xent", space=XENT_SPACE, reference=ref.softmax_xent, heuristic=_xent_heuristic)
+def _xent_example():
+    import numpy as np
+
+    rs = np.random.RandomState(0)
+    return (
+        jnp.asarray(rs.randn(16, 640) * 2, jnp.float32),
+        jnp.asarray(rs.randint(0, 640, 16), jnp.int32),
+    ), {}
+
+
+@tunable(
+    "softmax_xent",
+    space=XENT_SPACE,
+    reference=ref.softmax_xent,
+    heuristic=_xent_heuristic,
+    dispatch=DispatchSpec(example=_xent_example),
+)
 def softmax_xent(logits, labels, *, block_rows: int, block_v: int, interpret: Optional[bool] = None):
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"

@@ -1,7 +1,14 @@
 """Production serving launcher: continuous-batching engine on the chosen mesh.
 
-    # pod:
-    python -m repro.launch.serve --arch qwen2.5-3b --requests 64
+The engine gets its own scoped dispatch runtime (`repro.runtime`): pass a
+campaign-exported per-platform database via ``--db`` and every kernel the
+model traces resolves against it — no process-global state — and the run
+ends with the runtime's telemetry report (which resolution tier served each
+kernel×bucket: the sustained-performance accounting).
+
+    # pod, with a campaign artifact:
+    python -m repro.launch.serve --arch qwen2.5-3b --requests 64 \\
+        --db tpu-v5e.json --warmup
     # dev smoke:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke
 """
@@ -9,11 +16,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 
 import jax
 import numpy as np
 
+import repro
 from ..configs.base import SHAPES, get_config
+from ..core.database import TuningDatabase
 from ..models import lm
 from ..serving.engine import EngineConfig, Request, ServingEngine
 from . import defaults
@@ -28,7 +38,19 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--db", default=None,
+                    help="campaign-exported tuning database for this platform")
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "kernel", "reference"),
+                    help="dispatch mode for the engine's runtime")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-resolve every slot-pool bucket before serving")
     args = ap.parse_args()
+    if args.db and not os.path.exists(args.db):
+        # A typo'd path would otherwise open as an EMPTY database and every
+        # bucket would silently resolve at the heuristic tier — the exact
+        # wasted-artifact failure warmup exists to prevent.
+        ap.error(f"--db {args.db}: no such file")
 
     cfg = get_config(args.arch)
     shape = SHAPES["decode_32k"]
@@ -47,10 +69,18 @@ def main():
         )
 
     params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rt = repro.runtime(
+        db=TuningDatabase(args.db) if args.db else None,
+        mode=args.mode, name="serve",
+    )
     engine = ServingEngine(
         cfg, run, params, mesh, layout,
         EngineConfig(max_batch=8, max_seq=args.max_seq),
+        runtime=rt,
     )
+    if args.warmup:
+        resolved = engine.warmup()
+        print(f"warmup resolved {len(resolved)} kernel buckets")
     rs = np.random.RandomState(0)
     for i in range(args.requests):
         engine.submit(
@@ -70,6 +100,7 @@ def main():
           f"({sorted(r.latency_steps for r in done)[len(done)//2]} ticks); "
           f"{st['decode_steps']} pool decode steps, "
           f"{st['tokens_out']/max(1, st['decode_steps']):.2f} tok/step")
+    print(rt.telemetry.report())
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels import ops
+from ..core import runtime as rt
 from .layers import Axes, Params, apply_rope, dense, dense_init
 
 NEG_INF = -1e30
@@ -142,8 +142,8 @@ def chunked_attention(
 
 def _attend(q, k, v, *, causal, window, use_kernel, kv_valid_len=None,
             q_chunk=512, k_chunk=1024):
-    if use_kernel and ops.kernels_enabled() and kv_valid_len is None:
-        return ops.flash_attention(q, k, v, causal=causal, window=window)
+    if use_kernel and rt.current_runtime().kernel_mode_active and kv_valid_len is None:
+        return rt.dispatch("flash_attention", q, k, v, causal=causal, window=window)
     return chunked_attention(
         q, k, v, causal=causal, window=window,
         q_chunk=q_chunk, k_chunk=k_chunk, kv_valid_len=kv_valid_len,

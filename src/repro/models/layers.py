@@ -14,7 +14,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels import ops
+from ..core.runtime import dispatch
 
 Params = Dict[str, Any]
 Axes = Dict[str, Any]
@@ -49,9 +49,9 @@ def norm_init(d: int, dtype) -> Tuple[Params, Axes]:
 
 
 def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
-    orig_shape = x.shape
-    y = ops.rmsnorm(x.reshape(-1, orig_shape[-1]), p["scale"], eps=eps)
-    return y.reshape(orig_shape)
+    # The dispatch spec's canonicalization owns the flatten-to-rows/reshape
+    # dance, so call sites stay rank-generic.
+    return dispatch("rmsnorm", x, p["scale"], eps=eps)
 
 
 # ---------------------------------------------------------------------------

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from ..kernels import ops
+from ..core.runtime import dispatch
 from . import transformer as tf
 from .layers import (
     embed,
@@ -161,7 +161,7 @@ def _chunked_xent(lm_head, x, labels, mask, loss_chunk: int):
         tot, cnt = carry
         xx, ll, mm = inp
         logits = unembed(lm_head, xx.reshape(b * chunk, d))
-        losses = ops.softmax_xent(logits, ll.reshape(-1))
+        losses = dispatch("softmax_xent", logits, ll.reshape(-1))
         tot = tot + jnp.sum(losses * mm.reshape(-1))
         cnt = cnt + jnp.sum(mm)
         return (tot, cnt), None

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import functools
 
-from ..core import ParamSpace, PowerOfTwoParam, tunable
+from ..core import DispatchSpec, ParamSpace, PowerOfTwoParam, tunable
 from . import ssm
 from .attention import chunked_attention
 from ..kernels import ref
@@ -43,8 +43,18 @@ def _attn_heuristic(q, k, v):
     return {"q_chunk": 512, "k_chunk": 1024}  # the framework default
 
 
+def _attn_chunks_example():
+    import numpy as np
+    import jax.numpy as jnp
+
+    rs = np.random.RandomState(0)
+    mk = lambda *s: jnp.asarray(rs.randn(*s) * 0.3, jnp.float32)
+    return (mk(1, 4, 64, 16), mk(1, 2, 64, 16), mk(1, 2, 64, 16)), {}
+
+
 @tunable("attn_chunks", space=ATTN_CHUNK_SPACE, reference=_attn_ref,
-         heuristic=_attn_heuristic)
+         heuristic=_attn_heuristic,
+         dispatch=DispatchSpec(example=_attn_chunks_example))
 def attention_chunked(q, k, v, *, q_chunk: int, k_chunk: int):
     return chunked_attention(q, k, v, causal=True, q_chunk=q_chunk, k_chunk=k_chunk)
 

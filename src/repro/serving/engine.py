@@ -50,6 +50,7 @@ not charged for time they spent unqueued or for earlier occupants' work.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
@@ -60,6 +61,7 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..core.database import shape_bucket
+from ..core.runtime import TunedRuntime
 from ..distributed import sharding as shd
 from ..models import lm
 from ..models.transformer import RunConfig
@@ -122,6 +124,7 @@ class ServingEngine:
         layout: shd.Layout,
         ecfg: EngineConfig = EngineConfig(),
         clock: Callable[[], float] = time.perf_counter,
+        runtime: Optional[TunedRuntime] = None,
     ):
         if cfg.frontend is not None:
             raise NotImplementedError(
@@ -132,6 +135,12 @@ class ServingEngine:
         self.params = params
         self.mesh, self.layout = mesh, layout
         self.clock = clock
+        # Engine-pinned dispatch runtime: every prefill/decode trace (and
+        # warmup resolution) runs under this scope, so the engine's db/mode
+        # and telemetry are isolated from other engines and from tests.
+        # None = legacy behavior: dispatch reads whatever runtime is ambient
+        # at serve time.
+        self.runtime = runtime
         self._has_ssm = any(
             spec.mixer != "attn" for seg in cfg.segments() for spec in seg.pattern
         )
@@ -161,6 +170,10 @@ class ServingEngine:
             "tokens_out": 0,
         }
 
+    def _scope(self):
+        """The engine's runtime scope (no-op when no runtime is pinned)."""
+        return self.runtime if self.runtime is not None else contextlib.nullcontext()
+
     # ----------------------------------------------------------------- queue
     def submit(self, req: Request) -> None:
         L = len(req.prompt)
@@ -188,9 +201,10 @@ class ServingEngine:
         sb = self._bucket_len(L)
         toks = np.zeros((1, sb), np.int32)
         toks[0, :L] = req.prompt
-        logits, cache = self._prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(L, jnp.int32)
-        )
+        with self._scope():
+            logits, cache = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(L, jnp.int32)
+            )
         self.stats["prefill_calls"] += 1
         self.stats["prefill_tokens"] += sb
 
@@ -249,9 +263,10 @@ class ServingEngine:
                 if s is not None:
                     tokens[i, 0] = s.cur
                     pos[i] = s.pos
-            logits, self._caches = self._decode(
-                self.params, jnp.asarray(tokens), self._caches, jnp.asarray(pos)
-            )
+            with self._scope():
+                logits, self._caches = self._decode(
+                    self.params, jnp.asarray(tokens), self._caches, jnp.asarray(pos)
+                )
             n_act = active()
             self.stats["decode_steps"] += 1
             self.stats["slot_steps_active"] += n_act
@@ -292,36 +307,64 @@ class ServingEngine:
         This is the deployment end of a tuning campaign: pair the generic
         engine with a campaign-exported per-platform database and every
         admission-prefill (1, seq-bucket) and decode-pool (max_batch,) key
-        the engine will jit resolves its kernel configs up front — exact
-        record, else cover-set entry, else heuristic — so no request ever
-        pays tuning or heuristic-miss cost mid-flight. With
-        `allow_tune=True` missing buckets are tuned on the spot instead
-        (an online mini-campaign for this engine only).
+        the engine will jit resolves its kernel configs up front through the
+        engine's dispatch runtime — its resolution cache is hot and its
+        telemetry records which tier (exact / cover / heuristic / ...)
+        serves each bucket, so no request pays resolution or heuristic-miss
+        cost mid-flight. With `allow_tune=True` missing buckets are tuned on
+        the spot instead (an online mini-campaign for this engine only).
 
-        `install=True` (default) makes a passed `db` the process-wide
-        default, because the kernels/ops dispatch the model executes under
-        `_prefill`/`_decode` resolves through ``default_db()`` — warming one
-        database while serving reads another would silently waste the
-        artifact.
+        Database plumbing: with an engine-pinned runtime, a passed `db` is
+        pinned on that runtime (scoped — nothing global is touched, and
+        `install` is ignored). Without one, the legacy behavior holds:
+        `install=True` makes `db` the process-wide default, because serve-
+        time dispatch then reads the ambient runtime, whose database is
+        ``default_db()`` — warming one database while serving reads another
+        would silently waste the artifact.
 
-        Returns {db_key: resolved config} for observability.
+        Returns {db_key: resolved config} for observability (``None`` for a
+        bucket a custom policy pipeline routed to reference execution).
         """
         from ..core.annotate import get_tunable
         from ..core.database import default_db, set_default_db
-        from ..core.tuner import tune_or_lookup
+        from ..core.runtime import current_runtime
         from ..core.platform import detect_platform
         from ..campaign.planner import plan_serving_jobs
         from ..campaign.runner import materialize_args
 
-        if db is None:
-            db = default_db()
-        elif install:
-            set_default_db(db)
+        rt = self.runtime
+        if rt is not None:
+            if db is not None and db is not rt.db:
+                # Buckets resolved under the previous database are stale;
+                # the db-identity check in resolve() would skip them anyway,
+                # but dropping them keeps cache_size honest.
+                rt.db = db
+                rt.clear_cache()
+        else:
+            if db is not None and install:
+                set_default_db(db)
+            # Serve-time dispatch will read the ambient runtime; warm that
+            # same runtime so its resolution cache actually gets hit.
+            rt = current_runtime()
+            if db is not None:
+                effective = rt.db if rt.db is not None else default_db()
+                if effective is not db:
+                    # install=False, or warmup invoked inside a scope pinned
+                    # to some other database: the caller asked for *this*
+                    # artifact, so resolve against it on an ephemeral scoped
+                    # runtime (serve-time caching is forfeit by construction
+                    # here — the served db is a different one).
+                    rt = TunedRuntime(db=db, name="warmup")
+
         platform = detect_platform().name
         jobs = plan_serving_jobs(
             self.cfg, self.ecfg.max_batch, self.ecfg.max_seq,
             max_tokens=max_tokens,
         )
+        if allow_tune:
+            # Cached resolutions would shadow TuneNow for already-seen
+            # buckets; the caller asked for an online mini-campaign.
+            rt.clear_cache()
         resolved: Dict[str, Dict] = {}
         for job in jobs:
             key = job.db_key(platform)
@@ -329,10 +372,14 @@ class ServingEngine:
                 continue
             tunable = get_tunable(job.kernel)
             args = materialize_args(job)
-            resolved[key] = tune_or_lookup(
-                tunable, args, db=db, allow_tune=allow_tune,
-                key_extra=job.key_extra, **tune_kwargs,
+            # Per-call permission grant: never mutates the runtime, which
+            # other serving threads may be dispatching through right now.
+            res = rt.resolve(
+                tunable, args, key_extra=job.key_extra,
+                allow_tune=allow_tune or None,
+                tune_kwargs=tune_kwargs or None,
             )
+            resolved[key] = res.config
         return resolved
 
 

@@ -1,82 +1,121 @@
-"""kernels/ops.py deployment dispatch: mode switch, DB-driven configs, and
-kernel-vs-reference equivalence through the public entry points."""
+"""Deployment dispatch through the runtime API (scoped mode/db, DB-driven
+configs, kernel-vs-reference equivalence) + one legacy global-mode shim test.
+
+Every test pins its mode/db with `repro.runtime(...)` scopes, so this file
+is environment-agnostic: it passes identically with and without
+``REPRO_USE_PALLAS=1`` (the CI dispatch-parity leg runs it with the env var
+set).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro
 from repro.core import Record, TuningDatabase, make_key, set_default_db
 from repro.core.platform import detect_platform
 from repro.kernels import ops, ref
 
 
 @pytest.fixture(autouse=True)
-def fresh_db(tmp_path):
+def fresh_global_state(tmp_path):
+    """Isolate the two process-global knobs these tests may touch: the
+    default database, and the default runtime's mode (the legacy-shim test
+    flips it via set_kernel_mode) — restored so no state leaks across tests
+    or modules, whatever the REPRO_USE_PALLAS environment."""
     db = TuningDatabase(str(tmp_path / "db.json"))
     set_default_db(db)
+    prev_mode = repro.current_runtime().mode     # the root runtime: no scope active
     yield db
-    ops.set_kernel_mode(False)
+    repro.current_runtime().mode = prev_mode
 
 
-def test_reference_mode_is_default():
-    assert not ops.kernels_enabled()
+def test_reference_mode_dispatches_reference():
     x = jnp.ones((8, 16))
     w = jnp.ones((16, 4))
-    np.testing.assert_allclose(ops.matmul(x, w), ref.matmul(x, w))
+    with repro.runtime(mode="reference"):
+        assert not repro.current_runtime().kernel_mode_active
+        np.testing.assert_allclose(ops.matmul(x, w), ref.matmul(x, w))
+
+
+def test_auto_mode_reads_env(monkeypatch):
+    with repro.runtime(mode="auto"):
+        monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+        assert not repro.current_runtime().kernel_mode_active
+        monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+        assert repro.current_runtime().kernel_mode_active
 
 
 def test_kernel_mode_matches_reference(rs):
     x = jnp.asarray(rs.randn(64, 128), jnp.float32)
     w = jnp.asarray(rs.randn(128, 64), jnp.float32)
-    ops.set_kernel_mode(True)
-    out = ops.matmul(x, w)
-    np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+    with repro.runtime(mode="kernel", db=TuningDatabase(None)):
+        out = ops.matmul(x, w)
+        np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
 
-    xr = jnp.asarray(rs.randn(32, 64), jnp.float32)
-    wr = jnp.asarray(rs.randn(64), jnp.float32)
-    np.testing.assert_allclose(
-        ops.rmsnorm(xr, wr), ref.rmsnorm(xr, wr), rtol=1e-5, atol=1e-5
-    )
+        xr = jnp.asarray(rs.randn(32, 64), jnp.float32)
+        wr = jnp.asarray(rs.randn(64), jnp.float32)
+        np.testing.assert_allclose(
+            ops.rmsnorm(xr, wr), ref.rmsnorm(xr, wr), rtol=1e-5, atol=1e-5
+        )
 
-    logits = jnp.asarray(rs.randn(32, 256) * 2, jnp.float32)
-    labels = jnp.asarray(rs.randint(0, 256, 32), jnp.int32)
-    np.testing.assert_allclose(
-        ops.softmax_xent(logits, labels), ref.softmax_xent(logits, labels),
-        rtol=1e-4, atol=1e-4,
-    )
+        logits = jnp.asarray(rs.randn(32, 256) * 2, jnp.float32)
+        labels = jnp.asarray(rs.randint(0, 256, 32), jnp.int32)
+        np.testing.assert_allclose(
+            ops.softmax_xent(logits, labels), ref.softmax_xent(logits, labels),
+            rtol=1e-4, atol=1e-4,
+        )
 
-    q = jnp.asarray(rs.randn(1, 4, 128, 32) * 0.3, jnp.float32)
-    k = jnp.asarray(rs.randn(1, 2, 128, 32) * 0.3, jnp.float32)
-    v = jnp.asarray(rs.randn(1, 2, 128, 32), jnp.float32)
-    np.testing.assert_allclose(
-        ops.flash_attention(q, k, v, causal=True),
-        ref.attention(q, k, v, causal=True),
-        rtol=2e-5, atol=2e-5,
-    )
+        q = jnp.asarray(rs.randn(1, 4, 128, 32) * 0.3, jnp.float32)
+        k = jnp.asarray(rs.randn(1, 2, 128, 32) * 0.3, jnp.float32)
+        v = jnp.asarray(rs.randn(1, 2, 128, 32), jnp.float32)
+        np.testing.assert_allclose(
+            ops.flash_attention(q, k, v, causal=True),
+            ref.attention(q, k, v, causal=True),
+            rtol=2e-5, atol=2e-5,
+        )
 
 
-def test_db_record_drives_kernel_config(fresh_db, rs):
-    """A stored tuning record must be the config the wrapper uses."""
+def test_db_record_drives_kernel_config(rs):
+    """A stored tuning record must be the config dispatch binds (tier exact)."""
     x = jnp.asarray(rs.randn(64, 128), jnp.float32)
     w = jnp.asarray(rs.randn(128, 64), jnp.float32)
+    db = TuningDatabase(None)
     key = make_key(
         "matmul", detect_platform().name,
         [tuple(x.shape), tuple(w.shape)], str(x.dtype),
     )
     stored = {"bm": 8, "bn": 128, "bk": 128}
-    fresh_db.put(Record(key, stored, 1e-6, "wallclock", 1, 0.0))
-    from repro.core import tune_or_lookup
+    db.put(Record(key, stored, 1e-6, "wallclock", 1, 0.0))
+
     from repro.kernels.matmul import matmul as matmul_tunable
 
-    assert tune_or_lookup(matmul_tunable, (x, w), db=fresh_db) == stored
-    ops.set_kernel_mode(True)
-    out = ops.matmul(x, w)  # runs the stored config
-    np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+    with repro.runtime(mode="kernel", db=db) as rt:
+        assert rt.resolve(matmul_tunable, (x, w)).config == stored
+        out = ops.matmul(x, w)  # runs the stored config
+        np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+    tiers = rt.telemetry.snapshot()["tiers"]
+    assert tiers.get("exact", 0) >= 1
 
 
 def test_explicit_config_override(rs):
     x = jnp.asarray(rs.randn(40, 70), jnp.float32)
     w = jnp.asarray(rs.randn(70, 30), jnp.float32)
+    with repro.runtime(mode="kernel", db=TuningDatabase(None)) as rt:
+        out = ops.matmul(x, w, config={"bm": 8, "bn": 128, "bk": 128})
+        np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+    assert rt.telemetry.snapshot()["tiers"] == {"override": 1}
+
+
+def test_legacy_global_mode_shims(rs):
+    """Back-compat: the old process-global API still flips dispatch."""
+    x = jnp.asarray(rs.randn(64, 128), jnp.float32)
+    w = jnp.asarray(rs.randn(128, 64), jnp.float32)
     ops.set_kernel_mode(True)
-    out = ops.matmul(x, w, config={"bm": 8, "bn": 128, "bk": 128})
-    np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+    assert ops.kernels_enabled()
+    np.testing.assert_allclose(
+        ops.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-4
+    )
+    ops.set_kernel_mode(False)
+    assert not ops.kernels_enabled()
+    np.testing.assert_allclose(ops.matmul(x, w), ref.matmul(x, w))
