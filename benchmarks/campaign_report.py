@@ -5,11 +5,16 @@ Reads a campaign manifest + tuning database and reports, per kernel:
   * banked speedups (default heuristic vs tuned winner, from the records);
   * transfer effectiveness: evaluations of warm-started vs cold jobs;
   * cover-set compression: distinct winners vs tuned buckets ('a few fit
-    most' — the smaller the cover, the more an unseen shape benefits).
+    most' — the smaller the cover, the more an unseen shape benefits);
+  * with --telemetry: sustained-performance accounting from deployment
+    runtime snapshots (launch.train/serve --telemetry-out) — per-tier hit
+    rates and per-kernel exact-hit shares, i.e. how much real traffic the
+    campaign's records actually served.
 
 Run after a campaign:
     PYTHONPATH=src python -m benchmarks.campaign_report \
-        --manifest campaign.json --db tuning.json [--json out.json]
+        --manifest campaign.json --db tuning.json \
+        [--telemetry train_telemetry.json] [--json out.json]
 """
 from __future__ import annotations
 
@@ -62,10 +67,19 @@ def kernel_rows(manifest: CampaignManifest, db: TuningDatabase) -> List[Dict]:
     return rows
 
 
+def telemetry_rows(paths) -> List[Dict]:
+    """Summaries of exported runtime telemetry snapshots, one per file."""
+    from repro.campaign.runner import load_telemetry
+
+    return [{"source": path, **load_telemetry(path)} for path in paths]
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--manifest", default="campaign.json")
     ap.add_argument("--db", default=None)
+    ap.add_argument("--telemetry", action="append", default=[],
+                    help="runtime telemetry snapshot JSON (repeatable)")
     ap.add_argument("--json", default=None, help="also write the report here")
     args = ap.parse_args()
 
@@ -75,6 +89,8 @@ def main():
     )
     rows = kernel_rows(manifest, db)
     report = {"summary": manifest.summary(), "kernels": rows}
+    if args.telemetry:
+        report["telemetry"] = telemetry_rows(args.telemetry)
 
     s = report["summary"]
     print(f"campaign on {s['platform']}: {s['done']}/{s['jobs']} jobs done, "
@@ -90,6 +106,11 @@ def main():
               f" {r['evals_spent']:>6} {r['mean_speedup']:>7.2f}x"
               f" {r['mean_evals_warm']:>10.1f} {r['mean_evals_cold']:>10.1f}"
               f" {r['tuned_buckets']:>8} {r['cover_size']:>3}/{r['distinct_winners']}")
+
+    from repro.campaign.runner import format_telemetry
+
+    for t in report.get("telemetry", ()):
+        print("\n" + format_telemetry(t, t["source"]))
 
     if args.json:
         os.makedirs(os.path.dirname(os.path.abspath(args.json)), exist_ok=True)

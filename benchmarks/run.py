@@ -9,6 +9,8 @@ Emits ``name,us_per_call,derived`` CSV rows (derived = %speedup or context).
                  arrivals (benchmarks/serving_throughput.py)
   dispatch.*   — runtime resolution overhead, cold pipeline vs warm cache
                  (benchmarks/dispatch_overhead.py)
+  train.*      — smoke train-step throughput under a pinned dispatch runtime
+                 (benchmarks/train_step_throughput.py)
   kernel.*     — Pallas-kernel interpret-mode correctness-at-speed spot check
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
@@ -99,6 +101,19 @@ def main() -> None:
     rows.append((
         "dispatch.resolve_warm", dres["warm_us"],
         f"hit_rate={dres['cache_hit_rate']:.2f}",
+    ))
+
+    # --- training: step throughput under the dispatch runtime ---------------
+    from benchmarks import train_step_throughput
+
+    tres = train_step_throughput.bench(quick=args.quick)
+    rows.append((
+        "train.step_us", tres["step_us"],
+        f"tok_per_s={tres['tok_per_s']:.0f}",
+    ))
+    rows.append((
+        "train.dispatches", float(tres["dispatches"]),
+        f"exact_share={tres['exact_share']:.2f}",
     ))
 
     # --- kernels (interpret-mode; correctness-weighted spot check) ---------

@@ -1,0 +1,94 @@
+"""Train-step throughput under the dispatch runtime.
+
+Measures the smoke trainer's steady-state step time on the host mesh with a
+pinned `repro.runtime(...)` scope — the training analogue of the serving
+throughput row. Reported alongside: tokens/sec and the runtime's tier
+accounting (exact share > 0 means the step ran on tuned records; on an
+empty database everything resolves at reference/heuristic, the untuned
+baseline the campaign is supposed to beat).
+
+Run directly:
+    PYTHONPATH=src python -m benchmarks.train_step_throughput [--db DB]
+or via the harness: PYTHONPATH=src python -m benchmarks.run (train.* rows).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, Optional
+
+
+def bench(quick: bool = False, db_path: Optional[str] = None,
+          mode: str = "auto") -> Dict:
+    import repro
+    from repro.configs.base import SHAPES, get_config
+    from repro.core.database import TuningDatabase
+    from repro.data.pipeline import DataConfig
+    from repro.launch import defaults
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import adamw
+    from repro.train.trainer import Trainer, TrainerConfig
+    import tempfile
+
+    cfg = get_config("qwen2_0_5b").reduced()
+    shape = SHAPES["train_smoke"]
+    run = defaults.default_run(cfg, shape)
+    layout = defaults.default_layout(cfg)
+    steps = 3 if quick else 6
+
+    rt = repro.runtime(
+        db=TuningDatabase(db_path) if db_path else TuningDatabase(None),
+        mode=mode, name="bench-train",
+    )
+    trainer = Trainer(
+        cfg, run, make_host_mesh(), layout,
+        DataConfig(seed=0, batch_size=shape.global_batch, seq_len=shape.seq_len),
+        adamw.AdamWConfig(total_steps=steps + 1),
+        TrainerConfig(total_steps=steps + 1, checkpoint_every=10_000,
+                      checkpoint_dir=tempfile.mkdtemp(prefix="bench_ckpt_"),
+                      async_checkpoint=False, log_every=10_000),
+        runtime=rt,
+    )
+    trainer.run_one_step()                       # compile + warm caches
+    times = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        trainer.run_one_step()
+        times.append(time.perf_counter() - t0)
+    step_s = sorted(times)[len(times) // 2]
+    tokens = shape.global_batch * shape.seq_len
+    from repro.campaign.runner import summarize_telemetry
+
+    snap = rt.telemetry.snapshot()
+    summary = summarize_telemetry(snap)
+    rollup = summary["kernels"].values()
+    calls = max(1, snap["calls"])
+    return {
+        "step_us": step_s * 1e6,
+        "tokens_per_step": tokens,
+        "tok_per_s": tokens / step_s,
+        "dispatches": snap["calls"],
+        "exact_share": snap["tiers"].get("exact", 0) / calls,
+        "measured_share": sum(
+            r["measured_share"] * r["calls"] for r in rollup
+        ) / calls if rollup else 0.0,
+        "tiers": dict(snap["tiers"]),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--db", default=None,
+                    help="campaign-exported tuning database to dispatch against")
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "kernel", "reference"))
+    args = ap.parse_args()
+    r = bench(quick=args.quick, db_path=args.db, mode=args.mode)
+    print(f"train step: {r['step_us']:.0f} us ({r['tok_per_s']:.0f} tok/s), "
+          f"{r['dispatches']} dispatches, exact share "
+          f"{100 * r['exact_share']:.0f}% (tiers: {r['tiers']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,4 +20,4 @@ from .core.runtime import (  # noqa: F401
     runtime,
 )
 
-__version__ = "1.1.0"
+__version__ = "1.2.0"

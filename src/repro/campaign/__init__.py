@@ -20,16 +20,24 @@ primitives into the artifact pipeline:
 
 CLI: ``python -m repro.campaign {plan,run,status,export}``.
 """
-from .planner import TuningJob, plan_jobs, plan_serving_jobs, plan_train_jobs
+from .planner import (
+    TuningJob,
+    plan_jobs,
+    plan_serving_jobs,
+    plan_train_jobs,
+    plan_training_jobs,
+)
 from .scheduler import CampaignManifest, allocate_budget, dedupe_jobs, prioritize_jobs
 from .transfer import cluster_winners, compute_covers, warm_start_configs
-from .runner import export_campaign_db, run_campaign
+from .runner import export_campaign_db, run_campaign, summarize_telemetry
 
 __all__ = [
     "TuningJob",
     "plan_jobs",
     "plan_serving_jobs",
     "plan_train_jobs",
+    "plan_training_jobs",
+    "summarize_telemetry",
     "CampaignManifest",
     "allocate_budget",
     "dedupe_jobs",

@@ -64,6 +64,7 @@ def cmd_plan(args) -> int:
         reduced=args.reduced,
         max_tokens=args.max_tokens,
         max_seq=args.max_seq,
+        train_mesh=args.train_mesh or None,
     )
     profile = detect_platform()
     scen_sec = scheduler.analytic_scenario_seconds(
@@ -117,6 +118,15 @@ def cmd_status(args) -> int:
         elif j.status == "failed":
             line += f"  ERROR {j.error[:60]}"
         print(line)
+    # Sustained-performance accounting: the campaign run's own dispatches
+    # (banked in the manifest) plus any deployment snapshots the operator
+    # exported with `launch.train/serve --telemetry-out`.
+    if manifest.meta.get("telemetry", {}).get("calls"):
+        print(runner.format_telemetry(
+            runner.summarize_telemetry(manifest.meta["telemetry"]), "campaign"
+        ))
+    for path in args.telemetry or ():
+        print(runner.format_telemetry(runner.load_telemetry(path), path))
     return 0
 
 
@@ -160,6 +170,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="cap on materialized leading (token) dims")
     pp.add_argument("--max-seq", type=int, default=4096,
                     help="cap on materialized attention sequence length")
+    pp.add_argument("--train-mesh", default=None,
+                    help="plan sharding-aware training jobs for this mesh "
+                         "(DATAxMODEL, e.g. 16x16): jobs key on per-device "
+                         "local shard shapes under each arch's production "
+                         "Layout — what a trainer dispatching under that "
+                         "mesh actually looks up")
     pp.set_defaults(fn=cmd_plan)
 
     pr = sub.add_parser("run", help="execute pending jobs (resumable)")
@@ -179,6 +195,10 @@ def build_parser() -> argparse.ArgumentParser:
 
     ps = sub.add_parser("status", help="show campaign progress")
     ps.add_argument("--manifest", default="campaign.json")
+    ps.add_argument("--telemetry", action="append", default=[],
+                    help="runtime telemetry snapshot JSON (from launch.train/"
+                         "serve --telemetry-out); repeatable — prints per-tier "
+                         "hit rates and per-kernel exact-hit shares")
     ps.set_defaults(fn=cmd_status)
 
     pe = sub.add_parser("export", help="write the per-platform database artifact")

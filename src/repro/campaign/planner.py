@@ -148,9 +148,134 @@ def plan_train_jobs(
     b_att = max(1, min(B, max_tokens // s_att))
     q = (b_att, H, s_att, hd)
     kv = (b_att, KV, s_att, hd)
-    # dispatch key_extra must match ops.flash_attention's f"c{causal}w{window}"
+    # dispatch key_extra must match flash_attention's f"c{causal}w{window}"
     add("flash_attention", [q, kv, kv], [f, f, f], counts["attn"], extra="cTruew0")
     add("attn_chunks", [q, kv, kv], [f, f, f], counts["attn"])
+    return jobs
+
+
+def _parse_mesh_axes(mesh_axes) -> Dict[str, int]:
+    """Accept {"data": 2, "model": 4}, "2x4", or "2x16x16" (pod first)."""
+    if mesh_axes is None:
+        return {}
+    if isinstance(mesh_axes, str):
+        from ..launch.mesh import parse_mesh_spec
+
+        dims, names = parse_mesh_spec(mesh_axes)
+        return dict(zip(names, dims))
+    return {k: int(v) for k, v in dict(mesh_axes).items()}
+
+
+def plan_training_jobs(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    layout=None,
+    mesh_axes=None,
+    run=None,
+    kernels: Sequence[str] = DEFAULT_KERNELS,
+    max_tokens: int = 4096,
+    max_seq: int = 4096,
+) -> List[TuningJob]:
+    """Sharding-aware training jobs: every kernel the train step *dispatches*,
+    keyed at per-device **local shard** shapes.
+
+    This is the campaign half of the runtime's local-shape keying: the
+    trainer traces under its ``mesh_context``, so dispatch divides
+    batch-leading dims by the data-parallel degree of the production
+    ``Layout`` × mesh before looking up the database — and this planner
+    derives jobs at exactly those shapes, so ``campaign run`` pre-tunes the
+    shards training will actually execute (ExactHit at step one, no tuning
+    on the pod).
+
+    Unlike :func:`plan_train_jobs` (shape-level roster used when no mesh is
+    specified), the site list here mirrors the model's dispatch sites
+    one-for-one: q/k/v/o projections, FFN gemms (per ``ffn_kind``), the
+    per-loss-chunk unembed matmul + fused xent rows, rmsnorm rows, and one
+    flash-attention job per distinct sliding-window value in the layer
+    pattern (``key_extra`` must match dispatch's ``c{causal}w{window}``).
+
+    `mesh_axes` is the mesh's axis→size map (or a "DATAxMODEL" spec string);
+    no live mesh is needed, so a dev host can plan for a 256-chip pod.
+    `run` carries microbatches/loss_chunk (defaults to the launcher's
+    defaults for this arch×shape). Leading dims above `max_tokens` are
+    capped so jobs stay materializable — capped jobs can only warm-start,
+    not exact-hit, which the campaign report will show.
+    """
+    from ..distributed.sharding import data_parallel_degree
+    from ..launch import defaults as _defaults
+
+    _register_tunables()
+    layout = layout if layout is not None else _defaults.default_layout(cfg)
+    run = run if run is not None else _defaults.default_run(cfg, shape)
+    sizes = _parse_mesh_axes(mesh_axes)
+
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    f = str(cfg.jdtype)
+    B, S = shape.global_batch, shape.seq_len
+    mb = max(1, int(getattr(run, "microbatches", 1)))
+    b_mb = max(1, B // mb)                      # per-microbatch global batch
+    dp = data_parallel_degree(sizes, layout, b_mb) if sizes else 1
+    b_loc = max(1, b_mb // dp)                  # per-device local batch
+    scen = f"{cfg.name}/{shape.name}@dp{dp}"
+    s = min(S, max_seq)
+    T = min(b_loc * s, max_tokens)              # token rows per device
+    jobs: List[TuningJob] = []
+
+    def add(kernel, shapes, dtypes, weight, extra=""):
+        if kernel in kernels and weight > 0:
+            jobs.append(TuningJob(
+                kernel=kernel,
+                arg_shapes=tuple(tuple(int(x) for x in sh) for sh in shapes),
+                arg_dtypes=tuple(dtypes),
+                key_extra=extra,
+                scenarios=(scen,),
+                weight=float(weight),
+            ))
+
+    # Per-layer site families (weights = executions per step).
+    n_attn = n_norm = n_ffn = 0.0
+    windows: Dict[int, float] = {}
+    for seg in cfg.segments():
+        for spec in seg.pattern:
+            n_norm += seg.repeats           # pre-mixer norm
+            if spec.mixer == "attn":
+                n_attn += seg.repeats
+                windows[spec.window] = windows.get(spec.window, 0.0) + seg.repeats
+            if spec.ffn != "none":
+                n_norm += seg.repeats       # pre-ffn norm
+            if spec.ffn in ("dense", "moe+dense"):
+                n_ffn += seg.repeats
+
+    # Attention projections: x[T, d] @ w (canonicalized to 2-D rows).
+    add("matmul", [(T, d), (d, H * hd)], [f, f], n_attn)          # q proj
+    add("matmul", [(T, d), (d, KV * hd)], [f, f], 2 * n_attn)     # k, v proj
+    add("matmul", [(T, H * hd), (H * hd, d)], [f, f], n_attn)     # o proj
+    # FFN gemms, per ffn_kind (glu kinds run two up-projections).
+    if cfg.d_ff > 0 and n_ffn > 0:
+        n_up = 2 if cfg.ffn_kind in ("swiglu", "geglu") else 1
+        add("matmul", [(T, d), (d, cfg.d_ff)], [f, f], n_up * n_ffn)
+        add("matmul", [(T, cfg.d_ff), (cfg.d_ff, d)], [f, f], n_ffn)
+    # RMSNorm rows: per-layer norms + the final norm.
+    add("rmsnorm", [(T, d), (d,)], [f, f], n_norm + 1)
+    # Chunked loss: each seq chunk runs one unembed gemm + one fused xent.
+    if shape.kind == "train":
+        chunk = max(1, min(int(getattr(run, "loss_chunk", 512)), s))
+        rows = min(b_loc * chunk, max_tokens)
+        n_chunks = max(1.0, s / chunk)
+        add("matmul", [(rows, d), (d, cfg.vocab_size)], [f, f], n_chunks)
+        add("softmax_xent", [(rows, cfg.vocab_size), (rows,)], [f, "int32"],
+            n_chunks)
+    # Causal attention at the local batch, one job per distinct window
+    # (dispatch keys flash_attention with extra=c{causal}w{window}). No
+    # attn_chunks job: training never dispatches that tunable (the chunked
+    # path calls chunked_attention directly) — budget goes only to sites
+    # the step resolves.
+    b_att = max(1, min(b_loc, max_tokens // max(1, s)))
+    q = (b_att, H, s, hd)
+    kv = (b_att, KV, s, hd)
+    for w, n in sorted(windows.items()):
+        add("flash_attention", [q, kv, kv], [f, f, f], n, extra=f"cTruew{w}")
     return jobs
 
 
@@ -256,6 +381,7 @@ def plan_jobs(
     reduced: bool = False,
     max_tokens: int = 4096,
     max_seq: int = 4096,
+    train_mesh=None,
 ) -> List[TuningJob]:
     """The full campaign workload, deterministically ordered.
 
@@ -263,6 +389,11 @@ def plan_jobs(
     CPU-runnable campaign used by tests/examples; a TPU campaign plans the
     real dims. `serving=(max_batch, max_seq)` adds the engine buckets for
     every servable (token-in/token-out) arch; None skips them.
+
+    `train_mesh` (axis→size map or a "DATAxMODEL" spec) switches the train
+    cells to :func:`plan_training_jobs`: sharding-aware jobs at per-device
+    local shard shapes under each arch's production Layout — what a trainer
+    dispatching under that mesh will actually look up.
     """
     _register_tunables()
     jobs: List[TuningJob] = []
@@ -272,9 +403,16 @@ def plan_jobs(
             cfg = cfg.reduced()
         for shape_name in train_shapes:
             shape = SHAPES[shape_name]
-            jobs.extend(plan_train_jobs(
-                cfg, shape, kernels=kernels, max_tokens=max_tokens, max_seq=max_seq
-            ))
+            if train_mesh is not None:
+                jobs.extend(plan_training_jobs(
+                    cfg, shape, mesh_axes=train_mesh, kernels=kernels,
+                    max_tokens=max_tokens, max_seq=max_seq,
+                ))
+            else:
+                jobs.extend(plan_train_jobs(
+                    cfg, shape, kernels=kernels, max_tokens=max_tokens,
+                    max_seq=max_seq,
+                ))
         if serving is not None:
             jobs.extend(plan_serving_jobs(
                 cfg, serving[0], serving[1], kernels=kernels, max_tokens=max_tokens

@@ -121,7 +121,107 @@ def run_campaign(
             job.error = f"{type(e).__name__}: {e}"
             log.warning("job %s %s failed: %s", job.kernel, job.arg_shapes, job.error)
         manifest.save()                      # resume point after every job
+    # Bank the campaign runtime's dispatch accounting in the manifest so
+    # `campaign status` can show it alongside any deployment telemetry —
+    # merged with earlier invocations' counts, so a resumed campaign keeps
+    # the whole run's accounting.
+    manifest.meta["telemetry"] = _merge_snapshots(
+        manifest.meta.get("telemetry"), campaign_rt.telemetry.snapshot()
+    )
+    manifest.save()
     return manifest.summary()
+
+
+def _merge_snapshots(prev: Optional[Dict], new: Dict) -> Dict:
+    """Accumulate two Telemetry snapshots (counts add; rates recomputed)."""
+    if not prev:
+        return new
+    out = dict(new)
+    for field in ("calls", "cache_hits", "cache_evictions"):
+        out[field] = prev.get(field, 0) + new.get(field, 0)
+    out["cache_hit_rate"] = (
+        out["cache_hits"] / out["calls"] if out.get("calls") else 0.0
+    )
+    tiers: Dict[str, int] = dict(prev.get("tiers", {}))
+    for t, n in new.get("tiers", {}).items():
+        tiers[t] = tiers.get(t, 0) + n
+    out["tiers"] = tiers
+    total = out.get("calls") or 1
+    out["tier_rates"] = {t: n / total for t, n in tiers.items()}
+    by_key = {k: dict(v) for k, v in prev.get("by_key", {}).items()}
+    for k, per in new.get("by_key", {}).items():
+        agg = by_key.setdefault(k, {})
+        for t, n in per.items():
+            agg[t] = agg.get(t, 0) + n
+    out["by_key"] = by_key
+    return out
+
+
+def summarize_telemetry(snap: Dict) -> Dict:
+    """Aggregate a runtime Telemetry snapshot for sustained-performance
+    reporting: overall per-tier hit rates plus per-kernel tier counts and
+    the exact-hit share (the fraction of dispatches served by tuned
+    records — the paper's headline accounting).
+    """
+    calls = snap.get("calls", 0)
+    tiers = dict(snap.get("tiers", {}))
+    per_kernel: Dict[str, Dict[str, int]] = {}
+    for key, per in snap.get("by_key", {}).items():
+        agg = per_kernel.setdefault(key.split("|")[0], {})
+        for tier, n in per.items():
+            agg[tier] = agg.get(tier, 0) + n
+    kernels = {}
+    for kernel, agg in sorted(per_kernel.items()):
+        total = sum(agg.values()) or 1
+        kernels[kernel] = {
+            "calls": sum(agg.values()),
+            "tiers": dict(agg),
+            "exact_share": agg.get("exact", 0) / total,
+            "measured_share": sum(
+                agg.get(t, 0) for t in ("exact", "tune", "cover", "override")
+            ) / total,
+        }
+    return {
+        "calls": calls,
+        "tier_rates": {t: n / calls for t, n in tiers.items()} if calls else {},
+        "cache_hit_rate": snap.get("cache_hit_rate", 0.0),
+        "cache_evictions": snap.get("cache_evictions", 0),
+        "kernels": kernels,
+    }
+
+
+def load_telemetry(path: str) -> Dict:
+    """Load + summarize an exported snapshot (``Telemetry.write`` artifact).
+
+    The one loader behind every ``--telemetry`` flag (campaign status,
+    benchmarks/campaign_report.py); exits cleanly on a typo'd path instead
+    of a traceback.
+    """
+    import json
+    import os
+
+    if not os.path.exists(path):
+        raise SystemExit(f"error: --telemetry {path}: no such file")
+    with open(path) as f:
+        return summarize_telemetry(json.load(f))
+
+
+def format_telemetry(summary: Dict, label: str) -> str:
+    """Render a :func:`summarize_telemetry` summary (one formatter shared by
+    `campaign status` and benchmarks/campaign_report.py)."""
+    rates = ", ".join(
+        f"{t}={100 * r:.0f}%" for t, r in sorted(summary["tier_rates"].items())
+    )
+    lines = [
+        f"sustained performance [{label}]: {summary['calls']} dispatches "
+        f"({rates}); cache hit {100 * summary['cache_hit_rate']:.0f}%, "
+        f"{summary['cache_evictions']} evictions"
+    ]
+    for kernel, row in summary["kernels"].items():
+        lines.append(f"  {kernel:<16} {row['calls']:>6} calls  "
+                     f"exact {100 * row['exact_share']:.0f}%  "
+                     f"measured {100 * row['measured_share']:.0f}%")
+    return "\n".join(lines)
 
 
 def export_campaign_db(

@@ -185,6 +185,10 @@ SHAPES: Dict[str, ShapeSpec] = {
     "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
     "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+    # The dev-host smoke cell: what `launch.train --smoke` runs, and what
+    # `campaign plan --train-shapes train_smoke` pre-tunes — one name keeps
+    # the planner and the launcher on the same shapes.
+    "train_smoke": ShapeSpec("train_smoke", 64, 8, "train"),
 }
 
 

@@ -44,7 +44,16 @@ from .evaluate import (
     correctness_gate,
     roofline_from_compiled,
 )
-from .platform import CPU_HOST, PROFILES, TPU_V4, TPU_V5E, HardwareProfile, detect_platform
+from .platform import (
+    CPU_HOST,
+    PROFILES,
+    TPU_V4,
+    TPU_V5E,
+    HardwareProfile,
+    detect_platform,
+    platform_override,
+    set_platform_override,
+)
 from .search import (
     ALGORITHMS,
     CoordinateDescent,

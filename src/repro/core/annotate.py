@@ -55,12 +55,27 @@ class DispatchSpec:
     * ``example`` — ``() -> (args, kwargs)``: small representative arguments
       (interpret-mode friendly) used by the registry parity tests and the
       dispatch-overhead benchmark, so coverage of a new kernel is automatic.
+    * ``data_parallel_args`` — indices of the *canonical* positional args
+      whose leading dim is batch/token-like. Under an active sharded
+      ``mesh_context`` the runtime keys the database on the per-device
+      *local* shard of those dims (global dim ÷ data-parallel degree), so
+      campaign records tuned at local shard shapes exact-hit inside
+      jit-sharded traces. Default ``(0,)`` (the row-major convention);
+      ``()`` disables localization for a kernel.
+    * ``vjp`` — how dispatch differentiates the kernel path. ``"reference"``
+      (default) wraps the bound variant in a ``jax.custom_vjp`` whose
+      backward pass is the VJP of the reference implementation, so tuned
+      kernels are trainable even when the Pallas kernel itself has no
+      transpose rule (forward stays the tuned kernel; backward recomputes
+      through the reference math). ``"none"`` leaves the variant bare.
     """
 
     reference: Optional[Callable] = None
     key_extra: Optional[Callable[[Dict[str, Any]], str]] = None
     canonicalize: Optional[Callable[..., Tuple[tuple, Callable]]] = None
     example: Optional[Callable[[], Tuple[tuple, Dict[str, Any]]]] = None
+    data_parallel_args: Tuple[int, ...] = (0,)
+    vjp: str = "reference"
 
     def reference_for(self, tunable: "Tunable") -> Optional[Callable]:
         return self.reference if self.reference is not None else tunable.reference

@@ -1,4 +1,4 @@
-"""Hardware profiles and platform keys.
+"""Hardware profiles, platform fingerprinting, and the override escape hatch.
 
 Performance portability (the paper's C4) requires tuning results to be keyed
 by *platform*: the same generic code specializes differently per machine.
@@ -6,12 +6,29 @@ A :class:`HardwareProfile` carries the peaks the analytic evaluator needs
 (roofline terms) plus the capacity constraints (VMEM) that prune kernel tile
 spaces.
 
+:func:`detect_platform` fingerprints ``jax.devices()`` into one of the known
+profiles (tpu-v4 / tpu-v5e / cpu-host), so the dispatch runtime and the
+campaign tools namespace their databases automatically — no caller wires a
+platform string. When automatic detection is wrong or too coarse (a new TPU
+generation, an A/B experiment that must not share records with production),
+the escape hatch overrides it, in precedence order:
+
+1. an explicit ``detect_platform(override=...)`` argument;
+2. :func:`set_platform_override` (process-wide, e.g. from a launcher flag);
+3. the ``REPRO_PLATFORM`` environment variable.
+
+An override naming a known profile selects it; an unknown name clones the
+fingerprinted profile under the new name, so roofline peaks stay sensible
+while the database namespace is fully isolated.
+
 Constants for TPU v5e follow the brief: 197 TFLOP/s bf16 per chip,
 819 GB/s HBM, ~50 GB/s/link ICI, 16 GiB HBM, 128 MiB VMEM.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+from typing import Optional, Union
 
 import jax
 
@@ -61,17 +78,55 @@ CPU_HOST = HardwareProfile(
 
 PROFILES = {p.name: p for p in (TPU_V5E, TPU_V4, CPU_HOST)}
 
+# Process-wide explicit override (set_platform_override / REPRO_PLATFORM).
+_override: Optional[str] = None
 
-def detect_platform() -> HardwareProfile:
-    """Key for *this* process's backend.
 
-    On a real v5e pod ``jax.devices()[0].platform == 'tpu'``; in this
-    container it is 'cpu'. Tuning records are stored under the detected key,
-    so a database produced here never shadows a TPU database — that isolation
-    is what makes shipping per-platform DBs safe.
+def set_platform_override(name: Union[str, HardwareProfile, None]) -> None:
+    """Pin the platform key for this process (None restores auto-detection).
+
+    This is the escape hatch for hosts where fingerprinting is wrong or too
+    coarse: launchers expose it as ``--platform``. It takes effect for every
+    subsequent :func:`detect_platform` call and for runtimes constructed
+    without an explicit ``platform=``.
     """
-    plat = jax.devices()[0].platform
-    if plat == "tpu":
-        kind = getattr(jax.devices()[0], "device_kind", "").lower()
+    global _override
+    _override = name.name if isinstance(name, HardwareProfile) else name
+
+
+def platform_override() -> Optional[str]:
+    """The active override name (explicit call wins over $REPRO_PLATFORM)."""
+    return _override or os.environ.get("REPRO_PLATFORM") or None
+
+
+def _fingerprint() -> HardwareProfile:
+    """Map ``jax.devices()`` onto a known profile.
+
+    On a real pod ``jax.devices()[0].platform == 'tpu'`` and ``device_kind``
+    distinguishes generations (e.g. "TPU v4", "TPU v5 lite"); in this
+    container it is 'cpu'. Tuning records are stored under the detected key,
+    so a database produced here never shadows a TPU database — that
+    isolation is what makes shipping per-platform DBs safe.
+    """
+    dev = jax.devices()[0]
+    if dev.platform == "tpu":
+        kind = getattr(dev, "device_kind", "").lower()
         return TPU_V4 if "v4" in kind else TPU_V5E
     return CPU_HOST
+
+
+def detect_platform(override: Optional[str] = None) -> HardwareProfile:
+    """The :class:`HardwareProfile` this process tunes and dispatches under.
+
+    ``override`` (or the process override, see :func:`set_platform_override`)
+    short-circuits fingerprinting: a known profile name selects it; an
+    unknown name clones the fingerprinted profile under that name — the
+    database namespace is isolated while roofline peaks stay sensible.
+    """
+    name = override or platform_override()
+    if name:
+        prof = PROFILES.get(name)
+        if prof is None:
+            prof = dataclasses.replace(_fingerprint(), name=name)
+        return prof
+    return _fingerprint()

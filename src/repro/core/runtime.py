@@ -36,8 +36,18 @@ and makes that decision scoped, swappable, and observable:
 
 * **Resolution cache** — per-runtime ``{db key: Resolution}``; repeated jit
   traces of the same shape bucket stop re-hitting the database (see
-  ``benchmarks/dispatch_overhead.py`` for the cold/warm gap).
-  ``clear_cache()`` after mutating the database mid-flight.
+  ``benchmarks/dispatch_overhead.py`` for the cold/warm gap). Bounded:
+  LRU-evicted past ``cache_capacity`` entries with an optional
+  ``cache_ttl`` (evictions show up in telemetry), so very-long-lived
+  servers cannot grow it without limit. ``clear_cache()`` after mutating
+  the database mid-flight.
+
+* **Platform + sharding aware keys** — keys are namespaced under the
+  *detected* platform (``repro.core.platform.detect_platform``; override
+  via ``REPRO_PLATFORM`` / ``set_platform_override`` / a per-runtime
+  ``platform=``), and inside an active ``mesh_context`` batch-leading args
+  are keyed on their per-device *local shard* shapes — the shapes a
+  sharding-aware campaign (``plan_training_jobs``) tuned.
 
 Deployment entry points are generated from the registry
 (:func:`entry_point` / :func:`dispatch`): ``kernels/ops.py`` is nothing but
@@ -55,16 +65,19 @@ are deprecated; new code should never reach for process-global state.
 """
 from __future__ import annotations
 
+import collections
 import contextvars
 import dataclasses
 import os
 import threading
+import time
+import warnings
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 
 from .annotate import DispatchSpec, Tunable, get_tunable
 from .database import TuningDatabase, default_db
 from .params import Config
-from .platform import detect_platform
+from .platform import detect_platform, platform_override
 
 _MODES = ("kernel", "reference", "auto")
 
@@ -72,8 +85,12 @@ _platform_name: Optional[str] = None
 
 
 def _platform() -> str:
-    """Memoized platform key: the backend cannot change within a process,
-    and ``jax.devices()`` per dispatch would dominate warm resolution."""
+    """Effective platform key: the override escape hatch if set, else the
+    memoized fingerprint (the backend cannot change within a process, and
+    ``jax.devices()`` per dispatch would dominate warm resolution)."""
+    ov = platform_override()
+    if ov:
+        return ov
     global _platform_name
     if _platform_name is None:
         _platform_name = detect_platform().name
@@ -175,7 +192,12 @@ class CoverSet(ResolutionPolicy):
     name = "cover"
 
     def resolve(self, req: ResolutionRequest) -> Optional[Resolution]:
-        shapes = [tuple(a.shape) for a in req.args if hasattr(a, "shape")]
+        # Rank neighbours by the shapes the key was computed from (already
+        # bucketed and — under a sharded mesh — localized to the per-device
+        # shard), so cover transfer is consistent with exact-hit keying.
+        from .database import split_key
+
+        shapes = split_key(req.key)[2]
         for entry in req.db.lookup_cover(req.tunable.name, req.platform, shapes):
             cfg = entry.get("config")
             if cfg is not None and req.tunable.space.is_valid(cfg):
@@ -223,6 +245,9 @@ class Telemetry:
                    ``config=`` dispatches, which never compute a bucket key,
                    are recorded under ``"<kernel>|*"``).
     ``cache_hits`` / ``calls`` — resolution-cache effectiveness.
+    ``cache_evictions`` — entries dropped by the cache's LRU/TTL bound (a
+                   nonzero rate on a short-lived run usually means the
+                   capacity is too small for the working set).
     """
 
     def __init__(self):
@@ -235,6 +260,7 @@ class Telemetry:
             self.by_key: Dict[str, Dict[str, int]] = {}
             self.calls = 0
             self.cache_hits = 0
+            self.cache_evictions = 0
 
     def record(self, kernel: str, key: Optional[str], tier: str,
                cached: bool = False) -> None:
@@ -247,30 +273,50 @@ class Telemetry:
             per = self.by_key.setdefault(k, {})
             per[tier] = per.get(tier, 0) + 1
 
+    def record_eviction(self, count: int = 1) -> None:
+        with self._lock:
+            self.cache_evictions += count
+
     @property
     def cache_hit_rate(self) -> float:
         return self.cache_hits / self.calls if self.calls else 0.0
 
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
+            total = self.calls or 1
             return {
                 "calls": self.calls,
                 "cache_hits": self.cache_hits,
                 "cache_hit_rate": self.cache_hit_rate,
+                "cache_evictions": self.cache_evictions,
                 "tiers": dict(self.tiers),
+                "tier_rates": {t: n / total for t, n in self.tiers.items()},
                 "by_key": {k: dict(v) for k, v in self.by_key.items()},
             }
+
+    def write(self, path: str) -> None:
+        """Export the snapshot as JSON — the artifact `campaign status
+        --telemetry` / benchmarks/campaign_report.py consume (one exporter
+        shared by the launchers' --telemetry-out flags)."""
+        import json
+
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=1, sort_keys=True)
 
     def report(self) -> str:
         """Human-readable sustained-performance accounting."""
         snap = self.snapshot()
         lines = [
-            "dispatch telemetry: %d calls, %d cache hits (%.0f%%)"
-            % (snap["calls"], snap["cache_hits"], 100 * snap["cache_hit_rate"])
+            "dispatch telemetry: %d calls, %d cache hits (%.0f%%), %d evictions"
+            % (snap["calls"], snap["cache_hits"], 100 * snap["cache_hit_rate"],
+               snap["cache_evictions"])
         ]
         for tier in TIERS:
             if tier in snap["tiers"]:
-                lines.append(f"  tier {tier:<9} {snap['tiers'][tier]}")
+                lines.append(
+                    f"  tier {tier:<9} {snap['tiers'][tier]}"
+                    f" ({100 * snap['tier_rates'][tier]:.0f}%)"
+                )
         for key in sorted(snap["by_key"]):
             per = snap["by_key"][key]
             detail = ", ".join(f"{t}={per[t]}" for t in TIERS if t in per)
@@ -306,6 +352,17 @@ class TunedRuntime:
     ``db=None`` is meaningful: it means "whatever :func:`default_db`
     resolves to at call time" — the process-default runtime uses it so
     ``set_default_db`` keeps working mid-session.
+
+    ``platform=None`` (the default) namespaces database keys under the
+    *detected* platform (:func:`repro.core.platform.detect_platform`,
+    honouring the override escape hatch) — callers no longer wire a platform
+    string. Pass an explicit name to pin a runtime to a foreign namespace
+    (e.g. inspecting a v5e artifact from a dev host).
+
+    The resolution cache is bounded: `cache_capacity` entries, LRU-evicted
+    (a long-lived server cycling through many shape buckets cannot grow it
+    without limit), plus an optional `cache_ttl` in seconds after which an
+    entry re-resolves — evictions are counted in ``telemetry``.
     """
 
     def __init__(
@@ -315,6 +372,9 @@ class TunedRuntime:
         policy: Union[Sequence[ResolutionPolicy], None, object] = _INHERIT,
         allow_tune: Union[bool, object] = _INHERIT,
         tune_kwargs: Union[Dict[str, Any], None, object] = _INHERIT,
+        platform: Union[str, None, object] = _INHERIT,
+        cache_capacity: Union[int, object] = _INHERIT,
+        cache_ttl: Union[float, None, object] = _INHERIT,
         name: str = "",
         _is_root: bool = False,
     ):
@@ -333,13 +393,29 @@ class TunedRuntime:
         )
         tk = tune_kwargs if tune_kwargs is not _INHERIT else None
         self.tune_kwargs: Dict[str, Any] = dict(tk or {})
+        self.platform: Optional[str] = (
+            platform if platform is not _INHERIT
+            else (parent.platform if parent else None)
+        )
+        cap = (
+            cache_capacity if cache_capacity is not _INHERIT
+            else (parent.cache_capacity if parent else 4096)
+        )
+        self.cache_capacity = max(0, int(cap))
+        self.cache_ttl: Optional[float] = (
+            cache_ttl if cache_ttl is not _INHERIT
+            else (parent.cache_ttl if parent else None)
+        )
         self.name = name or ("default" if _is_root else f"runtime@{id(self):x}")
         self.telemetry = Telemetry()
-        # key -> (db it was resolved against, Resolution). The db reference
-        # is validated on lookup so a swapped database (rt.db reassignment,
-        # or set_default_db for db=None runtimes) can never serve a stale
-        # resolution from its predecessor.
-        self._cache: Dict[str, Tuple[TuningDatabase, Resolution]] = {}
+        # key -> (db it was resolved against, Resolution, monotonic stamp),
+        # LRU-ordered. The db reference is validated on lookup so a swapped
+        # database (rt.db reassignment, or set_default_db for db=None
+        # runtimes) can never serve a stale resolution from its predecessor;
+        # the stamp enforces cache_ttl.
+        self._cache: "collections.OrderedDict[str, Tuple[TuningDatabase, Resolution, float]]" = (
+            collections.OrderedDict()
+        )
         self._cache_lock = threading.Lock()
 
     # -- scoping -------------------------------------------------------------
@@ -386,6 +462,35 @@ class TunedRuntime:
     def cache_size(self) -> int:
         return len(self._cache)
 
+    def _cache_get(self, key: str, db: TuningDatabase) -> Optional[Resolution]:
+        now = time.monotonic()
+        with self._cache_lock:
+            hit = self._cache.get(key)
+            if hit is None:
+                return None
+            cached_db, res, stamp = hit
+            if cached_db is not db:
+                return None
+            if self.cache_ttl is not None and now - stamp > self.cache_ttl:
+                del self._cache[key]
+                self.telemetry.record_eviction()
+                return None
+            self._cache.move_to_end(key)        # LRU touch
+            return res
+
+    def _cache_put(self, key: str, db: TuningDatabase, res: Resolution) -> None:
+        if self.cache_capacity <= 0:
+            return
+        with self._cache_lock:
+            self._cache[key] = (db, res, time.monotonic())
+            self._cache.move_to_end(key)
+            evicted = 0
+            while len(self._cache) > self.cache_capacity:
+                self._cache.popitem(last=False)
+                evicted += 1
+        if evicted:
+            self.telemetry.record_eviction(evicted)
+
     # -- resolution ----------------------------------------------------------
     def resolve(self, tunable: Union[str, Tunable], args: Sequence[Any],
                 key_extra: str = "",
@@ -407,13 +512,12 @@ class TunedRuntime:
 
         tunable = _as_tunable(tunable)
         db = self.db if self.db is not None else default_db()
-        platform = _platform()
+        platform = self.platform or _platform()
         key = _args_key(tunable, args, platform, key_extra)
-        with self._cache_lock:
-            hit = self._cache.get(key)
-        if hit is not None and hit[0] is db:
-            self.telemetry.record(tunable.name, key, hit[1].tier, cached=True)
-            return hit[1]
+        hit = self._cache_get(key, db)
+        if hit is not None:
+            self.telemetry.record(tunable.name, key, hit.tier, cached=True)
+            return hit
         req = ResolutionRequest(
             tunable=tunable, args=tuple(args), key=key, key_extra=key_extra,
             db=db, platform=platform, runtime=self,
@@ -428,8 +532,7 @@ class TunedRuntime:
         if res is None:
             # An exhausted custom pipeline falls back to reference execution.
             res = Resolution(None, "reference")
-        with self._cache_lock:
-            self._cache[key] = (db, res)
+        self._cache_put(key, db, res)
         self.telemetry.record(tunable.name, key, res.tier)
         return res
 
@@ -446,6 +549,11 @@ class TunedRuntime:
         resolved config is bound as a kernel variant on the canonicalized
         arguments, and the :class:`Reference` tier executes the dispatch
         spec's reference fn on the *original* arguments.
+
+        The kernel path is differentiable (``DispatchSpec.vjp="reference"``,
+        the default): the bound variant is wrapped so its backward pass is
+        the reference implementation's VJP — training steps can dispatch
+        tuned Pallas kernels that have no transpose rule of their own.
         """
         tunable = _as_tunable(tunable)
         spec = tunable.dispatch or _DEFAULT_SPEC
@@ -455,22 +563,59 @@ class TunedRuntime:
         if config is not None:
             self.telemetry.record(tunable.name, None, "override")
             cargs, restore = spec.canon(args)
-            return restore(tunable.variant(**config)(*cargs, **kwargs))
+            return restore(_kernel_call(tunable, spec, config, cargs, kwargs))
         cargs, restore = spec.canon(args)
         res = self.resolve(tunable, cargs, key_extra=spec.extra_for(kwargs))
         if res.config is None:
             return _reference_call(tunable, spec, args, kwargs)
-        return restore(tunable.variant(**res.config)(*cargs, **kwargs))
+        return restore(_kernel_call(tunable, spec, res.config, cargs, kwargs))
 
     def __repr__(self) -> str:
         db = "default" if self.db is None else (self.db.path or "memory")
+        plat = self.platform or "detected"
         return (
             f"<TunedRuntime {self.name} mode={self.mode} db={db} "
-            f"policy=({', '.join(p.name for p in self.policy)})>"
+            f"platform={plat} policy=({', '.join(p.name for p in self.policy)})>"
         )
 
 
 _DEFAULT_SPEC = DispatchSpec()
+
+
+def _kernel_call(tunable: Tunable, spec: DispatchSpec, config: Config,
+                 cargs: tuple, kwargs: Dict[str, Any]):
+    """Execute one bound kernel variant on canonical args, trainably.
+
+    Pallas kernels have no transpose rules, so a bare variant inside
+    ``jax.grad`` fails. With ``spec.vjp == "reference"`` (default) and a
+    declared reference, the variant is wrapped in a ``jax.custom_vjp``:
+    forward runs the tuned kernel, backward runs the VJP of the reference
+    implementation on the same (canonical) arguments — mathematically the
+    reference gradient, which the tuner's correctness gate already holds the
+    kernel output to. The cost is one reference recompute in the backward
+    pass, the standard price of a fwd-only fused kernel.
+    """
+    import jax
+
+    variant = tunable.variant(**config)
+    ref = spec.reference_for(tunable)
+    if spec.vjp != "reference" or ref is None:
+        return variant(*cargs, **kwargs)
+
+    # kwargs (eps/causal/window/...) are schedule-or-semantics flags, never
+    # differentiated: bind them by closure so custom_vjp sees arrays only.
+    @jax.custom_vjp
+    def run(*a):
+        return variant(*a, **kwargs)
+
+    def fwd(*a):
+        return variant(*a, **kwargs), a
+
+    def bwd(a, ct):
+        return jax.vjp(lambda *p: ref(*p, **kwargs), *a)[1](ct)
+
+    run.defvjp(fwd, bwd)
+    return run(*cargs)
 
 
 def _reference_call(tunable: Tunable, spec: DispatchSpec, args, kwargs):
@@ -535,12 +680,16 @@ def runtime(
     policy: Union[Sequence[ResolutionPolicy], None, object] = _INHERIT,
     allow_tune: Union[bool, object] = _INHERIT,
     tune_kwargs: Union[Dict[str, Any], None, object] = _INHERIT,
+    platform: Union[str, None, object] = _INHERIT,
+    cache_capacity: Union[int, object] = _INHERIT,
+    cache_ttl: Union[float, None, object] = _INHERIT,
     name: str = "",
 ) -> TunedRuntime:
     """Create a scoped dispatch runtime (use as ``with repro.runtime(...)``)."""
     return TunedRuntime(
         db=db, mode=mode, policy=policy, allow_tune=allow_tune,
-        tune_kwargs=tune_kwargs, name=name,
+        tune_kwargs=tune_kwargs, platform=platform,
+        cache_capacity=cache_capacity, cache_ttl=cache_ttl, name=name,
     )
 
 
@@ -573,6 +722,11 @@ def entry_point(name: str) -> Callable:
 
 def kernels_enabled() -> bool:
     """Deprecated shim: whether the active runtime takes the kernel path."""
+    warnings.warn(
+        "ops.kernels_enabled()/repro.core.runtime.kernels_enabled() is "
+        "deprecated; read repro.current_runtime().kernel_mode_active",
+        DeprecationWarning, stacklevel=2,
+    )
     return current_runtime().kernel_mode_active
 
 
@@ -582,4 +736,10 @@ def set_kernel_mode(use_pallas: bool) -> None:
     Prefer ``with repro.runtime(mode=...)``. This mutates global state and
     does not affect (or see) scoped runtimes already on the stack.
     """
+    warnings.warn(
+        "ops.set_kernel_mode()/repro.core.runtime.set_kernel_mode() is "
+        'deprecated; use a scoped `with repro.runtime(mode="kernel"|'
+        '"reference")` context instead',
+        DeprecationWarning, stacklevel=2,
+    )
     _root_runtime().mode = "kernel" if use_pallas else "reference"

@@ -82,13 +82,37 @@ def _promote_cached(dtypes: tuple) -> str:
 
 
 def _args_key(tunable: Tunable, args: Sequence[Any], platform: str, extra: str = "") -> str:
+    """Database key for (tunable, concrete-or-traced args) on `platform`.
+
+    Sharding-aware: inside a ``mesh_context`` that carries a ``dp_degree``
+    (the Trainer's scope) the batch-leading args declared by the tunable's
+    ``DispatchSpec.data_parallel_args`` are keyed on their per-device *local*
+    shard shape (leading dim ÷ degree) — a jit trace carries global shapes,
+    but each device executes the local shard, which is what a campaign
+    tuned. Outside such a scope (serving warmup, campaign evaluation,
+    tests, dry-run lowering) keys are unchanged.
+    """
     shapes = []
     dtypes = []
-    for a in args:
+    batch_idx = []
+    spec = tunable.dispatch
+    dp_args = spec.data_parallel_args if spec is not None else (0,)
+    for i, a in enumerate(args):
         if hasattr(a, "shape"):
+            if i in dp_args:
+                batch_idx.append(len(shapes))
             shapes.append(tuple(a.shape))
             dtypes.append(getattr(a, "dtype", "float32"))
+    shapes = _localize(shapes, batch_idx)
     return make_key(tunable.name, platform, shapes, promoted_dtype(dtypes), extra)
+
+
+def _localize(shapes, batch_idx):
+    # Late import: distributed is a higher layer; the ambient-context check
+    # is a single contextvar read, so unsharded dispatch stays cheap.
+    from ..distributed.sharding import localize_shapes
+
+    return localize_shapes(shapes, batch_idx)
 
 
 def autotune(

@@ -138,23 +138,101 @@ def param_shardings(axes_tree, shapes_tree, mesh: Mesh, layout: Layout):
 # ---------------------------------------------------------------------------
 
 
-def batch_spec(mesh: Mesh, layout: Layout, batch_size: int) -> P:
-    """Shard the batch dim over every data-ish axis that divides it."""
-    axes = [a for a in ("pod",) + tuple(layout.data_axes) if a in mesh.axis_names]
-    # dedupe, keep order
+def _divisible_data_axes(
+    sizes: Dict[str, int], layout: Layout, batch_size: int
+) -> Tuple[Tuple[str, ...], int]:
+    """Greedy data-axis selection for a batch-like dim: which of the
+    data-parallel axes (pod first, then the layout's data axes) shard a dim
+    of `batch_size`, and their combined degree.
+
+    This single rule backs both :func:`batch_spec` (the sharding the trainer
+    actually requests) and :func:`local_shard_shape` (the per-device shape
+    the tuning database keys on) — keeping them one function is what makes
+    campaign records match training dispatch.
+    """
     seen, use = set(), []
     prod = 1
-    for a in axes:
-        if a in seen:
+    for a in ("pod",) + tuple(layout.data_axes):
+        if a in seen or a not in sizes:
             continue
         seen.add(a)
-        s = axis_size(mesh, a)
-        if batch_size % (prod * s) == 0:
+        s = int(sizes[a])
+        if s > 0 and batch_size % (prod * s) == 0:
             use.append(a)
             prod *= s
+    return tuple(use), prod
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_parallel_degree(
+    sizes: Dict[str, int], layout: Layout, batch_size: int
+) -> int:
+    """How many ways a batch-like dim of `batch_size` is split on this mesh."""
+    return _divisible_data_axes(sizes, layout, batch_size)[1]
+
+
+def local_shard_shape(
+    shape: Sequence[int], sizes: Dict[str, int], layout: Layout
+) -> Tuple[int, ...]:
+    """The per-device shape of a batch-leading global array under `layout`.
+
+    Only the leading (batch/token) dim is divided — mirror of
+    :func:`batch_spec`: activations inside a jit-sharded trace carry global
+    shapes, but each device executes the local shard, and that is the shape
+    a tuning campaign measures. Dims the mesh cannot divide stay global.
+    """
+    shape = tuple(int(d) for d in shape)
+    if not shape:
+        return shape
+    dp = data_parallel_degree(sizes, layout, shape[0])
+    if dp <= 1:
+        return shape
+    return (shape[0] // dp,) + shape[1:]
+
+
+def localize_shapes(
+    shapes: Sequence[Sequence[int]],
+    batch_arg_indices: Optional[Sequence[int]] = None,
+) -> Tuple[Tuple[int, ...], ...]:
+    """Localize batch-leading shapes by the *ambient* data-parallel degree.
+
+    This is the runtime's local-shape keying hook (see
+    ``repro.core.tuner._args_key``). The degree comes from the enclosing
+    :func:`mesh_context`'s explicit ``dp_degree`` — computed ONCE by whoever
+    owns the step's input sharding (the Trainer: from its batch dim), never
+    re-derived from an individual argument's leading dim. Per-arg derivation
+    would silently diverge from both the real sharding and the campaign
+    planner whenever a data axis happens to divide a *flattened* activation
+    dim (batch·seq) but not the batch itself. Outside a mesh context, or
+    when the context carries no degree, this is the identity — unsharded
+    database keys are unchanged.
+
+    A shape whose leading dim the degree does not divide is left global
+    (its rows are replicated, not sharded).
+    """
+    dp = _DP_CTX.get()
+    if not dp or dp <= 1:
+        return tuple(tuple(int(d) for d in s) for s in shapes)
+    idx = set(range(len(shapes))) if batch_arg_indices is None else set(batch_arg_indices)
+
+    def one(i, s):
+        s = tuple(int(d) for d in s)
+        if i in idx and s and s[0] % dp == 0:
+            return (s[0] // dp,) + s[1:]
+        return s
+
+    return tuple(one(i, s) for i, s in enumerate(shapes))
+
+
+def batch_spec(mesh: Mesh, layout: Layout, batch_size: int) -> P:
+    """Shard the batch dim over every data-ish axis that divides it."""
+    use, _ = _divisible_data_axes(mesh_axis_sizes(mesh), layout, batch_size)
     if not use:
         return P()
-    return P(tuple(use) if len(use) > 1 else use[0])
+    return P(use if len(use) > 1 else use[0])
 
 
 def data_specs(batch_tree, mesh: Mesh, layout: Layout):
@@ -245,19 +323,40 @@ import contextvars
 _MESH_CTX: contextvars.ContextVar = contextvars.ContextVar(
     "repro_mesh_layout", default=None
 )
+# The step's data-parallel degree, for local-shape database keying. Kept in
+# its own contextvar (not the mesh/layout tuple) so current_mesh_layout()
+# keeps its two-tuple contract for constrain()/model code.
+_DP_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_dp_degree", default=None
+)
 
 
 @contextlib.contextmanager
-def mesh_context(mesh: Mesh, layout: Layout):
+def mesh_context(mesh: Mesh, layout: Layout, dp_degree: Optional[int] = None):
+    """Ambient mesh/layout scope.
+
+    `dp_degree` opts the scope into local-shape database keying (see
+    :func:`localize_shapes`): it is the degree the step's *batch dim* is
+    actually sharded at — the owner of the input shardings computes it via
+    :func:`data_parallel_degree` on that batch dim (as the Trainer does).
+    Left at None (the dry-run / lower_cell scopes), dispatch keys stay
+    global.
+    """
     tok = _MESH_CTX.set((mesh, layout))
+    tok_dp = _DP_CTX.set(dp_degree)
     try:
         yield
     finally:
         _MESH_CTX.reset(tok)
+        _DP_CTX.reset(tok_dp)
 
 
 def current_mesh_layout():
     return _MESH_CTX.get()
+
+
+def current_dp_degree() -> Optional[int]:
+    return _DP_CTX.get()
 
 
 def constrain(x, *dims):

@@ -216,6 +216,8 @@ def _attn_example():
         # Same shapes, different masking semantics => distinct db records.
         key_extra=lambda kw: f"c{kw.get('causal', True)}w{kw.get('window', 0)}",
         example=_attn_example,
+        # q, k, v all lead with the (data-parallel) batch dim.
+        data_parallel_args=(0, 1, 2),
     ),
 )
 def flash_attention(

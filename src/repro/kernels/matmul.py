@@ -128,12 +128,26 @@ def _matmul_example():
     ), {}
 
 
+def _matmul_canon(x, w):
+    """Flatten leading (batch/seq) dims to rows: [..., k] @ [k, n].
+
+    Model call sites pass activations of any rank; the kernel and its
+    database keys see the canonical [rows, k] layout (rows is the
+    data-parallel dim, so sharded traces key on local rows).
+    """
+    if x.ndim == 2:
+        return (x, w), lambda out: out
+    lead = x.shape[:-1]
+    xr = x.reshape(-1, x.shape[-1])
+    return (xr, w), lambda out: out.reshape(*lead, out.shape[-1])
+
+
 @tunable(
     "matmul",
     space=MATMUL_SPACE,
     reference=ref.matmul,
     heuristic=_matmul_heuristic,
-    dispatch=DispatchSpec(example=_matmul_example),
+    dispatch=DispatchSpec(canonicalize=_matmul_canon, example=_matmul_example),
 )
 def matmul(x, w, *, bm: int, bn: int, bk: int, interpret: Optional[bool] = None):
     if interpret is None:

@@ -140,7 +140,8 @@ def _xent_example():
     space=XENT_SPACE,
     reference=ref.softmax_xent,
     heuristic=_xent_heuristic,
-    dispatch=DispatchSpec(example=_xent_example),
+    # logits AND labels lead with the token-row dim (both batch-sharded).
+    dispatch=DispatchSpec(example=_xent_example, data_parallel_args=(0, 1)),
 )
 def softmax_xent(logits, labels, *, block_rows: int, block_v: int, interpret: Optional[bool] = None):
     if interpret is None:

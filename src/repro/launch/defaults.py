@@ -62,6 +62,12 @@ def default_layout(cfg: ArchConfig, multi_pod: bool = False) -> Layout:
 
 def default_run(cfg: ArchConfig, shape: ShapeSpec) -> RunConfig:
     big = cfg.name in _BIG
+    if shape.name == "train_smoke":
+        # The dev-host smoke configuration (launch.train --smoke). Kept here
+        # so `campaign plan --train-shapes train_smoke` derives jobs with the
+        # exact chunking the smoke trainer dispatches.
+        return RunConfig(remat="none", loss_chunk=32, q_chunk=32, k_chunk=32,
+                         microbatches=1)
     if shape.kind == "train":
         return RunConfig(
             remat="full" if big else "dots",

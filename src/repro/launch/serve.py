@@ -45,7 +45,17 @@ def main():
                     help="dispatch mode for the engine's runtime")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-resolve every slot-pool bucket before serving")
+    ap.add_argument("--platform", default=None,
+                    help="override the fingerprinted platform key (db namespace)")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="write the runtime telemetry snapshot JSON here "
+                         "(feed to `campaign status --telemetry` / "
+                         "benchmarks/campaign_report.py)")
     args = ap.parse_args()
+    if args.platform:
+        from ..core.platform import set_platform_override
+
+        set_platform_override(args.platform)
     if args.db and not os.path.exists(args.db):
         # A typo'd path would otherwise open as an EMPTY database and every
         # bucket would silently resolve at the heuristic tier — the exact
@@ -101,6 +111,9 @@ def main():
           f"{st['decode_steps']} pool decode steps, "
           f"{st['tokens_out']/max(1, st['decode_steps']):.2f} tok/step")
     print(rt.telemetry.report())
+    if args.telemetry_out:
+        rt.telemetry.write(args.telemetry_out)
+        print(f"wrote telemetry -> {args.telemetry_out}")
 
 
 if __name__ == "__main__":

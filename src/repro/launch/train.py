@@ -5,8 +5,18 @@ dev host it degrades to the 1-device mesh + reduced config (--smoke). The
 same Trainer/steps path the multi-pod dry-run compiled is what runs here —
 build_cell is shared, so dry-run success is launch success.
 
-    # pod (256 chips):
-    python -m repro.launch.train --arch mixtral-8x7b --shape train_4k --steps 1000
+Training runs under a *pinned dispatch runtime* (mirroring launch/serve):
+``--db`` points every kernel the step traces at a campaign-exported
+per-platform database, ``--mode`` picks kernel/reference/auto dispatch, and
+the run ends with the runtime's telemetry report — which resolution tier
+(exact / cover / heuristic / reference) served each kernel×bucket. Because
+the trainer traces under its mesh context, those buckets are keyed on
+per-device *local* shard shapes: the shapes ``campaign plan --train-mesh``
+pre-tunes.
+
+    # pod (256 chips), with a campaign artifact:
+    python -m repro.launch.train --arch mixtral-8x7b --shape train_4k \\
+        --steps 1000 --db tpu-v5e.json --mode kernel
     # dev smoke:
     PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --smoke --steps 5
 """
@@ -14,15 +24,19 @@ from __future__ import annotations
 
 import argparse
 import logging
+import os
 
 import jax
 
+import repro
 from ..configs.base import SHAPES, get_config
+from ..core.database import TuningDatabase
+from ..core.platform import set_platform_override
 from ..data.pipeline import DataConfig
 from ..optim import adamw
 from ..train.trainer import Trainer, TrainerConfig
 from . import defaults
-from .mesh import make_host_mesh, make_production_mesh
+from .mesh import make_host_mesh, make_mesh_from_spec, make_production_mesh
 
 logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
 
@@ -35,28 +49,53 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config + host mesh (CPU dev box)")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="explicit mesh spec DATAxMODEL (e.g. 2x4) over the "
+                         "available devices; overrides the smoke/production "
+                         "mesh choice")
     ap.add_argument("--ckpt-dir", default="checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compression", default="none",
                     choices=["none", "bf16", "int8_ef"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--db", default=None,
+                    help="campaign-exported tuning database for this platform")
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "kernel", "reference"),
+                    help="dispatch mode for the trainer's runtime")
+    ap.add_argument("--platform", default=None,
+                    help="override the fingerprinted platform key (db namespace)")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="write the runtime telemetry snapshot JSON here "
+                         "(feed to `campaign status --telemetry` / "
+                         "benchmarks/campaign_report.py)")
     args = ap.parse_args()
+    if args.db and not os.path.exists(args.db):
+        # A typo'd path would otherwise open as an EMPTY database and every
+        # bucket would silently resolve at the heuristic tier.
+        ap.error(f"--db {args.db}: no such file")
+    if args.platform:
+        set_platform_override(args.platform)
 
     cfg = get_config(args.arch)
     shape = SHAPES[args.shape]
     if args.smoke:
         cfg = cfg.reduced()
-        mesh = make_host_mesh()
-        batch, seq = 8, 64
+        mesh = make_mesh_from_spec(args.mesh) if args.mesh else make_host_mesh()
+        shape = SHAPES["train_smoke"]
+        batch, seq = shape.global_batch, shape.seq_len
         run = defaults.default_run(cfg, shape)
-        run = type(run)(remat="none", loss_chunk=32, q_chunk=32, k_chunk=32,
-                        microbatches=1)
     else:
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        mesh = (make_mesh_from_spec(args.mesh) if args.mesh
+                else make_production_mesh(multi_pod=args.multi_pod))
         batch, seq = shape.global_batch, shape.seq_len
         run = defaults.default_run(cfg, shape)
     layout = defaults.default_layout(cfg, args.multi_pod)
 
+    rt = repro.runtime(
+        db=TuningDatabase(args.db) if args.db else None,
+        mode=args.mode, name="train",
+    )
     trainer = Trainer(
         cfg, run, mesh, layout,
         DataConfig(seed=args.seed, batch_size=batch, seq_len=seq,
@@ -69,12 +108,17 @@ def main():
             grad_compression=args.compression,
             seed=args.seed,
         ),
+        runtime=rt,
     )
     # resume if a checkpoint exists
     if trainer.ckpt.latest_step() is not None:
         trainer.restore_checkpoint()
     metrics = trainer.train()
     print(f"done at step {trainer.step}: {metrics}")
+    print(rt.telemetry.report())
+    if args.telemetry_out:
+        rt.telemetry.write(args.telemetry_out)
+        print(f"wrote telemetry -> {args.telemetry_out}")
 
 
 if __name__ == "__main__":

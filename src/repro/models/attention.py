@@ -1,7 +1,8 @@
 """Attention layers: GQA with RoPE, full/SWA/local-global kinds, KV caches.
 
 Two lowering paths, same math:
-  * `ops.flash_attention` — the Pallas kernel (CPU interpret / TPU runtime);
+  * `dispatch("flash_attention")` — the Pallas kernel through the runtime
+    (CPU interpret / TPU runtime);
   * `chunked_attention` — pure-XLA online-softmax over K/V chunks, used by
     the multi-pod dry-run (Pallas cannot lower to TPU from this host) and as
     the reference semantics. Chunking bounds the live score block to

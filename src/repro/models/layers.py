@@ -38,7 +38,11 @@ def dense_init(rng, d_in: int, d_out: int, dtype, in_axis: str, out_axis: str,
 
 
 def dense(p: Params, x: jax.Array) -> jax.Array:
-    y = x @ p["w"]
+    # Projection gemms go through the dispatch runtime: a tuned matmul record
+    # (or the heuristic default) serves the site, and reference mode lowers
+    # to plain jnp.dot. The dispatch spec's canonicalization flattens leading
+    # dims, so call sites stay rank-generic.
+    y = dispatch("matmul", x, p["w"])
     if "b" in p:
         y = y + p["b"]
     return y
@@ -82,15 +86,16 @@ def ffn_init(rng, d: int, ff: int, kind: str, dtype) -> Tuple[Params, Axes]:
 
 
 def ffn_apply(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    mm = lambda a, w: dispatch("matmul", a, w)
     if kind == "swiglu":
-        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+        return mm(jax.nn.silu(mm(x, p["wg"])) * mm(x, p["wu"]), p["wd"])
     if kind == "geglu":
-        return (jax.nn.gelu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+        return mm(jax.nn.gelu(mm(x, p["wg"])) * mm(x, p["wu"]), p["wd"])
     if kind == "gelu":
-        return jax.nn.gelu(x @ p["wu"]) @ p["wd"]
+        return mm(jax.nn.gelu(mm(x, p["wu"])), p["wd"])
     if kind == "relu2":
-        h = jax.nn.relu(x @ p["wu"])
-        return (h * h) @ p["wd"]
+        h = jax.nn.relu(mm(x, p["wu"]))
+        return mm(h * h, p["wd"])
     raise ValueError(kind)
 
 
@@ -139,4 +144,4 @@ def unembed_init(rng, d: int, vocab: int, dtype) -> Tuple[Params, Axes]:
 
 
 def unembed(p: Params, x: jax.Array) -> jax.Array:
-    return x @ p["w"]
+    return dispatch("matmul", x, p["w"])

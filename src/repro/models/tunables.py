@@ -54,7 +54,8 @@ def _attn_chunks_example():
 
 @tunable("attn_chunks", space=ATTN_CHUNK_SPACE, reference=_attn_ref,
          heuristic=_attn_heuristic,
-         dispatch=DispatchSpec(example=_attn_chunks_example))
+         dispatch=DispatchSpec(example=_attn_chunks_example,
+                               data_parallel_args=(0, 1, 2)))
 def attention_chunked(q, k, v, *, q_chunk: int, k_chunk: int):
     return chunked_attention(q, k, v, causal=True, q_chunk=q_chunk, k_chunk=k_chunk)
 

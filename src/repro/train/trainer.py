@@ -4,9 +4,19 @@ straggler monitoring, gradient compression — assembled from the substrate.
 Single-host usage (examples, tests) and pod usage share this class; the
 difference is the mesh handed in. The Trainer never constructs device state
 outside the mesh's shardings, so the same code drives 1 CPU or 512 chips.
+
+Dispatch: the model's kernel sites (projection/FFN gemms, rmsnorm, the fused
+loss, flash attention) resolve through the dispatch runtime. Pass
+``runtime=repro.runtime(db=..., mode=...)`` to pin a campaign database for
+the whole run — every trace the trainer builds executes under that scope
+*and* under the trainer's ``mesh_context``, so database keys use per-device
+local shard shapes (what a campaign tuned), and ``runtime.telemetry``
+reports which tier served each kernel×bucket. With ``runtime=None`` the
+ambient/default runtime applies, as before.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import logging
 import os
@@ -53,6 +63,7 @@ class Trainer:
         data_cfg: DataConfig,
         opt_cfg: Optional[adamw.AdamWConfig] = None,
         tcfg: Optional[TrainerConfig] = None,
+        runtime: Optional[Any] = None,
     ):
         self.cfg = cfg
         self.run = run
@@ -60,6 +71,20 @@ class Trainer:
         self.layout = layout
         self.opt_cfg = opt_cfg or adamw.AdamWConfig()
         self.tcfg = tcfg or TrainerConfig()
+        self.runtime = runtime          # a TunedRuntime, or None = ambient
+        # The degree the step's batch dim is sharded at — drives local-shape
+        # database keying. Computed ONCE from the per-microbatch batch dim
+        # (what every kernel site actually sees), mirroring the campaign
+        # planner's plan_training_jobs; never re-derived per argument.
+        # Known approximation: when microbatching shrinks the batch below
+        # the input sharding's full multi-axis degree (b/k not divisible by
+        # the axes that divide b), XLA's reshape propagation decides the
+        # true per-device shape — keys then state the b/k-derived degree,
+        # which planner and dispatch still agree on (see ROADMAP).
+        self._dp_degree = shd.data_parallel_degree(
+            shd.mesh_axis_sizes(mesh), layout,
+            max(1, data_cfg.batch_size // max(1, run.microbatches)),
+        )
         self.data = SyntheticPipeline(cfg, data_cfg)
         self.ckpt = ckpt_mod.Checkpointer(
             self.tcfg.checkpoint_dir, keep=self.tcfg.checkpoint_keep
@@ -67,6 +92,23 @@ class Trainer:
         self.monitor = StragglerMonitor()
         self.step = 0
         self._build()
+
+    def _scope(self):
+        """The trainer's execution scope: pinned runtime (if any) + ambient
+        mesh/layout context.
+
+        Entered around every call that may *trace* model code (init, the
+        train step): jax.jit traces lazily, so the scope must be live at
+        call time, not construction time. The mesh context is what switches
+        dispatch keying to per-device local shard shapes.
+        """
+        stack = contextlib.ExitStack()
+        if self.runtime is not None:
+            stack.enter_context(self.runtime)
+        stack.enter_context(
+            shd.mesh_context(self.mesh, self.layout, dp_degree=self._dp_degree)
+        )
+        return stack
 
     # ------------------------------------------------------------------ build
     def _build(self) -> None:
@@ -82,11 +124,14 @@ class Trainer:
             return params, opt_state
 
         init_jit = jax.jit(init_all, out_shardings=(self.p_sh, self.o_sh))
-        self.params, self.opt_state = init_jit(jax.random.PRNGKey(self.tcfg.seed))
-        if self.tcfg.grad_compression == "int8_ef":
-            self.ef_state = jax.jit(ef_init, out_shardings=self.p_sh)(self.params)
-        else:
-            self.ef_state = None
+        with self._scope():
+            self.params, self.opt_state = init_jit(
+                jax.random.PRNGKey(self.tcfg.seed)
+            )
+            if self.tcfg.grad_compression == "int8_ef":
+                self.ef_state = jax.jit(ef_init, out_shardings=self.p_sh)(self.params)
+            else:
+                self.ef_state = None
 
         comp_mode = self.tcfg.grad_compression
         run, opt_cfg = self.run, self.opt_cfg
@@ -196,9 +241,10 @@ class Trainer:
             lambda x, s: jax.device_put(x, s), batch_np, self._b_sh
         )
         t0 = time.perf_counter()
-        self.params, self.opt_state, self.ef_state, metrics = self._train_step(
-            self.params, self.opt_state, self.ef_state, batch
-        )
+        with self._scope():
+            self.params, self.opt_state, self.ef_state, metrics = self._train_step(
+                self.params, self.opt_state, self.ef_state, batch
+            )
         metrics = {k: float(v) for k, v in metrics.items()}
         dt = time.perf_counter() - t0
         self.monitor.record(self.step, dt)

@@ -23,7 +23,6 @@ from repro.campaign.scheduler import build_manifest
 from repro.core import Record, TuningDatabase, make_key, set_default_db, tune_or_lookup
 from repro.core.evaluate import Evaluator, Measurement
 from repro.core.platform import detect_platform
-from repro.kernels import ops
 
 ARCHES = ["qwen2_0_5b", "minitron_4b", "qwen2_5_3b"]
 PLAN_KW = dict(
@@ -226,19 +225,16 @@ def test_export_drives_dispatch_with_zero_tuning(tmp_path):
     assert cfg2 == {"block_rows": 64}
     assert rmsnorm_tunable.default_config(x2, w) == {"block_rows": 1024}
 
-    # and the ops-level dispatch consumes the same artifact end-to-end
-    set_default_db(serve_db)
-    try:
-        ops.set_kernel_mode(True)
-        out = ops.rmsnorm(x, w)
-        np.testing.assert_allclose(
-            np.asarray(out),
-            np.asarray(jnp.ones_like(x)),  # rmsnorm of ones with unit weight
-            rtol=1e-5, atol=1e-5,
-        )
-    finally:
-        ops.set_kernel_mode(False)
-        set_default_db(TuningDatabase(None))
+    # and runtime dispatch consumes the same artifact end-to-end
+    import repro
+
+    with repro.runtime(mode="kernel", db=serve_db):
+        out = repro.dispatch("rmsnorm", x, w)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(jnp.ones_like(x)),  # rmsnorm of ones with unit weight
+        rtol=1e-5, atol=1e-5,
+    )
 
 
 def test_serving_engine_warmup(tmp_path):
@@ -279,6 +275,100 @@ def test_serving_engine_warmup(tmp_path):
             assert get_tunable(kernel).space.is_valid(config), (k, config)
     finally:
         set_default_db(TuningDatabase(None))
+
+
+def test_plan_training_jobs_local_shapes():
+    """Sharding-aware training jobs key on per-device local shard shapes:
+    batch-leading dims divided by the data-parallel degree of the Layout ×
+    mesh, token rows scaled to match — what dispatch under a mesh_context
+    actually looks up."""
+    from repro.campaign import plan_training_jobs
+    from repro.configs import SHAPES, get_config
+    from repro.distributed.sharding import Layout
+
+    cfg = get_config("qwen2_0_5b").reduced()
+    shape = SHAPES["train_smoke"]            # B=8, S=64
+    layout = Layout(counts=(("heads", cfg.num_heads),
+                            ("kv_heads", cfg.num_kv_heads)))
+    jobs = plan_training_jobs(cfg, shape, layout=layout, mesh_axes="2x4")
+    by_kernel = {}
+    for j in jobs:
+        by_kernel.setdefault(j.kernel, []).append(j)
+    # dp=2 (data axis): 8/2=4 local batch; T = 4*64 = 256 token rows
+    attn = by_kernel["flash_attention"][0]
+    assert attn.arg_shapes[0] == (4, cfg.num_heads, 64, cfg.hd)
+    assert attn.key_extra == "cTruew0"
+    norm = by_kernel["rmsnorm"][0]
+    assert norm.arg_shapes[0] == (256, cfg.d_model)
+    # smoke run: loss_chunk=32 -> xent rows = 4 * 32 = 128
+    xent = by_kernel["softmax_xent"][0]
+    assert xent.arg_shapes == ((128, cfg.vocab_size), (128,))
+    assert xent.arg_dtypes[-1] == "int32"
+    # the dispatch-site matmuls are all present: q, k/v, o, ffn up+down, unembed
+    mm_shapes = {j.arg_shapes for j in by_kernel["matmul"]}
+    d, hd, H, KV = cfg.d_model, cfg.hd, cfg.num_heads, cfg.num_kv_heads
+    assert ((256, d), (d, H * hd)) in mm_shapes
+    assert ((256, d), (d, KV * hd)) in mm_shapes
+    assert ((256, H * hd), (H * hd, d)) in mm_shapes
+    assert ((256, d), (d, cfg.d_ff)) in mm_shapes
+    assert ((256, cfg.d_ff), (cfg.d_ff, d)) in mm_shapes
+    assert ((128, d), (d, cfg.vocab_size)) in mm_shapes
+    assert all("@dp2" in s for j in jobs for s in j.scenarios)
+
+
+def test_plan_training_jobs_no_mesh_is_unsharded():
+    from repro.campaign import plan_training_jobs
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config("qwen2_0_5b").reduced()
+    jobs = plan_training_jobs(cfg, SHAPES["train_smoke"])
+    attn = [j for j in jobs if j.kernel == "flash_attention"][0]
+    assert attn.arg_shapes[0][0] == 8                # global batch, dp=1
+    assert all("@dp1" in s for s in attn.scenarios)
+
+
+def test_plan_training_jobs_per_window_attention():
+    """SWA archs dispatch flash attention with per-window key_extra; the
+    planner must emit one job per distinct window in the layer pattern."""
+    from repro.campaign import plan_training_jobs
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config("gemma3_27b").reduced()         # local:global pattern
+    jobs = plan_training_jobs(cfg, SHAPES["train_smoke"])
+    extras = {j.key_extra for j in jobs if j.kernel == "flash_attention"}
+    windows = {
+        spec.window for seg in cfg.segments() for spec in seg.pattern
+        if spec.mixer == "attn"
+    }
+    assert extras == {f"cTruew{w}" for w in windows}
+    assert len(extras) >= 2
+
+
+def test_plan_jobs_train_mesh_switches_planner():
+    jobs = plan_jobs(["qwen2_0_5b"], train_shapes=("train_smoke",),
+                     serving=None, reduced=True, train_mesh="2x4")
+    assert jobs and all("@dp2" in s for j in jobs for s in j.scenarios)
+
+
+def test_summarize_telemetry_rollup():
+    from repro.campaign import summarize_telemetry
+
+    snap = {
+        "calls": 10, "cache_hits": 4, "cache_hit_rate": 0.4,
+        "cache_evictions": 1,
+        "tiers": {"exact": 6, "heuristic": 2, "reference": 2},
+        "by_key": {
+            "matmul|p|8x8/8x8|f32": {"exact": 6},
+            "rmsnorm|p|8x8/8|f32": {"heuristic": 2},
+            "softmax_xent|*": {"reference": 2},
+        },
+    }
+    s = summarize_telemetry(snap)
+    assert s["tier_rates"]["exact"] == 0.6
+    assert s["kernels"]["matmul"]["exact_share"] == 1.0
+    assert s["kernels"]["rmsnorm"]["exact_share"] == 0.0
+    assert s["kernels"]["matmul"]["measured_share"] == 1.0
+    assert s["cache_evictions"] == 1
 
 
 def test_cli_plan_and_status(tmp_path, capsys):

@@ -14,7 +14,7 @@ import pytest
 import repro
 from repro.core import Record, TuningDatabase, make_key, set_default_db
 from repro.core.platform import detect_platform
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref  # ops: legacy-shim test only
 
 
 @pytest.fixture(autouse=True)
@@ -35,7 +35,7 @@ def test_reference_mode_dispatches_reference():
     w = jnp.ones((16, 4))
     with repro.runtime(mode="reference"):
         assert not repro.current_runtime().kernel_mode_active
-        np.testing.assert_allclose(ops.matmul(x, w), ref.matmul(x, w))
+        np.testing.assert_allclose(repro.dispatch("matmul", x, w), ref.matmul(x, w))
 
 
 def test_auto_mode_reads_env(monkeypatch):
@@ -50,19 +50,19 @@ def test_kernel_mode_matches_reference(rs):
     x = jnp.asarray(rs.randn(64, 128), jnp.float32)
     w = jnp.asarray(rs.randn(128, 64), jnp.float32)
     with repro.runtime(mode="kernel", db=TuningDatabase(None)):
-        out = ops.matmul(x, w)
+        out = repro.dispatch("matmul", x, w)
         np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
 
         xr = jnp.asarray(rs.randn(32, 64), jnp.float32)
         wr = jnp.asarray(rs.randn(64), jnp.float32)
         np.testing.assert_allclose(
-            ops.rmsnorm(xr, wr), ref.rmsnorm(xr, wr), rtol=1e-5, atol=1e-5
+            repro.dispatch("rmsnorm", xr, wr), ref.rmsnorm(xr, wr), rtol=1e-5, atol=1e-5
         )
 
         logits = jnp.asarray(rs.randn(32, 256) * 2, jnp.float32)
         labels = jnp.asarray(rs.randint(0, 256, 32), jnp.int32)
         np.testing.assert_allclose(
-            ops.softmax_xent(logits, labels), ref.softmax_xent(logits, labels),
+            repro.dispatch("softmax_xent", logits, labels), ref.softmax_xent(logits, labels),
             rtol=1e-4, atol=1e-4,
         )
 
@@ -70,7 +70,7 @@ def test_kernel_mode_matches_reference(rs):
         k = jnp.asarray(rs.randn(1, 2, 128, 32) * 0.3, jnp.float32)
         v = jnp.asarray(rs.randn(1, 2, 128, 32), jnp.float32)
         np.testing.assert_allclose(
-            ops.flash_attention(q, k, v, causal=True),
+            repro.dispatch("flash_attention", q, k, v, causal=True),
             ref.attention(q, k, v, causal=True),
             rtol=2e-5, atol=2e-5,
         )
@@ -92,7 +92,7 @@ def test_db_record_drives_kernel_config(rs):
 
     with repro.runtime(mode="kernel", db=db) as rt:
         assert rt.resolve(matmul_tunable, (x, w)).config == stored
-        out = ops.matmul(x, w)  # runs the stored config
+        out = repro.dispatch("matmul", x, w)  # runs the stored config
         np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
     tiers = rt.telemetry.snapshot()["tiers"]
     assert tiers.get("exact", 0) >= 1
@@ -102,20 +102,37 @@ def test_explicit_config_override(rs):
     x = jnp.asarray(rs.randn(40, 70), jnp.float32)
     w = jnp.asarray(rs.randn(70, 30), jnp.float32)
     with repro.runtime(mode="kernel", db=TuningDatabase(None)) as rt:
-        out = ops.matmul(x, w, config={"bm": 8, "bn": 128, "bk": 128})
+        out = repro.dispatch("matmul", x, w, config={"bm": 8, "bn": 128, "bk": 128})
         np.testing.assert_allclose(out, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
     assert rt.telemetry.snapshot()["tiers"] == {"override": 1}
 
 
 def test_legacy_global_mode_shims(rs):
-    """Back-compat: the old process-global API still flips dispatch."""
+    """Back-compat: the old process-global API still flips dispatch — and
+    every shim (mode flips, reads, and the ops.<kernel> wrappers) now emits
+    a DeprecationWarning as the last step of the PR-3 deprecation cycle."""
     x = jnp.asarray(rs.randn(64, 128), jnp.float32)
     w = jnp.asarray(rs.randn(128, 64), jnp.float32)
-    ops.set_kernel_mode(True)
-    assert ops.kernels_enabled()
-    np.testing.assert_allclose(
-        ops.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-4
-    )
-    ops.set_kernel_mode(False)
-    assert not ops.kernels_enabled()
-    np.testing.assert_allclose(ops.matmul(x, w), ref.matmul(x, w))
+    with pytest.warns(DeprecationWarning, match="set_kernel_mode"):
+        ops.set_kernel_mode(True)
+    with pytest.warns(DeprecationWarning, match="kernels_enabled"):
+        assert ops.kernels_enabled()
+    with pytest.warns(DeprecationWarning, match="ops.matmul is deprecated"):
+        np.testing.assert_allclose(
+            ops.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-4
+        )
+    with pytest.warns(DeprecationWarning):
+        ops.set_kernel_mode(False)
+        assert not ops.kernels_enabled()
+        np.testing.assert_allclose(ops.matmul(x, w), ref.matmul(x, w))
+
+
+def test_generated_shim_for_model_tunable_warns():
+    """__getattr__-generated shims (model-level tunables) warn too."""
+    import repro.models.tunables  # noqa: F401 — registers attn_chunks
+
+    with pytest.warns(DeprecationWarning, match="attn_chunks"):
+        fn = ops.attn_chunks
+        args, kwargs = repro.core.get_tunable("attn_chunks").dispatch.example()
+        with repro.runtime(mode="reference"):
+            fn(*args, **kwargs)

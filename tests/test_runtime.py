@@ -432,6 +432,70 @@ def test_warmed_serving_engine_reports_tiers():
 
 
 # ---------------------------------------------------------------------------
+# Bounded resolution cache: LRU capacity + TTL + eviction telemetry
+# ---------------------------------------------------------------------------
+
+
+def _resolve_rows(rt, rows):
+    from repro.kernels.rmsnorm import rmsnorm as rmsnorm_tunable
+
+    w = jnp.ones((32,), jnp.float32)
+    return rt.resolve(rmsnorm_tunable, (jnp.ones((rows, 32), jnp.float32), w))
+
+
+def test_cache_lru_capacity_bounds_growth():
+    """A long-lived server cycling through many buckets must not grow the
+    resolution cache without limit (ROADMAP follow-up)."""
+    with repro.runtime(mode="kernel", db=TuningDatabase(None),
+                       cache_capacity=2) as rt:
+        for rows in (16, 64, 256, 1024):       # 4 distinct buckets
+            _resolve_rows(rt, rows)
+        assert rt.cache_size == 2
+        snap = rt.telemetry.snapshot()
+        assert snap["cache_evictions"] == 2
+        # LRU order: the two most recent buckets are still warm
+        _resolve_rows(rt, 1024)
+        assert rt.telemetry.snapshot()["cache_hits"] == 1
+
+
+def test_cache_lru_touch_on_hit():
+    with repro.runtime(mode="kernel", db=TuningDatabase(None),
+                       cache_capacity=2) as rt:
+        _resolve_rows(rt, 16)
+        _resolve_rows(rt, 64)
+        _resolve_rows(rt, 16)                  # touch: 16 becomes most-recent
+        _resolve_rows(rt, 256)                 # evicts 64, not 16
+        _resolve_rows(rt, 16)
+        snap = rt.telemetry.snapshot()
+        assert snap["cache_hits"] == 2         # the touch + the final re-use
+
+
+def test_cache_ttl_expires_entries(monkeypatch):
+    import repro.core.runtime as rtmod
+
+    t = {"now": 1000.0}
+    monkeypatch.setattr(rtmod.time, "monotonic", lambda: t["now"])
+    with repro.runtime(mode="kernel", db=TuningDatabase(None),
+                       cache_ttl=10.0) as rt:
+        _resolve_rows(rt, 16)
+        t["now"] += 5.0
+        _resolve_rows(rt, 16)                  # within TTL: cache hit
+        assert rt.telemetry.snapshot()["cache_hits"] == 1
+        t["now"] += 11.0
+        _resolve_rows(rt, 16)                  # expired: re-resolved
+        snap = rt.telemetry.snapshot()
+        assert snap["cache_hits"] == 1
+        assert snap["cache_evictions"] == 1
+
+
+def test_cache_params_inherit():
+    with repro.runtime(cache_capacity=7, cache_ttl=3.0):
+        inner = repro.runtime()
+        assert inner.cache_capacity == 7 and inner.cache_ttl == 3.0
+        assert repro.runtime(cache_capacity=9).cache_capacity == 9
+
+
+# ---------------------------------------------------------------------------
 # Satellite regressions: key dtype promotion + __call__ validation
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,128 @@
+"""End-to-end acceptance: campaign-tuned sharded training hits only tuned
+records.
+
+One subprocess (8 fake host devices, 2×4 mesh) runs the whole pipeline the
+PR is about:
+
+  1. ``plan_training_jobs`` derives the smoke train step's kernel jobs at
+     per-device local shard shapes from the arch config × production Layout;
+  2. ``campaign run`` executes them (tiny budget) into a database;
+  3. a Trainer dispatches two steps under ``repro.runtime(db=..,
+     mode="kernel")``;
+  4. the runtime's exported telemetry must show **ExactHit resolutions for
+     every kernel×bucket in the step — no TuneNow/Heuristic/CoverSet
+     fallbacks** — and cache hits on the repeated step.
+
+If the planner's site roster ever drifts from the model's dispatch sites,
+step 4 fails with the offending keys.
+"""
+import json
+import subprocess
+import sys
+
+_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"}
+
+_E2E = """
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import repro
+from repro.configs.base import SHAPES, get_config
+from repro.core.database import TuningDatabase
+from repro.core.evaluate import WallClockEvaluator
+from repro.core.search import RandomSearch
+from repro.campaign.planner import plan_training_jobs
+from repro.campaign.runner import run_campaign
+from repro.campaign.scheduler import build_manifest
+from repro.data.pipeline import DataConfig
+from repro.launch import defaults
+from repro.launch.mesh import make_mesh_from_spec
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+tmp = tempfile.mkdtemp()
+cfg = get_config("qwen2_0_5b").reduced()
+shape = SHAPES["train_smoke"]
+run = defaults.default_run(cfg, shape)
+layout = defaults.default_layout(cfg)
+mesh = make_mesh_from_spec("2x4")
+
+# 1. plan: local-shape jobs for this arch x Layout x mesh
+jobs = plan_training_jobs(cfg, shape, layout=layout, mesh_axes="2x4", run=run)
+manifest = build_manifest(jobs, total_budget=3 * len(jobs),
+                          path=os.path.join(tmp, "campaign.json"),
+                          min_budget=2, max_budget=3)
+
+# 2. run: populate the database (tiny searches keep CI fast; any valid
+# record exact-hits regardless of how good it is)
+db = TuningDatabase(os.path.join(tmp, "tuning.json"))
+summary = run_campaign(
+    manifest, db,
+    evaluator=WallClockEvaluator(repeats=1, warmup=0),
+    search_factory=lambda j: RandomSearch(budget=2),
+)
+
+# 3. train two steps under the campaign database, kernel mode
+rt = repro.runtime(db=db, mode="kernel", name="train-e2e")
+trainer = Trainer(
+    cfg, run, mesh, layout,
+    DataConfig(seed=0, batch_size=shape.global_batch, seq_len=shape.seq_len),
+    adamw.AdamWConfig(total_steps=2),
+    TrainerConfig(total_steps=2, checkpoint_every=100,
+                  checkpoint_dir=os.path.join(tmp, "ckpt"),
+                  async_checkpoint=False),
+    runtime=rt,
+)
+losses = [float(trainer.run_one_step()["loss"]) for _ in range(2)]
+
+# 4. export the telemetry the assertions run on
+print("RESULT_JSON=" + json.dumps({
+    "campaign": summary,
+    "planned_keys": sorted(j.db_key(manifest.platform) for j in manifest.jobs),
+    "losses": losses,
+    "telemetry": rt.telemetry.snapshot(),
+}))
+"""
+
+
+def test_campaign_tuned_training_is_all_exact_hits():
+    r = subprocess.run(
+        [sys.executable, "-c", _E2E],
+        capture_output=True, text=True, timeout=560, env=dict(_ENV), cwd=".",
+    )
+    line = next(
+        (l for l in r.stdout.splitlines() if l.startswith("RESULT_JSON=")), None
+    )
+    assert line, f"stdout={r.stdout[-1500:]} stderr={r.stderr[-2500:]}"
+    out = json.loads(line.split("=", 1)[1])
+
+    # the campaign ran every planned job
+    assert out["campaign"]["failed"] == 0, out["campaign"]
+    assert out["campaign"]["done"] == out["campaign"]["jobs"]
+
+    snap = out["telemetry"]
+    # every kernel×bucket the step dispatched resolved at the exact tier —
+    # no TuneNow, no CoverSet, no Heuristic, no Reference fallback
+    offending = {
+        key: tiers for key, tiers in snap["by_key"].items()
+        if set(tiers) - {"exact"}
+    }
+    assert not offending, f"non-exact resolutions: {offending}"
+    assert snap["tiers"].get("exact", 0) > 0
+    assert set(snap["tiers"]) == {"exact"}
+
+    # the dispatched buckets are a subset of what the campaign planned
+    planned = set(out["planned_keys"])
+    assert set(snap["by_key"]) <= planned
+
+    # kernel coverage: the step exercised all four tunable kernel families
+    kernels = {k.split("|")[0] for k in snap["by_key"]}
+    assert {"matmul", "rmsnorm", "softmax_xent", "flash_attention"} <= kernels
+
+    # second step re-used the warm resolution cache
+    assert snap["cache_hits"] > 0
+
+    import numpy as np
+
+    assert np.isfinite(out["losses"]).all()
