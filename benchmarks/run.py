@@ -10,7 +10,9 @@ Emits ``name,us_per_call,derived`` CSV rows (derived = %speedup or context).
   dispatch.*   — runtime resolution overhead, cold pipeline vs warm cache
                  (benchmarks/dispatch_overhead.py)
   train.*      — smoke train-step throughput under a pinned dispatch runtime
-                 (benchmarks/train_step_throughput.py)
+                 (benchmarks/train_step_throughput.py); train.bwd_* compares
+                 the reference-VJP backward recompute against the tuned
+                 backward plane (gradients as dispatch sites)
   kernel.*     — Pallas-kernel interpret-mode correctness-at-speed spot check
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
@@ -114,6 +116,21 @@ def main() -> None:
     rows.append((
         "train.dispatches", float(tres["dispatches"]),
         f"exact_share={tres['exact_share']:.2f}",
+    ))
+    # backward plane: kernel-mode step, reference-VJP recompute vs tuned
+    # backward dispatch (gradients as first-class dispatch sites)
+    bres = train_step_throughput.bench_bwd(quick=args.quick)
+    rows.append((
+        "train.bwd_reference_vjp.step_us", bres["fwd_only"]["step_us"],
+        "fwd-only tuned (gradients recompute the reference)",
+    ))
+    rows.append((
+        "train.bwd_dispatch.step_us", bres["fwd_bwd"]["step_us"],
+        f"{bres['bwd_step_delta_pct']:+.0f}% vs reference-VJP",
+    ))
+    rows.append((
+        "train.bwd_dispatch.sites", float(bres["fwd_bwd"]["bwd_dispatches"]),
+        f"bwd_exact_share={bres['fwd_bwd']['bwd_exact_share']:.2f}",
     ))
 
     # --- kernels (interpret-mode; correctness-weighted spot check) ---------

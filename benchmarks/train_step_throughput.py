@@ -7,8 +7,13 @@ accounting (exact share > 0 means the step ran on tuned records; on an
 empty database everything resolves at reference/heuristic, the untuned
 baseline the campaign is supposed to beat).
 
+:func:`bench_bwd` compares the two backward strategies in kernel mode —
+``bwd_dispatch=False`` (the old reference-VJP recompute: gradients bypass
+tuning entirely) vs ``bwd_dispatch=True`` (the tuned backward plane:
+gradients are dispatch sites of their own) — the ``train.bwd_*`` rows.
+
 Run directly:
-    PYTHONPATH=src python -m benchmarks.train_step_throughput [--db DB]
+    PYTHONPATH=src python -m benchmarks.train_step_throughput [--db DB] [--out J]
 or via the harness: PYTHONPATH=src python -m benchmarks.run (train.* rows).
 """
 from __future__ import annotations
@@ -76,6 +81,73 @@ def bench(quick: bool = False, db_path: Optional[str] = None,
     }
 
 
+def _one_kernel_run(steps: int, db_path: Optional[str], bwd_dispatch: bool) -> Dict:
+    import tempfile
+
+    import repro
+    from repro.configs.base import SHAPES, get_config
+    from repro.core.database import TuningDatabase
+    from repro.data.pipeline import DataConfig
+    from repro.launch import defaults
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import adamw
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config("qwen2_0_5b").reduced()
+    shape = SHAPES["train_smoke"]
+    rt = repro.runtime(
+        db=TuningDatabase(db_path) if db_path else TuningDatabase(None),
+        mode="kernel", bwd_dispatch=bwd_dispatch,
+        name=f"bench-train-bwd{int(bwd_dispatch)}",
+    )
+    trainer = Trainer(
+        cfg, defaults.default_run(cfg, shape), make_host_mesh(),
+        defaults.default_layout(cfg),
+        DataConfig(seed=0, batch_size=shape.global_batch, seq_len=shape.seq_len),
+        adamw.AdamWConfig(total_steps=steps + 1),
+        TrainerConfig(total_steps=steps + 1, checkpoint_every=10_000,
+                      checkpoint_dir=tempfile.mkdtemp(prefix="bench_ckpt_"),
+                      async_checkpoint=False, log_every=10_000),
+        runtime=rt,
+    )
+    trainer.run_one_step()                       # compile + warm caches
+    times = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        trainer.run_one_step()
+        times.append(time.perf_counter() - t0)
+    snap = rt.telemetry.snapshot()
+    phases = snap.get("phases", {})
+    bwd = phases.get("bwd", {})
+    return {
+        "step_us": sorted(times)[len(times) // 2] * 1e6,
+        "dispatches": snap["calls"],
+        "bwd_dispatches": sum(bwd.values()),
+        "bwd_exact_share": (bwd.get("exact", 0) / sum(bwd.values())) if bwd else 0.0,
+        "tiers": dict(snap["tiers"]),
+        "phases": {p: dict(v) for p, v in phases.items()},
+    }
+
+
+def bench_bwd(quick: bool = False, db_path: Optional[str] = None) -> Dict:
+    """Kernel-mode step time: reference-VJP backward vs tuned backward plane.
+
+    On a TPU with a campaign database, ``fwd_bwd`` is the win this PR is
+    about (gradient FLOPs stop running at reference speed); on the CPU host
+    the row still proves the protocol — the bwd plane dispatches, resolves,
+    and is observable per phase.
+    """
+    steps = 2 if quick else 4
+    fwd_only = _one_kernel_run(steps, db_path, bwd_dispatch=False)
+    fwd_bwd = _one_kernel_run(steps, db_path, bwd_dispatch=True)
+    return {
+        "fwd_only": fwd_only,
+        "fwd_bwd": fwd_bwd,
+        "bwd_step_delta_pct": 100.0 * (fwd_bwd["step_us"] - fwd_only["step_us"])
+        / max(fwd_only["step_us"], 1e-9),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
@@ -83,11 +155,30 @@ def main():
                     help="campaign-exported tuning database to dispatch against")
     ap.add_argument("--mode", default="auto",
                     choices=("auto", "kernel", "reference"))
+    ap.add_argument("--bwd-compare", action="store_true",
+                    help="also run the fwd-only vs fwd+bwd kernel-mode rows")
+    ap.add_argument("--out", default=None,
+                    help="write the result dict as JSON (the committed "
+                         "benchmarks/results/BENCH_train.json baseline)")
     args = ap.parse_args()
     r = bench(quick=args.quick, db_path=args.db, mode=args.mode)
     print(f"train step: {r['step_us']:.0f} us ({r['tok_per_s']:.0f} tok/s), "
           f"{r['dispatches']} dispatches, exact share "
           f"{100 * r['exact_share']:.0f}% (tiers: {r['tiers']})")
+    if args.bwd_compare or args.out:
+        b = bench_bwd(quick=args.quick, db_path=args.db)
+        r["bwd_compare"] = b
+        print(f"kernel-mode step: fwd-only-tuned {b['fwd_only']['step_us']:.0f} us "
+              f"vs fwd+bwd-tuned {b['fwd_bwd']['step_us']:.0f} us "
+              f"({b['bwd_step_delta_pct']:+.0f}%), "
+              f"{b['fwd_bwd']['bwd_dispatches']} bwd dispatches "
+              f"(exact {100 * b['fwd_bwd']['bwd_exact_share']:.0f}%)")
+    if args.out:
+        import json
+
+        with open(args.out, "w") as f:
+            json.dump(r, f, indent=1, sort_keys=True)
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -30,14 +30,19 @@ from ..core.database import make_key, shape_bucket
 from ..core.tuner import promoted_dtype
 
 # Kernels a campaign tunes by default. `attn_chunks` is the model-level
-# chunked-attention tunable (meaningful on any platform); the other four are
-# the Pallas kernel sites behind kernels/ops.py dispatch.
+# chunked-attention tunable (meaningful on any platform); the rest are the
+# Pallas kernel sites behind runtime dispatch — the `*_bwd` entries are the
+# tuned backward plane (gradient dispatch sites; matmul gradients reuse the
+# `matmul` tunable with transposed operands, so they need no entry).
 DEFAULT_KERNELS = (
     "matmul",
     "rmsnorm",
     "flash_attention",
     "softmax_xent",
     "attn_chunks",
+    "rmsnorm_bwd",
+    "flash_attention_bwd",
+    "softmax_xent_bwd",
 )
 
 
@@ -194,6 +199,15 @@ def plan_training_jobs(
     flash-attention job per distinct sliding-window value in the layer
     pattern (``key_extra`` must match dispatch's ``c{causal}w{window}``).
 
+    The roster covers the **backward plane** too: every matmul site derives
+    its dL/dx (``ct @ wᵀ``) and dL/dw (``xᵀ @ ct``) transposed-operand
+    matmul jobs — dL/dw keyed with the *token* dim localized, mirroring the
+    ``dp_dims`` override backward dispatch uses — and every rmsnorm / xent /
+    flash site derives its ``*_bwd`` tunable job (grad shapes follow the
+    same Layout × mesh local-shape rules, cotangents take the forward
+    output's shape). A campaign run against this plan pre-tunes both what
+    the forward *and* the backward of the train step resolve.
+
     `mesh_axes` is the mesh's axis→size map (or a "DATAxMODEL" spec string);
     no live mesh is needed, so a dev host can plan for a 256-chip pod.
     `run` carries microbatches/loss_chunk (defaults to the launcher's
@@ -233,6 +247,19 @@ def plan_training_jobs(
                 weight=float(weight),
             ))
 
+    def add_gemm(m, kdim, n, weight):
+        """One matmul dispatch site + its two backward dispatch sites.
+
+        The backward jobs mirror what `_matmul_bwd` dispatches at trace
+        time: dL/dx = ct[m,n] @ wᵀ[n,k] (token rows lead — ordinary
+        local-shape keying) and dL/dw = xᵀ[k,m] @ ct[m,n], whose token dim
+        sits at arg0-dim1/arg1-dim0 — dispatch passes ``dp_dims`` for it,
+        and `m` here is already the local token count, so the shapes agree.
+        """
+        add("matmul", [(m, kdim), (kdim, n)], [f, f], weight)
+        add("matmul", [(m, n), (n, kdim)], [f, f], weight)        # dL/dx
+        add("matmul", [(kdim, m), (m, n)], [f, f], weight)        # dL/dw
+
     # Per-layer site families (weights = executions per step).
     n_attn = n_norm = n_ffn = 0.0
     windows: Dict[int, float] = {}
@@ -248,34 +275,44 @@ def plan_training_jobs(
                 n_ffn += seg.repeats
 
     # Attention projections: x[T, d] @ w (canonicalized to 2-D rows).
-    add("matmul", [(T, d), (d, H * hd)], [f, f], n_attn)          # q proj
-    add("matmul", [(T, d), (d, KV * hd)], [f, f], 2 * n_attn)     # k, v proj
-    add("matmul", [(T, H * hd), (H * hd, d)], [f, f], n_attn)     # o proj
+    add_gemm(T, d, H * hd, n_attn)                                # q proj
+    add_gemm(T, d, KV * hd, 2 * n_attn)                           # k, v proj
+    add_gemm(T, H * hd, d, n_attn)                                # o proj
     # FFN gemms, per ffn_kind (glu kinds run two up-projections).
     if cfg.d_ff > 0 and n_ffn > 0:
         n_up = 2 if cfg.ffn_kind in ("swiglu", "geglu") else 1
-        add("matmul", [(T, d), (d, cfg.d_ff)], [f, f], n_up * n_ffn)
-        add("matmul", [(T, cfg.d_ff), (cfg.d_ff, d)], [f, f], n_ffn)
-    # RMSNorm rows: per-layer norms + the final norm.
+        add_gemm(T, d, cfg.d_ff, n_up * n_ffn)
+        add_gemm(T, cfg.d_ff, d, n_ffn)
+    # RMSNorm rows: per-layer norms + the final norm, fwd + fused bwd
+    # (cotangent is output-shaped: another [T, d] operand).
     add("rmsnorm", [(T, d), (d,)], [f, f], n_norm + 1)
-    # Chunked loss: each seq chunk runs one unembed gemm + one fused xent.
+    add("rmsnorm_bwd", [(T, d), (T, d), (d,)], [f, f, f], n_norm + 1)
+    # Chunked loss: each seq chunk runs one unembed gemm + one fused xent;
+    # backward adds the unembed's transposed gemms and the fused d_logits
+    # pass (per-row loss cotangent is fp32, like the loss output).
     if shape.kind == "train":
         chunk = max(1, min(int(getattr(run, "loss_chunk", 512)), s))
         rows = min(b_loc * chunk, max_tokens)
         n_chunks = max(1.0, s / chunk)
-        add("matmul", [(rows, d), (d, cfg.vocab_size)], [f, f], n_chunks)
+        add_gemm(rows, d, cfg.vocab_size, n_chunks)
         add("softmax_xent", [(rows, cfg.vocab_size), (rows,)], [f, "int32"],
             n_chunks)
+        add("softmax_xent_bwd",
+            [(rows,), (rows, cfg.vocab_size), (rows,)],
+            ["float32", f, "int32"], n_chunks)
     # Causal attention at the local batch, one job per distinct window
-    # (dispatch keys flash_attention with extra=c{causal}w{window}). No
-    # attn_chunks job: training never dispatches that tunable (the chunked
-    # path calls chunked_attention directly) — budget goes only to sites
-    # the step resolves.
+    # (dispatch keys flash_attention with extra=c{causal}w{window}) plus the
+    # fused backward site (cotangent leads with the q shape). No attn_chunks
+    # job: training never dispatches that tunable (the chunked path calls
+    # chunked_attention directly) — budget goes only to sites the step
+    # resolves.
     b_att = max(1, min(b_loc, max_tokens // max(1, s)))
     q = (b_att, H, s, hd)
     kv = (b_att, KV, s, hd)
     for w, n in sorted(windows.items()):
         add("flash_attention", [q, kv, kv], [f, f, f], n, extra=f"cTruew{w}")
+        add("flash_attention_bwd", [q, q, kv, kv], [f, f, f, f], n,
+            extra=f"cTruew{w}")
     return jobs
 
 
@@ -317,6 +354,12 @@ def plan_serving_jobs(
     full slot width every tick: gemms/norms at `max_batch` rows, and
     decode-shaped attention lookups (q_len = 1 against an s-deep cache) —
     executed ~s times per request, hence the seq-length weight.
+
+    The gemm roster is trace-faithful, mirroring `plan_training_jobs`' site
+    list: q and k/v projections, the o projection ([.., H·hd] @ [H·hd, d]),
+    FFN up/down, and the unembed — prefill reads logits only at the last
+    real position ([1, d] rows), decode at every slot ([max_batch, d]) —
+    so a warmed engine resolves every site it will dispatch at ExactHit.
     """
     if cfg.frontend is not None:
         return []                     # the engine serves token-in archs only
@@ -345,8 +388,16 @@ def plan_serving_jobs(
         if s <= max_tokens:
             scen_p = f"{cfg.name}/serve_prefill_b1s{s}"
             add("matmul", [(s, d), (d, H * hd)], [f, f], counts["attn"], scen_p)
+            add("matmul", [(s, d), (d, KV * hd)], [f, f], 2 * counts["attn"], scen_p)
+            add("matmul", [(s, H * hd), (H * hd, d)], [f, f], counts["attn"], scen_p)
             if cfg.d_ff > 0:
-                add("matmul", [(s, d), (d, cfg.d_ff)], [f, f], counts["ffn"], scen_p)
+                n_up = 2 if cfg.ffn_kind in ("swiglu", "geglu") else 1
+                add("matmul", [(s, d), (d, cfg.d_ff)], [f, f],
+                    n_up * counts["ffn"], scen_p)
+                add("matmul", [(s, cfg.d_ff), (cfg.d_ff, d)], [f, f],
+                    counts["ffn"], scen_p)
+            # last-real-token logits: one [1, d] unembed gemm per admission
+            add("matmul", [(1, d), (d, cfg.vocab_size)], [f, f], 1.0, scen_p)
             add("rmsnorm", [(s, d), (d,)], [f, f], counts["norm"], scen_p)
             q = (1, H, s, hd)
             kv = (1, KV, s, hd)
@@ -358,8 +409,15 @@ def plan_serving_jobs(
             continue
         scen_d = f"{cfg.name}/serve_decode_b{B}s{s}"
         add("matmul", [(B, d), (d, H * hd)], [f, f], counts["attn"] * s, scen_d)
+        add("matmul", [(B, d), (d, KV * hd)], [f, f], 2 * counts["attn"] * s, scen_d)
+        add("matmul", [(B, H * hd), (H * hd, d)], [f, f], counts["attn"] * s, scen_d)
         if cfg.d_ff > 0:
-            add("matmul", [(B, d), (d, cfg.d_ff)], [f, f], counts["ffn"] * s, scen_d)
+            n_up = 2 if cfg.ffn_kind in ("swiglu", "geglu") else 1
+            add("matmul", [(B, d), (d, cfg.d_ff)], [f, f],
+                n_up * counts["ffn"] * s, scen_d)
+            add("matmul", [(B, cfg.d_ff), (cfg.d_ff, d)], [f, f],
+                counts["ffn"] * s, scen_d)
+        add("matmul", [(B, d), (d, cfg.vocab_size)], [f, f], float(s), scen_d)
         add("rmsnorm", [(B, d), (d,)], [f, f], counts["norm"] * s, scen_d)
     # decode-shaped attention lookup: one query row against the pool cache.
     # The slot pool allocates its cache at max_seq depth ONCE — decode never

@@ -37,7 +37,8 @@ def materialize_args(job: TuningJob, seed: int = 0):
 
     Float args are unit-scale gaussians (what the correctness gates and the
     paper's own measurements use); integer args are labels/ids drawn against
-    the first arg's trailing dim (the vocab for softmax_xent).
+    the first ≥2-D arg's trailing dim (the vocab for softmax_xent and its
+    backward, whose leading cotangent arg is 1-D).
     """
     import jax.numpy as jnp
 
@@ -45,12 +46,16 @@ def materialize_args(job: TuningJob, seed: int = 0):
     # must be identical across resumed runs.
     rs = np.random.RandomState(seed ^ (zlib.crc32(job.kernel.encode()) & 0xFFFF))
     args = []
-    hi = max(2, int(job.arg_shapes[0][-1]))       # vocab bound for label args
+    hi = max(2, max(
+        (int(s[-1]) for s in job.arg_shapes if len(s) >= 2),
+        default=2,
+    ))                                             # vocab bound for label args
+    attn_like = ("flash_attention", "flash_attention_bwd", "attn_chunks")
     for shape, dtype in zip(job.arg_shapes, job.arg_dtypes):
         if dtype.startswith("int") or dtype.startswith("uint"):
             args.append(jnp.asarray(rs.randint(0, hi, size=shape), jnp.int32))
         else:
-            scale = 0.3 if job.kernel in ("flash_attention", "attn_chunks") else 1.0
+            scale = 0.3 if job.kernel in attn_like else 1.0
             args.append(jnp.asarray(rs.randn(*shape) * scale, jnp.dtype(dtype)))
     return tuple(args)
 
@@ -154,6 +159,22 @@ def _merge_snapshots(prev: Optional[Dict], new: Dict) -> Dict:
         for t, n in per.items():
             agg[t] = agg.get(t, 0) + n
     out["by_key"] = by_key
+    phases = {p: dict(v) for p, v in prev.get("phases", {}).items()}
+    for p, per in new.get("phases", {}).items():
+        agg = phases.setdefault(p, {})
+        for t, n in per.items():
+            agg[t] = agg.get(t, 0) + n
+    out["phases"] = phases
+    by_kp = {
+        p: {k: dict(v) for k, v in per.items()}
+        for p, per in prev.get("by_key_phase", {}).items()
+    }
+    for p, per in new.get("by_key_phase", {}).items():
+        for k, tiers in per.items():
+            agg = by_kp.setdefault(p, {}).setdefault(k, {})
+            for t, n in tiers.items():
+                agg[t] = agg.get(t, 0) + n
+    out["by_key_phase"] = by_kp
     return out
 
 
@@ -181,12 +202,21 @@ def summarize_telemetry(snap: Dict) -> Dict:
                 agg.get(t, 0) for t in ("exact", "tune", "cover", "override")
             ) / total,
         }
+    phases = {}
+    for phase, per in snap.get("phases", {}).items():
+        total = sum(per.values()) or 1
+        phases[phase] = {
+            "calls": sum(per.values()),
+            "tiers": dict(per),
+            "exact_share": per.get("exact", 0) / total,
+        }
     return {
         "calls": calls,
         "tier_rates": {t: n / calls for t, n in tiers.items()} if calls else {},
         "cache_hit_rate": snap.get("cache_hit_rate", 0.0),
         "cache_evictions": snap.get("cache_evictions", 0),
         "kernels": kernels,
+        "phases": phases,
     }
 
 
@@ -221,6 +251,9 @@ def format_telemetry(summary: Dict, label: str) -> str:
         lines.append(f"  {kernel:<16} {row['calls']:>6} calls  "
                      f"exact {100 * row['exact_share']:.0f}%  "
                      f"measured {100 * row['measured_share']:.0f}%")
+    for phase, row in sorted(summary.get("phases", {}).items()):
+        lines.append(f"  phase {phase:<10} {row['calls']:>6} calls  "
+                     f"exact {100 * row['exact_share']:.0f}%")
     return "\n".join(lines)
 
 

@@ -53,14 +53,27 @@ def job_roofline_seconds(job: TuningJob, profile: HardwareProfile) -> float:
         rows, d = sh[0]
         flops = 4.0 * rows * d                       # square, mean, rsqrt-mul, scale
         mem = 2.0 * rows * d * dt                    # one read + one write
+    elif job.kernel == "rmsnorm_bwd":
+        rows, d = sh[0]                              # ct leads, x-shaped
+        flops = 8.0 * rows * d                       # two reductions + dx combine
+        mem = 3.0 * rows * d * dt                    # ct + x read, dx write
     elif job.kernel == "softmax_xent":
         rows, vocab = sh[0]
         flops = 6.0 * rows * vocab                   # max/exp/sum + label gather
         mem = rows * vocab * dt                      # single streamed read
+    elif job.kernel == "softmax_xent_bwd":
+        rows, vocab = sh[1]                          # ct[rows] leads; logits 2nd
+        flops = 8.0 * rows * vocab                   # lse pass + (p − onehot)·ct
+        mem = 3.0 * rows * vocab * dt                # two logits reads + dl write
     elif job.kernel in ("flash_attention", "attn_chunks"):
         b, h, s, hd = sh[0]
         flops = 2.0 * 2.0 * b * h * s * (s / 2.0) * hd   # qk^T + p@v, causal half
         mem = (sum(_prod(x) for x in sh) + _prod(sh[0])) * dt  # q,k,v read + o write
+    elif job.kernel == "flash_attention_bwd":
+        b, h, s, hd = sh[0]                          # ct leads, q-shaped
+        # recompute fwd + dq pass (2 gemms) + dkv pass (4 gemms): ~2.5× fwd
+        flops = 5.0 * 2.0 * b * h * s * (s / 2.0) * hd
+        mem = (3.0 * sum(_prod(x) for x in sh[1:]) + 4.0 * _prod(sh[0])) * dt
     else:
         elems = sum(_prod(s) for s in sh)
         flops = 2.0 * elems

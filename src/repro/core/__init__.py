@@ -71,6 +71,7 @@ from .tuner import TuningResult, autotune, promoted_dtype, tune_or_lookup
 # submodule. Use `repro.runtime(...)` (top-level re-export) or
 # `TunedRuntime(...)` directly.
 from .runtime import (
+    PHASES,
     CoverSet,
     ExactHit,
     Heuristic,
@@ -81,8 +82,10 @@ from .runtime import (
     Telemetry,
     TunedRuntime,
     TuneNow,
+    current_phase,
     current_runtime,
     default_policy,
     dispatch,
+    dispatch_phase,
     entry_point,
 )

@@ -62,12 +62,29 @@ class DispatchSpec:
       campaign records tuned at local shard shapes exact-hit inside
       jit-sharded traces. Default ``(0,)`` (the row-major convention);
       ``()`` disables localization for a kernel.
-    * ``vjp`` — how dispatch differentiates the kernel path. ``"reference"``
-      (default) wraps the bound variant in a ``jax.custom_vjp`` whose
-      backward pass is the VJP of the reference implementation, so tuned
-      kernels are trainable even when the Pallas kernel itself has no
-      transpose rule (forward stays the tuned kernel; backward recomputes
-      through the reference math). ``"none"`` leaves the variant bare.
+    * ``vjp`` — how dispatch differentiates the kernel path.
+
+      * ``"dispatch"`` — the backward pass is itself a set of dispatch
+        sites: the bound variant is wrapped in a ``jax.custom_vjp`` whose
+        backward calls ``bwd(ct, *canonical_args, **call_kwargs)``, and the
+        ``bwd`` callable routes each gradient through the runtime
+        (``dispatch(...)`` on the same or a sibling tunable). Every
+        backward call then resolves through the policy pipeline with its
+        own database key and telemetry rows (phase-tagged ``bwd``), so a
+        campaign can pre-tune gradients exactly like forwards. Falls back
+        to ``"reference"`` behaviour when the runtime disables backward
+        dispatch (``bwd_dispatch=False``) or no ``bwd`` is declared.
+      * ``"reference"`` — wraps the bound variant in a ``jax.custom_vjp``
+        whose backward pass is the VJP of the reference implementation, so
+        tuned kernels are trainable even when the Pallas kernel itself has
+        no transpose rule (forward stays the tuned kernel; backward
+        recomputes through the reference math).
+      * ``"none"`` — leaves the variant bare (backward-plane tunables use
+        this: their second derivative is never taken).
+    * ``bwd`` — the backward dispatch plan for ``vjp="dispatch"``: called
+      as ``bwd(ct, *canonical_args, **call_kwargs)``, returns one cotangent
+      per canonical positional arg (``None`` for non-differentiable args —
+      integer labels and the like).
     """
 
     reference: Optional[Callable] = None
@@ -76,6 +93,7 @@ class DispatchSpec:
     example: Optional[Callable[[], Tuple[tuple, Dict[str, Any]]]] = None
     data_parallel_args: Tuple[int, ...] = (0,)
     vjp: str = "reference"
+    bwd: Optional[Callable] = None
 
     def reference_for(self, tunable: "Tunable") -> Optional[Callable]:
         return self.reference if self.reference is not None else tunable.reference

@@ -29,10 +29,27 @@ and makes that decision scoped, swappable, and observable:
 
 * **Telemetry** — every dispatch records which tier served which
   kernel×bucket (:class:`Telemetry`; tiers ``override | exact | tune |
-  cover | heuristic | reference`` plus cache hits). This is the paper's
+  cover | heuristic | reference`` plus cache hits), tagged with the
+  dispatch *phase*: ``fwd`` for forward sites, ``bwd`` for gradient sites
+  resolved inside a backward dispatch plan. This is the paper's
   sustained-performance accounting: after a warmed serving run,
   ``telemetry.snapshot()`` shows exactly how much traffic ran on tuned
-  records vs cover-set entries vs the vendor-baseline heuristic.
+  records vs cover-set entries vs the vendor-baseline heuristic — and
+  after a tuned train step, whether the *gradient* sites hit too.
+
+* **Tuned backward plane** — in kernel mode, a tunable whose dispatch spec
+  declares ``vjp="dispatch"`` + a ``bwd`` plan differentiates through
+  *dispatch sites*: the bound variant is wrapped in a ``jax.custom_vjp``
+  whose backward calls ``spec.bwd(ct, *canonical_args, **kwargs)``, and
+  that plan routes each gradient through ``dispatch(...)`` again (matmul's
+  dL/dx and dL/dw are transposed-operand matmul dispatches; flash
+  attention / rmsnorm / softmax-xent resolve their own ``*_bwd``
+  tunables). Every backward call therefore gets its own database key,
+  policy resolution, and ``bwd``-tagged telemetry row — a campaign
+  pre-tunes gradients exactly like forwards, and a tuned train step stops
+  paying reference-speed backward recomputes. ``runtime(...,
+  bwd_dispatch=False)`` restores the old reference-VJP recompute (the
+  fwd-only-tuned baseline the benchmarks compare against).
 
 * **Resolution cache** — per-runtime ``{db key: Resolution}``; repeated jit
   traces of the same shape bucket stop re-hitting the database (see
@@ -50,28 +67,21 @@ and makes that decision scoped, swappable, and observable:
   sharding-aware campaign (``plan_training_jobs``) tuned.
 
 Deployment entry points are generated from the registry
-(:func:`entry_point` / :func:`dispatch`): ``kernels/ops.py`` is nothing but
-back-compat shims over them, so adding a kernel is one ``@tunable(...,
-dispatch=DispatchSpec(...))`` decorator with zero edits anywhere else.
-
-Migration (old global-mode API → runtime API)::
-
-    ops.set_kernel_mode(True)          ->  with repro.runtime(mode="kernel"): ...
-    ops.kernels_enabled()              ->  repro.current_runtime().kernel_mode_active
-    set_default_db(db); ops.matmul(..) ->  with repro.runtime(db=db): dispatch("matmul", ..)
-
-The old names still work (they mutate/read the process-default runtime) but
-are deprecated; new code should never reach for process-global state.
+(:func:`entry_point` / :func:`dispatch`), so adding a kernel is one
+``@tunable(..., dispatch=DispatchSpec(...))`` decorator with zero edits
+anywhere else. The old global-mode API (``ops.set_kernel_mode`` /
+``ops.kernels_enabled`` / ``ops.<kernel>``) completed its deprecation cycle
+and is gone — ``kernels/ops.py`` survives only as the migration guide.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import contextvars
 import dataclasses
 import os
 import threading
 import time
-import warnings
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 
 from .annotate import DispatchSpec, Tunable, get_tunable
@@ -98,6 +108,37 @@ def _platform() -> str:
 
 # Resolution tiers, in the order the default pipeline consults them.
 TIERS = ("override", "exact", "tune", "cover", "heuristic", "reference")
+
+# Dispatch phases: forward sites vs gradient sites (dispatches made while a
+# backward dispatch plan is executing). Ambient, not threaded through call
+# signatures: a bwd plan is ordinary model-layer code calling dispatch().
+PHASES = ("fwd", "bwd")
+
+_phase_ctx: "contextvars.ContextVar[str]" = contextvars.ContextVar(
+    "repro_dispatch_phase", default="fwd"
+)
+
+
+@contextlib.contextmanager
+def dispatch_phase(phase: str):
+    """Tag every dispatch in this scope with `phase` ('fwd' | 'bwd').
+
+    The runtime enters ``dispatch_phase("bwd")`` around a dispatch spec's
+    backward plan, so telemetry separates gradient-site resolutions from
+    forward ones — the accounting behind "the train step's backward FLOPs
+    run on tuned records too".
+    """
+    if phase not in PHASES:
+        raise ValueError(f"phase {phase!r} not in {PHASES}")
+    tok = _phase_ctx.set(phase)
+    try:
+        yield
+    finally:
+        _phase_ctx.reset(tok)
+
+
+def current_phase() -> str:
+    return _phase_ctx.get()
 
 
 # ---------------------------------------------------------------------------
@@ -244,6 +285,13 @@ class Telemetry:
     ``by_key``   — ``{db key: {tier: count}}`` (reference-mode and explicit
                    ``config=`` dispatches, which never compute a bucket key,
                    are recorded under ``"<kernel>|*"``).
+    ``phases``   — ``{phase: {tier: count}}`` for ``fwd`` vs ``bwd``
+                   dispatch sites (the tuned-backward-plane accounting: a
+                   fully pre-tuned train step shows ``exact``-only counts
+                   under BOTH phases).
+    ``by_key_phase`` — ``{phase: {db key: {tier: count}}}``: the per-site
+                   breakdown split by phase, so a gate can name the exact
+                   gradient bucket that fell off the tuned path.
     ``cache_hits`` / ``calls`` — resolution-cache effectiveness.
     ``cache_evictions`` — entries dropped by the cache's LRU/TTL bound (a
                    nonzero rate on a short-lived run usually means the
@@ -258,13 +306,16 @@ class Telemetry:
         with getattr(self, "_lock", threading.Lock()):
             self.tiers: Dict[str, int] = {}
             self.by_key: Dict[str, Dict[str, int]] = {}
+            self.phases: Dict[str, Dict[str, int]] = {}
+            self.by_key_phase: Dict[str, Dict[str, Dict[str, int]]] = {}
             self.calls = 0
             self.cache_hits = 0
             self.cache_evictions = 0
 
     def record(self, kernel: str, key: Optional[str], tier: str,
-               cached: bool = False) -> None:
+               cached: bool = False, phase: Optional[str] = None) -> None:
         k = key if key is not None else f"{kernel}|*"
+        phase = phase if phase is not None else _phase_ctx.get()
         with self._lock:
             self.calls += 1
             if cached:
@@ -272,6 +323,10 @@ class Telemetry:
             self.tiers[tier] = self.tiers.get(tier, 0) + 1
             per = self.by_key.setdefault(k, {})
             per[tier] = per.get(tier, 0) + 1
+            ph = self.phases.setdefault(phase, {})
+            ph[tier] = ph.get(tier, 0) + 1
+            pk = self.by_key_phase.setdefault(phase, {}).setdefault(k, {})
+            pk[tier] = pk.get(tier, 0) + 1
 
     def record_eviction(self, count: int = 1) -> None:
         with self._lock:
@@ -292,6 +347,11 @@ class Telemetry:
                 "tiers": dict(self.tiers),
                 "tier_rates": {t: n / total for t, n in self.tiers.items()},
                 "by_key": {k: dict(v) for k, v in self.by_key.items()},
+                "phases": {p: dict(v) for p, v in self.phases.items()},
+                "by_key_phase": {
+                    p: {k: dict(v) for k, v in per.items()}
+                    for p, per in self.by_key_phase.items()
+                },
             }
 
     def write(self, path: str) -> None:
@@ -317,6 +377,11 @@ class Telemetry:
                     f"  tier {tier:<9} {snap['tiers'][tier]}"
                     f" ({100 * snap['tier_rates'][tier]:.0f}%)"
                 )
+        for phase in PHASES:
+            per = snap["phases"].get(phase)
+            if per:
+                detail = ", ".join(f"{t}={per[t]}" for t in TIERS if t in per)
+                lines.append(f"  phase {phase:<8} {sum(per.values())} ({detail})")
         for key in sorted(snap["by_key"]):
             per = snap["by_key"][key]
             detail = ", ".join(f"{t}={per[t]}" for t in TIERS if t in per)
@@ -375,6 +440,7 @@ class TunedRuntime:
         platform: Union[str, None, object] = _INHERIT,
         cache_capacity: Union[int, object] = _INHERIT,
         cache_ttl: Union[float, None, object] = _INHERIT,
+        bwd_dispatch: Union[bool, object] = _INHERIT,
         name: str = "",
         _is_root: bool = False,
     ):
@@ -405,6 +471,13 @@ class TunedRuntime:
         self.cache_ttl: Optional[float] = (
             cache_ttl if cache_ttl is not _INHERIT
             else (parent.cache_ttl if parent else None)
+        )
+        # Whether kernel-mode dispatch differentiates through the tuned
+        # backward plane (vjp="dispatch" specs). False restores the
+        # reference-VJP recompute — the fwd-only-tuned baseline.
+        self.bwd_dispatch = bool(
+            bwd_dispatch if bwd_dispatch is not _INHERIT
+            else (parent.bwd_dispatch if parent else True)
         )
         self.name = name or ("default" if _is_root else f"runtime@{id(self):x}")
         self.telemetry = Telemetry()
@@ -495,7 +568,8 @@ class TunedRuntime:
     def resolve(self, tunable: Union[str, Tunable], args: Sequence[Any],
                 key_extra: str = "",
                 allow_tune: Optional[bool] = None,
-                tune_kwargs: Optional[Dict[str, Any]] = None) -> Resolution:
+                tune_kwargs: Optional[Dict[str, Any]] = None,
+                dp_dims: Optional[Dict[int, int]] = None) -> Resolution:
         """Run the policy pipeline for (tunable, args), with caching.
 
         Returns the cached :class:`Resolution` when this bucket key was
@@ -507,13 +581,17 @@ class TunedRuntime:
         mutating a runtime other threads may be dispatching through). A
         cached resolution wins over ``allow_tune=True`` — ``clear_cache()``
         first to force re-tuning of already-resolved buckets.
+
+        ``dp_dims`` overrides which dim of which arg is keyed at its local
+        shard size under a sharded mesh (see ``tuner._args_key``) — backward
+        dispatch sites with transposed operands pass it.
         """
         from .tuner import _args_key  # late: tuner imports this module's deps
 
         tunable = _as_tunable(tunable)
         db = self.db if self.db is not None else default_db()
         platform = self.platform or _platform()
-        key = _args_key(tunable, args, platform, key_extra)
+        key = _args_key(tunable, args, platform, key_extra, dp_dims=dp_dims)
         hit = self._cache_get(key, db)
         if hit is not None:
             self.telemetry.record(tunable.name, key, hit.tier, cached=True)
@@ -538,7 +616,8 @@ class TunedRuntime:
 
     # -- dispatch ------------------------------------------------------------
     def dispatch(self, tunable: Union[str, Tunable], *args,
-                 config: Optional[Config] = None, **kwargs):
+                 config: Optional[Config] = None,
+                 dp_dims: Optional[Dict[int, int]] = None, **kwargs):
         """Execute one tunable through this runtime's resolution chain.
 
         Reference mode wins over everything — including ``config=`` — just
@@ -550,10 +629,13 @@ class TunedRuntime:
         arguments, and the :class:`Reference` tier executes the dispatch
         spec's reference fn on the *original* arguments.
 
-        The kernel path is differentiable (``DispatchSpec.vjp="reference"``,
-        the default): the bound variant is wrapped so its backward pass is
-        the reference implementation's VJP — training steps can dispatch
-        tuned Pallas kernels that have no transpose rule of their own.
+        The kernel path is differentiable: with ``vjp="dispatch"`` and a
+        declared backward plan (and ``bwd_dispatch`` enabled on this
+        runtime), gradients are themselves dispatch sites resolved through
+        this same chain under ``dispatch_phase("bwd")``; with
+        ``vjp="reference"`` the bound variant's backward recomputes the
+        reference implementation's VJP. ``dp_dims`` overrides local-shape
+        keying per arg (backward sites with transposed operands).
         """
         tunable = _as_tunable(tunable)
         spec = tunable.dispatch or _DEFAULT_SPEC
@@ -563,12 +645,13 @@ class TunedRuntime:
         if config is not None:
             self.telemetry.record(tunable.name, None, "override")
             cargs, restore = spec.canon(args)
-            return restore(_kernel_call(tunable, spec, config, cargs, kwargs))
+            return restore(_kernel_call(self, tunable, spec, config, cargs, kwargs))
         cargs, restore = spec.canon(args)
-        res = self.resolve(tunable, cargs, key_extra=spec.extra_for(kwargs))
+        res = self.resolve(tunable, cargs, key_extra=spec.extra_for(kwargs),
+                           dp_dims=dp_dims)
         if res.config is None:
             return _reference_call(tunable, spec, args, kwargs)
-        return restore(_kernel_call(tunable, spec, res.config, cargs, kwargs))
+        return restore(_kernel_call(self, tunable, spec, res.config, cargs, kwargs))
 
     def __repr__(self) -> str:
         db = "default" if self.db is None else (self.db.path or "memory")
@@ -582,24 +665,34 @@ class TunedRuntime:
 _DEFAULT_SPEC = DispatchSpec()
 
 
-def _kernel_call(tunable: Tunable, spec: DispatchSpec, config: Config,
-                 cargs: tuple, kwargs: Dict[str, Any]):
+def _kernel_call(runtime: "TunedRuntime", tunable: Tunable, spec: DispatchSpec,
+                 config: Config, cargs: tuple, kwargs: Dict[str, Any]):
     """Execute one bound kernel variant on canonical args, trainably.
 
     Pallas kernels have no transpose rules, so a bare variant inside
-    ``jax.grad`` fails. With ``spec.vjp == "reference"`` (default) and a
-    declared reference, the variant is wrapped in a ``jax.custom_vjp``:
-    forward runs the tuned kernel, backward runs the VJP of the reference
-    implementation on the same (canonical) arguments — mathematically the
-    reference gradient, which the tuner's correctness gate already holds the
-    kernel output to. The cost is one reference recompute in the backward
-    pass, the standard price of a fwd-only fused kernel.
+    ``jax.grad`` fails. Three backward strategies, per ``spec.vjp``:
+
+    * ``"dispatch"`` (with a declared ``spec.bwd`` and the runtime's
+      ``bwd_dispatch`` enabled) — the variant is wrapped in a
+      ``jax.custom_vjp`` whose backward executes the spec's backward plan
+      under ``dispatch_phase("bwd")``: each gradient is a dispatch site of
+      its own, resolved through the active runtime's policy pipeline with
+      its own database key and telemetry row. The tuned backward plane.
+    * ``"reference"`` — backward runs the VJP of the reference
+      implementation on the same (canonical) arguments: mathematically the
+      reference gradient, at the cost of one reference recompute (the
+      fwd-only-tuned baseline; also the fallback when a dispatch-vjp
+      tunable runs under ``bwd_dispatch=False``).
+    * ``"none"`` — the bare variant (backward-plane tunables themselves).
     """
     import jax
 
     variant = tunable.variant(**config)
     ref = spec.reference_for(tunable)
-    if spec.vjp != "reference" or ref is None:
+    mode = spec.vjp
+    if mode == "dispatch" and (spec.bwd is None or not runtime.bwd_dispatch):
+        mode = "reference"
+    if mode == "none" or (mode == "reference" and ref is None):
         return variant(*cargs, **kwargs)
 
     # kwargs (eps/causal/window/...) are schedule-or-semantics flags, never
@@ -611,11 +704,46 @@ def _kernel_call(tunable: Tunable, spec: DispatchSpec, config: Config,
     def fwd(*a):
         return variant(*a, **kwargs), a
 
-    def bwd(a, ct):
-        return jax.vjp(lambda *p: ref(*p, **kwargs), *a)[1](ct)
+    if mode == "dispatch":
+        def bwd(a, ct):
+            with dispatch_phase("bwd"):
+                grads = spec.bwd(ct, *a, **kwargs)
+            return _match_cotangents(grads, a)
+    else:
+        def bwd(a, ct):
+            return jax.vjp(lambda *p: ref(*p, **kwargs), *a)[1](ct)
 
     run.defvjp(fwd, bwd)
     return run(*cargs)
+
+
+def _match_cotangents(grads, primals) -> tuple:
+    """Align a backward plan's outputs with custom_vjp's cotangent contract.
+
+    The plan returns one gradient per canonical primal, ``None`` for
+    non-differentiable args. JAX expects a ``float0`` cotangent for integer
+    primals (labels and the like) and the primal's dtype for inexact ones.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    grads = tuple(grads)
+    if len(grads) != len(primals):
+        raise ValueError(
+            f"backward plan returned {len(grads)} gradients for "
+            f"{len(primals)} primals"
+        )
+    out = []
+    for g, x in zip(grads, primals):
+        dtype = jnp.result_type(x)
+        if not jnp.issubdtype(dtype, jnp.inexact):
+            out.append(np.zeros(np.shape(x), jax.dtypes.float0))
+        elif g is None:
+            out.append(jnp.zeros(jnp.shape(x), dtype))
+        else:
+            out.append(g.astype(dtype))
+    return tuple(out)
 
 
 def _reference_call(tunable: Tunable, spec: DispatchSpec, args, kwargs):
@@ -683,13 +811,15 @@ def runtime(
     platform: Union[str, None, object] = _INHERIT,
     cache_capacity: Union[int, object] = _INHERIT,
     cache_ttl: Union[float, None, object] = _INHERIT,
+    bwd_dispatch: Union[bool, object] = _INHERIT,
     name: str = "",
 ) -> TunedRuntime:
     """Create a scoped dispatch runtime (use as ``with repro.runtime(...)``)."""
     return TunedRuntime(
         db=db, mode=mode, policy=policy, allow_tune=allow_tune,
         tune_kwargs=tune_kwargs, platform=platform,
-        cache_capacity=cache_capacity, cache_ttl=cache_ttl, name=name,
+        cache_capacity=cache_capacity, cache_ttl=cache_ttl,
+        bwd_dispatch=bwd_dispatch, name=name,
     )
 
 
@@ -718,28 +848,3 @@ def entry_point(name: str) -> Callable:
         "(resolution: the active TunedRuntime's policy pipeline)."
     )
     return call
-
-
-def kernels_enabled() -> bool:
-    """Deprecated shim: whether the active runtime takes the kernel path."""
-    warnings.warn(
-        "ops.kernels_enabled()/repro.core.runtime.kernels_enabled() is "
-        "deprecated; read repro.current_runtime().kernel_mode_active",
-        DeprecationWarning, stacklevel=2,
-    )
-    return current_runtime().kernel_mode_active
-
-
-def set_kernel_mode(use_pallas: bool) -> None:
-    """Deprecated shim: flip the *process-default* runtime's mode.
-
-    Prefer ``with repro.runtime(mode=...)``. This mutates global state and
-    does not affect (or see) scoped runtimes already on the stack.
-    """
-    warnings.warn(
-        "ops.set_kernel_mode()/repro.core.runtime.set_kernel_mode() is "
-        'deprecated; use a scoped `with repro.runtime(mode="kernel"|'
-        '"reference")` context instead',
-        DeprecationWarning, stacklevel=2,
-    )
-    _root_runtime().mode = "kernel" if use_pallas else "reference"

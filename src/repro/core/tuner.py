@@ -8,9 +8,10 @@ This is the paper's §2 loop end-to-end:
   4. outputs are compared with the reference (gate), failures pruned;
   5. the best surviving variant is recorded in the per-platform database.
 
-`tune_or_lookup` is the deployment entry point used by `kernels/ops.py`:
-database hit ⇒ zero-cost specialization (performance portability); miss ⇒
-either tune now (`allow_tune=True`) or fall back to the shape heuristic.
+`tune_or_lookup` is the legacy deployment helper (the dispatch runtime's
+policy pipeline supersedes it): database hit ⇒ zero-cost specialization
+(performance portability); miss ⇒ either tune now (`allow_tune=True`) or
+fall back to the shape heuristic.
 """
 from __future__ import annotations
 
@@ -81,7 +82,8 @@ def _promote_cached(dtypes: tuple) -> str:
     return str(jnp.result_type(*dtypes))
 
 
-def _args_key(tunable: Tunable, args: Sequence[Any], platform: str, extra: str = "") -> str:
+def _args_key(tunable: Tunable, args: Sequence[Any], platform: str, extra: str = "",
+              dp_dims: Optional[Dict[int, int]] = None) -> str:
     """Database key for (tunable, concrete-or-traced args) on `platform`.
 
     Sharding-aware: inside a ``mesh_context`` that carries a ``dp_degree``
@@ -91,28 +93,35 @@ def _args_key(tunable: Tunable, args: Sequence[Any], platform: str, extra: str =
     but each device executes the local shard, which is what a campaign
     tuned. Outside such a scope (serving warmup, campaign evaluation,
     tests, dry-run lowering) keys are unchanged.
+
+    ``dp_dims`` (``{arg index: dim index}``) overrides the spec's
+    leading-dim convention for THIS call: backward dispatch sites pass it
+    when a transposed operand carries the token dim somewhere other than
+    dim 0 (matmul's dL/dw keys ``x.T`` on dim 1).
     """
     shapes = []
     dtypes = []
-    batch_idx = []
+    arg_dims: Dict[int, int] = {}
     spec = tunable.dispatch
-    dp_args = spec.data_parallel_args if spec is not None else (0,)
+    if dp_dims is None:
+        dp_args = spec.data_parallel_args if spec is not None else (0,)
+        dp_dims = {i: 0 for i in dp_args}
     for i, a in enumerate(args):
         if hasattr(a, "shape"):
-            if i in dp_args:
-                batch_idx.append(len(shapes))
+            if i in dp_dims:
+                arg_dims[len(shapes)] = dp_dims[i]
             shapes.append(tuple(a.shape))
             dtypes.append(getattr(a, "dtype", "float32"))
-    shapes = _localize(shapes, batch_idx)
+    shapes = _localize(shapes, arg_dims)
     return make_key(tunable.name, platform, shapes, promoted_dtype(dtypes), extra)
 
 
-def _localize(shapes, batch_idx):
+def _localize(shapes, arg_dims):
     # Late import: distributed is a higher layer; the ambient-context check
     # is a single contextvar read, so unsharded dispatch stays cheap.
     from ..distributed.sharding import localize_shapes
 
-    return localize_shapes(shapes, batch_idx)
+    return localize_shapes(shapes, batch_arg_dims=arg_dims)
 
 
 def autotune(

@@ -196,8 +196,9 @@ def local_shard_shape(
 def localize_shapes(
     shapes: Sequence[Sequence[int]],
     batch_arg_indices: Optional[Sequence[int]] = None,
+    batch_arg_dims: Optional[Dict[int, int]] = None,
 ) -> Tuple[Tuple[int, ...], ...]:
-    """Localize batch-leading shapes by the *ambient* data-parallel degree.
+    """Localize batch-sharded shapes by the *ambient* data-parallel degree.
 
     This is the runtime's local-shape keying hook (see
     ``repro.core.tuner._args_key``). The degree comes from the enclosing
@@ -210,18 +211,29 @@ def localize_shapes(
     when the context carries no degree, this is the identity — unsharded
     database keys are unchanged.
 
-    A shape whose leading dim the degree does not divide is left global
-    (its rows are replicated, not sharded).
+    ``batch_arg_indices`` localizes the *leading* dim of those shapes — the
+    forward convention. ``batch_arg_dims`` (``{shape index: dim index}``)
+    localizes an arbitrary dim instead: backward dispatch sites need this
+    because transposed operands carry the token dim elsewhere (matmul's
+    dL/dw is ``x.T [d, T] @ ct [T, n]`` — the sharded dim of arg 0 is dim
+    1). A dim the degree does not divide is left global (those rows are
+    replicated, not sharded).
     """
     dp = _DP_CTX.get()
     if not dp or dp <= 1:
         return tuple(tuple(int(d) for d in s) for s in shapes)
-    idx = set(range(len(shapes))) if batch_arg_indices is None else set(batch_arg_indices)
+    if batch_arg_dims is not None:
+        dims = dict(batch_arg_dims)
+    elif batch_arg_indices is not None:
+        dims = {i: 0 for i in batch_arg_indices}
+    else:
+        dims = {i: 0 for i in range(len(shapes))}
 
     def one(i, s):
         s = tuple(int(d) for d in s)
-        if i in idx and s and s[0] % dp == 0:
-            return (s[0] // dp,) + s[1:]
+        dim = dims.get(i)
+        if dim is not None and len(s) > dim and s[dim] % dp == 0:
+            return s[:dim] + (s[dim] // dp,) + s[dim + 1:]
         return s
 
     return tuple(one(i, s) for i, s in enumerate(shapes))
@@ -375,3 +387,36 @@ def constrain(x, *dims):
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*parts))
     )
+
+
+def constrain_heads(x, n_units: int, unit_dim: int):
+    """Sharding annotation for attention activations around the head
+    split/merge reshapes: batch (dim 0) over the data axes that divide it,
+    the head dim (`unit_dim`, carrying `n_units` head units) over the
+    tensor axis when it divides the *unit count* (never mid-head), all
+    other dims replicated.
+
+    These anchors are what lets the SPMD partitioner walk the
+    ``[b, s, h·hd] ⇄ [b, h, s, hd] ⇄ [b·h, s, hd]`` reshape chain around a
+    flash-attention dispatch without an "involuntary full
+    rematerialization" (an all-gather + reshard of the whole activation —
+    the warning the sharded smoke step used to print). No-op outside a
+    mesh_context.
+    """
+    ctx = _MESH_CTX.get()
+    if ctx is None:
+        return x
+    mesh, layout = ctx
+    sizes = mesh_axis_sizes(mesh)
+    parts: list = [None] * x.ndim
+    use, _ = _divisible_data_axes(sizes, layout, int(x.shape[0]))
+    if use:
+        parts[0] = tuple(use) if len(use) > 1 else use[0]
+    t = layout.tensor_axis
+    t_size = int(sizes.get(t, 1))
+    if (t_size > 1 and n_units % t_size == 0
+            and int(x.shape[unit_dim]) % t_size == 0):
+        parts[unit_dim] = t
+    while parts and parts[-1] is None:
+        parts.pop()
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))

@@ -1,15 +1,25 @@
 """Pallas TPU kernels for the hot spots, each with a pure-jnp oracle.
 
 Modules:
-  matmul.py    — blocked MXU matmul, tunable (bm, bn, bk)
+  matmul.py    — blocked MXU matmul, tunable (bm, bn, bk); backward =
+                 transposed-operand matmul dispatches
   attention.py — flash attention (causal/SWA/GQA), tunable (block_q, block_k)
-  rmsnorm.py   — fused RMSNorm, tunable block_rows
-  xent.py      — fused large-vocab cross entropy, tunable (block_rows, block_v)
-  ops.py       — DEPRECATED shims over the dispatch runtime (repro.core.runtime)
-  ref.py       — reference oracles (correctness gate + dry-run lowering path)
+                 + flash_attention_bwd (recompute-(o,lse), blocked dq/dkv)
+  rmsnorm.py   — fused RMSNorm, tunable block_rows + fused rmsnorm_bwd
+  xent.py      — fused large-vocab cross entropy, tunable (block_rows,
+                 block_v) + vocab-streamed softmax_xent_bwd
+  ops.py       — migration guide from the removed global-mode API
+  ref.py       — reference oracles, forward AND backward (correctness gate +
+                 dry-run lowering path + Reference-tier gradient fallback)
 """
 from . import ops, ref
-from .attention import ATTENTION_SPACE, flash_attention, flash_attention_pallas
+from .attention import (
+    ATTENTION_SPACE,
+    flash_attention,
+    flash_attention_bwd,
+    flash_attention_bwd_pallas,
+    flash_attention_pallas,
+)
 from .matmul import MATMUL_SPACE, matmul, matmul_pallas
-from .rmsnorm import RMSNORM_SPACE, rmsnorm, rmsnorm_pallas
-from .xent import XENT_SPACE, softmax_xent, softmax_xent_pallas
+from .rmsnorm import RMSNORM_SPACE, rmsnorm, rmsnorm_bwd, rmsnorm_bwd_pallas, rmsnorm_pallas
+from .xent import XENT_SPACE, softmax_xent, softmax_xent_bwd, softmax_xent_bwd_pallas, softmax_xent_pallas

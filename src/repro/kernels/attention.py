@@ -205,6 +205,14 @@ def _attn_example():
     return (mk(1, 4, 128, 16), mk(1, 2, 128, 16), mk(1, 2, 128, 16)), {"causal": True}
 
 
+def _flash_bwd_plan(ct, q, k, v, **kwargs):
+    """Backward plan for the fwd tunable: one fused bwd dispatch site
+    (dq/dk/dv together — they share the recomputed (o, lse) pass)."""
+    from ..core.runtime import dispatch
+
+    return dispatch("flash_attention_bwd", ct, q, k, v, **kwargs)
+
+
 @tunable(
     "flash_attention",
     space=ATTENTION_SPACE,
@@ -218,6 +226,8 @@ def _attn_example():
         example=_attn_example,
         # q, k, v all lead with the (data-parallel) batch dim.
         data_parallel_args=(0, 1, 2),
+        vjp="dispatch",
+        bwd=_flash_bwd_plan,
     ),
 )
 def flash_attention(
@@ -229,5 +239,381 @@ def flash_attention(
         interpret = jax.devices()[0].platform != "tpu"
     return flash_attention_pallas(
         q, k, v, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, scale=scale, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flash attention backward: recompute (o, lse), then blocked dq and dk/dv
+# ---------------------------------------------------------------------------
+
+
+def _flash_fwd_lse_kernel(
+    q_ref, k_ref, v_ref, o_ref, lse_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    k_steps: int,
+    q_offset: int,
+):
+    """The forward kernel, additionally emitting per-row logsumexp — the
+    residual the backward kernels need to rebuild softmax blocks exactly."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_hi = (qi + 1) * block_q - 1 + q_offset
+    q_lo = qi * block_q + q_offset
+    k_lo = ki * block_k
+    k_hi = (ki + 1) * block_k - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_hi
+    if window > 0:
+        live &= k_hi > q_lo - window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if causal or window > 0:
+            q_ids = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_ids = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = jnp.bool_(True)
+            if causal:
+                mask &= q_ids >= k_ids
+            if window > 0:
+                mask &= (q_ids - k_ids) < window
+            s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == k_steps - 1)
+    def _done():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        lse_ref[0] = (m_scr[...] + jnp.log(denom))[:, 0]
+
+
+def _flash_bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+    dq_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    k_steps: int,
+    q_offset: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q_hi = (qi + 1) * block_q - 1 + q_offset
+    q_lo = qi * block_q + q_offset
+    k_lo = ki * block_k
+    k_hi = (ki + 1) * block_k - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_hi
+    if window > 0:
+        live &= k_hi > q_lo - window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)           # [bq, d]
+        k = k_ref[0].astype(jnp.float32)           # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)         # [bq, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if causal or window > 0:
+            q_ids = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_ids = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = jnp.bool_(True)
+            if causal:
+                mask &= q_ids >= k_ids
+            if window > 0:
+                mask &= (q_ids - k_ids) < window
+            s = jnp.where(mask, s, _NEG_INF)
+        p = jnp.exp(s - lse_ref[0][:, None])       # exact softmax via lse
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                           # [bq, bk]
+        ds = p * (dp - delta_ref[0][:, None])
+        dq_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+
+    @pl.when(ki == k_steps - 1)
+    def _done():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    q_steps: int,
+    q_offset: int,
+):
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q_hi = (qi + 1) * block_q - 1 + q_offset
+    q_lo = qi * block_q + q_offset
+    k_lo = ki * block_k
+    k_hi = (ki + 1) * block_k - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_hi
+    if window > 0:
+        live &= k_hi > q_lo - window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)           # [bq, d]
+        k = k_ref[0].astype(jnp.float32)           # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)         # [bq, d]
+        st = jax.lax.dot_general(
+            k, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                   # [bk, bq]
+        if causal or window > 0:
+            k_ids = k_lo + jax.lax.broadcasted_iota(jnp.int32, st.shape, 0)
+            q_ids = q_lo + jax.lax.broadcasted_iota(jnp.int32, st.shape, 1)
+            mask = jnp.bool_(True)
+            if causal:
+                mask &= q_ids >= k_ids
+            if window > 0:
+                mask &= (q_ids - k_ids) < window
+            st = jnp.where(mask, st, _NEG_INF)
+        pt = jnp.exp(st - lse_ref[0][None, :])     # [bk, bq]
+        dv_scr[...] += jax.lax.dot_general(
+            pt, do, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        dpt = jax.lax.dot_general(
+            v, do, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                           # [bk, bq]
+        dst = pt * (dpt - delta_ref[0][None, :])
+        dk_scr[...] += jax.lax.dot_general(
+            dst, q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+
+    @pl.when(qi == q_steps - 1)
+    def _done():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_pallas(
+    ct: jax.Array,  # [b, h, s_q, d] — cotangent of the attention output
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+):
+    """(dq, dk, dv) via the standard flash backward: recompute (o, lse) with
+    the forward schedule, form delta = rowsum(do·o), then one k-streaming
+    pass for dq and one q-streaming pass for dk/dv. Nothing [s_q, s_k]-sized
+    ever touches HBM. GQA: dk/dv are computed per q-head and group-summed
+    into the kv heads afterwards.
+    """
+    b, h, s_q, d = q.shape
+    _, kv, s_k, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    block_q = min(block_q, s_q)
+    block_k = min(block_k, s_k)
+    assert s_q % block_q == 0 and s_k % block_k == 0, (s_q, s_k, block_q, block_k)
+    k_steps = s_k // block_k
+    q_steps = s_q // block_q
+    q_offset = s_k - s_q
+
+    qr = q.reshape(b * h, s_q, d)
+    dor = ct.reshape(b * h, s_q, d)
+    kr = k.reshape(b * kv, s_k, d)
+    vr = v.reshape(b * kv, s_k, d)
+
+    def kv_index_q(bh, qi, ki):
+        bb = bh // h
+        hh = bh % h
+        return (bb * kv + hh // group, ki, 0)
+
+    def kv_index_k(bh, ki, qi):
+        bb = bh // h
+        hh = bh % h
+        return (bb * kv + hh // group, ki, 0)
+
+    common = dict(
+        scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, q_offset=q_offset,
+    )
+
+    # 1. recompute o + lse under the same block schedule as the forward
+    o, lse = pl.pallas_call(
+        functools.partial(_flash_fwd_lse_kernel, k_steps=k_steps, **common),
+        grid=(b * h, q_steps, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index_q),
+            pl.BlockSpec((1, block_k, d), kv_index_q),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s_q, d), q.dtype),
+            jax.ShapeDtypeStruct((b * h, s_q), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qr, kr, vr)
+    delta = jnp.sum(dor.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    # 2. dq: stream K/V blocks per Q block (k grid dim carries the acc)
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, k_steps=k_steps, **common),
+        grid=(b * h, q_steps, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index_q),
+            pl.BlockSpec((1, block_k, d), kv_index_q),
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s_q, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qr, kr, vr, dor, lse, delta)
+
+    # 3. dk/dv: stream Q blocks per K block (q grid dim carries the accs),
+    # per q-head; group-sum into kv heads below.
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, q_steps=q_steps, **common),
+        grid=(b * h, k_steps, q_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, ki, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index_k),
+            pl.BlockSpec((1, block_k, d), kv_index_k),
+            pl.BlockSpec((1, block_q, d), lambda bh, ki, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, ki, qi: (bh, qi)),
+            pl.BlockSpec((1, block_q), lambda bh, ki, qi: (bh, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda bh, ki, qi: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki, qi: (bh, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s_k, d), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, s_k, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, d), jnp.float32),
+            pltpu.VMEM((block_k, d), jnp.float32),
+        ],
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qr, kr, vr, dor, lse, delta)
+    dk = dk_h.reshape(b, kv, group, s_k, d).sum(axis=2).astype(k.dtype)
+    dv = dv_h.reshape(b, kv, group, s_k, d).sum(axis=2).astype(v.dtype)
+    return dq.reshape(b, h, s_q, d), dk, dv
+
+
+def _attn_bwd_heuristic(ct, q, k, v):
+    return _attn_heuristic(q, k, v)
+
+
+def _attn_bwd_example():
+    import numpy as np
+
+    rs = np.random.RandomState(1)
+    mk = lambda *s: jnp.asarray(rs.randn(*s) * 0.3, jnp.float32)
+    return (
+        mk(1, 4, 128, 16),              # ct (output-shaped)
+        mk(1, 4, 128, 16), mk(1, 2, 128, 16), mk(1, 2, 128, 16),
+    ), {"causal": True}
+
+
+@tunable(
+    "flash_attention_bwd",
+    space=ATTENTION_SPACE,
+    reference=ref.attention_bwd,
+    heuristic=_attn_bwd_heuristic,
+    dispatch=DispatchSpec(
+        key_extra=lambda kw: f"c{kw.get('causal', True)}w{kw.get('window', 0)}",
+        example=_attn_bwd_example,
+        # ct, q, k, v all lead with the batch dim; no second-order grads.
+        data_parallel_args=(0, 1, 2, 3),
+        vjp="none",
+    ),
+)
+def flash_attention_bwd(
+    ct, q, k, v, *, block_q: int, block_k: int,
+    causal: bool = True, window: int = 0,
+    scale: Optional[float] = None, interpret: Optional[bool] = None,
+):
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    return flash_attention_bwd_pallas(
+        ct, q, k, v, block_q=block_q, block_k=block_k,
         causal=causal, window=window, scale=scale, interpret=interpret,
     )

@@ -142,12 +142,31 @@ def _matmul_canon(x, w):
     return (xr, w), lambda out: out.reshape(*lead, out.shape[-1])
 
 
+def _matmul_bwd(ct, x, w, **kwargs):
+    """Backward plan: both gradients are matmul dispatch sites themselves.
+
+    dL/dx = ct [m,n] @ wᵀ [n,k] and dL/dw = xᵀ [k,m] @ ct [m,n] — the
+    auto-derived transposed-operand calls through the same registry, so a
+    campaign record for the transposed bucket serves the gradient with zero
+    extra machinery. dL/dw contracts over the token rows: under a sharded
+    mesh its sharded dim is xᵀ's dim 1 / ct's dim 0, declared via
+    ``dp_dims`` so the database key localizes the dims training actually
+    shards (the planner emits the matching local-shape jobs).
+    """
+    from ..core.runtime import dispatch
+
+    dx = dispatch("matmul", ct, w.T, **kwargs)
+    dw = dispatch("matmul", x.T, ct, dp_dims={0: 1, 1: 0}, **kwargs)
+    return dx, dw
+
+
 @tunable(
     "matmul",
     space=MATMUL_SPACE,
     reference=ref.matmul,
     heuristic=_matmul_heuristic,
-    dispatch=DispatchSpec(canonicalize=_matmul_canon, example=_matmul_example),
+    dispatch=DispatchSpec(canonicalize=_matmul_canon, example=_matmul_example,
+                          vjp="dispatch", bwd=_matmul_bwd),
 )
 def matmul(x, w, *, bm: int, bn: int, bk: int, interpret: Optional[bool] = None):
     if interpret is None:

@@ -1,38 +1,23 @@
-"""DEPRECATED deployment shims — migration guide from the global-mode API.
+"""Migration guide: the old deployment surfaces and where they went.
 
 This module used to *be* the deployment surface: a hand-written wrapper per
 kernel, a process-global ``_STATE`` mode dict, and a hard-coded
-exact→cover→heuristic chain inside each wrapper. All of that now lives in
-the dispatch runtime (:mod:`repro.core.runtime`); what remains here is a
-thin back-compat veneer generated from the tunable registry. Every name in
-this module now emits a :class:`DeprecationWarning` — this is the last stop
-of the deprecation cycle before removal.
+exact→cover→heuristic chain inside each wrapper. All of that lives in the
+dispatch runtime now (:mod:`repro.core.runtime`), and the deprecated shims
+(``ops.set_kernel_mode`` / ``ops.kernels_enabled`` / ``ops.<kernel>``,
+DeprecationWarning since the runtime redesign) have completed their cycle
+and are **removed**. What remains here is the migration guide plus the
+registry-populating imports (``from repro.kernels import ops`` keeps working
+as a one-stop import for the kernel tunables).
 
-Old API (works, warns)                       New API
+Old API (removed)                            New API
 -----------------------------------------    ----------------------------------
 ``ops.set_kernel_mode(True)``                ``with repro.runtime(mode="kernel"): ...``
 ``ops.kernels_enabled()``                    ``repro.current_runtime().kernel_mode_active``
 ``set_default_db(db); ops.matmul(x, w)``     ``with repro.runtime(db=db): repro.dispatch("matmul", x, w)``
 ``ops.matmul(x, w, config={...})``           ``repro.dispatch("matmul", x, w, config={...})``
 hand-written wrapper per new kernel          none: ``@tunable(..., dispatch=DispatchSpec(...))``
-                                             auto-generates the entry point; this module
-                                             picks it up via ``__getattr__`` with zero edits
-
-Why migrate:
-
-* **Scoped, nestable, thread-isolated** — serving, training, campaign
-  evaluation, and tests each pin their own db/mode on a context-local stack
-  instead of fighting over one global flag (``set_kernel_mode`` now mutates
-  only the process-*default* runtime and cannot see scoped ones).
-* **Pluggable resolution** — the tier chain (ExactHit → TuneNow → CoverSet
-  → Heuristic → Reference) is a policy pipeline you can reorder or extend.
-* **Observable** — per-call telemetry counts which tier served each
-  kernel×shape-bucket (exportable to the campaign report via
-  ``--telemetry``), and a bounded per-runtime LRU resolution cache keeps
-  repeated jit traces from re-hitting the database.
-* **Trainable** — kernel-mode dispatch wraps variants in a reference-VJP
-  (``DispatchSpec.vjp``), so ``jax.grad`` through a tuned Pallas kernel
-  works; the old wrappers could only run forward.
+                                             auto-generates the entry point
 
 Database-key semantics (what a record must look like to hit):
 
@@ -43,83 +28,47 @@ Database-key semantics (what a record must look like to hit):
   ``repro.runtime(platform=...)`` — an unknown name clones the fingerprinted
   profile under the new name, fully isolating the namespace.
 * **Promoted dtype** — the dtype field is the JAX promotion of *all* array
-  args (order-independent). Pre-PR-3 records for mixed-dtype calls (notably
-  softmax_xent, keyed ``int32``) no longer exact-hit; they still warm-start
-  re-tunes as transfer neighbours.
+  args (order-independent). Records for mixed-dtype calls keyed on a single
+  argument's dtype (notably softmax_xent, once keyed ``int32``) no longer
+  exact-hit; they still warm-start re-tunes as transfer neighbours.
 * **Local shard shapes** — inside an active ``mesh_context`` (training, any
-  jit-sharded trace), batch-leading args (``DispatchSpec.data_parallel_args``)
-  are keyed on their per-device *local* shard shape: a record tuned at
+  jit-sharded trace), batch-sharded args (``DispatchSpec.data_parallel_args``,
+  or a per-call ``dp_dims`` override for transposed backward operands) are
+  keyed on their per-device *local* shard shape: a record tuned at
   ``(batch/dp, seq, d)`` is the record dispatch finds. Unsharded call sites
-  are unchanged. **Migration hazard**: records tuned before this change for
-  *sharded* call sites were keyed on global shapes — they no longer
-  exact-hit under a mesh and only warm-start re-tunes; re-plan with
-  ``campaign plan --train-mesh ...`` (which emits local-shape training jobs)
-  and re-run the campaign to rebuild them.
+  are unchanged. Records tuned for sharded sites *before* local-shape
+  keying were keyed on global shapes — they only warm-start; re-plan with
+  ``campaign plan --train-mesh ...`` and re-run the campaign.
+* **Backward keys** — gradients are dispatch sites too (``DispatchSpec.bwd``
+  + ``vjp="dispatch"``): matmul's dL/dx and dL/dw resolve as
+  transposed-operand ``matmul`` keys, and flash attention / rmsnorm /
+  softmax-xent resolve dedicated ``flash_attention_bwd`` / ``rmsnorm_bwd``
+  / ``softmax_xent_bwd`` tunables with their own records. The training
+  planner (``plan_training_jobs``) emits this backward roster at local
+  shard shapes, so ``campaign plan --train-mesh`` pre-tunes it.
+  **Migration hazard**: campaigns exported before the tuned backward plane
+  have NO backward records — a kernel-mode train step against such a
+  database resolves its gradient sites at warm-start/cover/heuristic tiers,
+  never ExactHit. Re-plan and re-run the campaign to bank them; or pin
+  ``repro.runtime(bwd_dispatch=False)`` to restore the old reference-VJP
+  recompute (fwd-only tuning) while you do.
 
-Semantics are otherwise unchanged: ``ops.matmul`` et al. resolve through the
-*active* runtime, whose default policy reproduces the old precedence exactly
-— stored best variant for (platform, kernel, shape-bucket, dtype), else the
+Semantics are otherwise unchanged: dispatch resolves through the *active*
+runtime, whose default policy reproduces the old precedence exactly —
+stored best variant for (platform, kernel, shape-bucket, dtype), else the
 campaign's 'few fit most' cover entry, else the shape heuristic, with the
 pure-jnp reference path when kernels are disabled (``REPRO_USE_PALLAS=0``
 or ``mode="reference"``).
 """
 from __future__ import annotations
 
-import warnings
-
-from ..core import runtime as _rt
-
 # Importing the kernel modules is what populates the tunable registry —
 # `from repro.kernels import ops` must keep working as a one-stop import.
 from . import ref  # noqa: F401  (re-exported: the reference oracles)
 from .attention import flash_attention as _flash_tunable  # noqa: F401
+from .attention import flash_attention_bwd as _flash_bwd_tunable  # noqa: F401
 from .matmul import matmul as _matmul_tunable  # noqa: F401
 from .rmsnorm import rmsnorm as _rmsnorm_tunable  # noqa: F401
+from .rmsnorm import rmsnorm_bwd as _rmsnorm_bwd_tunable  # noqa: F401
 from .xent import softmax_xent as _xent_tunable  # noqa: F401
-
-# Deprecated: prefer `with repro.runtime(mode=...)` scopes. The warnings are
-# emitted by the runtime shims themselves.
-set_kernel_mode = _rt.set_kernel_mode
-kernels_enabled = _rt.kernels_enabled
-
-
-def _deprecated_entry(name: str):
-    """An ``ops.<kernel>`` shim: warns, then dispatches through the runtime."""
-    inner = _rt.entry_point(name)
-
-    def call(*args, **kwargs):
-        warnings.warn(
-            f"repro.kernels.ops.{name} is deprecated; dispatch through the "
-            f'runtime instead: repro.dispatch("{name}", ...) under a '
-            "`with repro.runtime(...)` scope (see the repro.kernels.ops "
-            "module docstring for the migration guide)",
-            DeprecationWarning, stacklevel=2,
-        )
-        return inner(*args, **kwargs)
-
-    call.__name__ = name
-    call.__qualname__ = name
-    call.__doc__ = inner.__doc__
-    return call
-
-
-# Deprecated entry points for the in-tree kernels (kept as real module
-# attributes so tooling and `from repro.kernels.ops import matmul` work).
-matmul = _deprecated_entry("matmul")
-flash_attention = _deprecated_entry("flash_attention")
-rmsnorm = _deprecated_entry("rmsnorm")
-softmax_xent = _deprecated_entry("softmax_xent")
-
-
-def __getattr__(name: str):
-    """Any *other* registered tunable dispatches (with a warning) here."""
-    if name.startswith("_"):
-        raise AttributeError(name)
-    try:
-        _rt._as_tunable(name)
-    except KeyError:
-        raise AttributeError(
-            f"module {__name__!r} has no attribute {name!r} "
-            "(and no tunable of that name is registered)"
-        ) from None
-    return _deprecated_entry(name)
+from .xent import softmax_xent_bwd as _xent_bwd_tunable  # noqa: F401

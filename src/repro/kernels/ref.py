@@ -64,3 +64,46 @@ def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
     lse = jax.nn.logsumexp(logits, axis=-1)
     label_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     return lse - label_logit
+
+
+# ---------------------------------------------------------------------------
+# Backward oracles — the reference plane of the tuned backward dispatch
+# sites. Each is the VJP of its forward oracle (so fwd/bwd reference pairs
+# cannot drift apart), called with the cotangent first: bwd(ct, *fwd_args).
+# They are the correctness gate for the Pallas bwd variants AND the
+# Reference-tier fallback when a gradient bucket resolves to no kernel.
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_bwd(ct: jax.Array, x: jax.Array, weight: jax.Array,
+                eps: float = 1e-6):
+    """VJP of :func:`rmsnorm`: (d_x, d_weight)."""
+    _, vjp = jax.vjp(lambda xx, ww: rmsnorm(xx, ww, eps), x, weight)
+    return vjp(ct)
+
+
+def attention_bwd(
+    ct: jax.Array,  # [b, h, s_q, d] — cotangent of the attention output
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    window: int = 0,
+):
+    """VJP of :func:`attention`: (d_q, d_k, d_v)."""
+    _, vjp = jax.vjp(
+        lambda qq, kk, vv: attention(qq, kk, vv, causal=causal, scale=scale,
+                                     window=window),
+        q, k, v,
+    )
+    return vjp(ct)
+
+
+def softmax_xent_bwd(ct: jax.Array, logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """VJP of :func:`softmax_xent` w.r.t. logits: (softmax - onehot) · ct.
+
+    ``ct`` is the per-row loss cotangent [r]; labels carry no gradient.
+    """
+    _, vjp = jax.vjp(lambda ll: softmax_xent(ll, labels), logits)
+    return vjp(ct)[0]

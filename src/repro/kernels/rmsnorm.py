@@ -101,14 +101,123 @@ def _rmsnorm_example():
     ), {}
 
 
+def _rmsnorm_bwd_plan(ct, x, weight, **kwargs):
+    """Backward plan for the fwd tunable: one fused bwd dispatch site."""
+    from ..core.runtime import dispatch
+
+    return dispatch("rmsnorm_bwd", ct, x, weight, **kwargs)
+
+
 @tunable(
     "rmsnorm",
     space=RMSNORM_SPACE,
     reference=ref.rmsnorm,
     heuristic=_rmsnorm_heuristic,
-    dispatch=DispatchSpec(canonicalize=_rmsnorm_canon, example=_rmsnorm_example),
+    dispatch=DispatchSpec(canonicalize=_rmsnorm_canon, example=_rmsnorm_example,
+                          vjp="dispatch", bwd=_rmsnorm_bwd_plan),
 )
 def rmsnorm(x, weight, *, block_rows: int, eps: float = 1e-6, interpret: Optional[bool] = None):
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
     return rmsnorm_pallas(x, weight, block_rows=block_rows, eps=eps, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused backward: d_x and d_weight in one row-streamed pass
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm_bwd_kernel(ct_ref, x_ref, w_ref, dx_ref, dw_ref, dw_scr,
+                        *, eps: float, d: int, r_steps: int):
+    ri = pl.program_id(0)
+
+    @pl.when(ri == 0)
+    def _init():
+        dw_scr[...] = jnp.zeros_like(dw_scr)
+
+    x = x_ref[...].astype(jnp.float32)             # [block_rows, d]
+    ct = ct_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)             # [1, d]
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    g = ct * w                                     # upstream × scale
+    # dx_j = g_j·r − x_j·r³·mean_i(g_i·x_i); padded rows are all-zero, so
+    # their g (and hence dx / dw contribution) vanishes.
+    dot = jnp.sum(g * x, axis=-1, keepdims=True)
+    dx_ref[...] = (g * r - x * (r ** 3) * (dot / d)).astype(dx_ref.dtype)
+    dw_scr[...] += jnp.sum(ct * (x * r), axis=0, keepdims=True)
+
+    @pl.when(ri == r_steps - 1)
+    def _done():
+        dw_ref[...] = dw_scr[...].astype(dw_ref.dtype)
+
+
+def rmsnorm_bwd_pallas(
+    ct: jax.Array,      # [rows, d] — cotangent of the rmsnorm output
+    x: jax.Array,       # [rows, d]
+    weight: jax.Array,  # [d]
+    *,
+    block_rows: int,
+    eps: float = 1e-6,
+    interpret: bool = False,
+):
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        ct = jnp.pad(ct, ((0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    r_steps = x.shape[0] // block_rows
+    dx, dw = pl.pallas_call(
+        functools.partial(_rmsnorm_bwd_kernel, eps=eps, d=d, r_steps=r_steps),
+        grid=(r_steps,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((1, d), weight.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        # the row grid carries the d_weight accumulator: sequential
+        compiler_params=_compat.CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(ct, x, weight[None, :])
+    return (dx[:rows] if pad else dx), dw[0]
+
+
+def _rmsnorm_bwd_heuristic(ct, x, weight):
+    return _rmsnorm_heuristic(x, weight)
+
+
+def _rmsnorm_bwd_example():
+    import numpy as np
+
+    rs = np.random.RandomState(1)
+    return (
+        jnp.asarray(rs.randn(16, 32), jnp.float32),   # ct
+        jnp.asarray(rs.randn(16, 32), jnp.float32),   # x
+        jnp.asarray(rs.randn(32), jnp.float32),       # weight
+    ), {}
+
+
+@tunable(
+    "rmsnorm_bwd",
+    space=RMSNORM_SPACE,
+    reference=ref.rmsnorm_bwd,
+    heuristic=_rmsnorm_bwd_heuristic,
+    # ct and x are token-row-sharded; no second-order grads (vjp="none").
+    dispatch=DispatchSpec(example=_rmsnorm_bwd_example,
+                          data_parallel_args=(0, 1), vjp="none"),
+)
+def rmsnorm_bwd(ct, x, weight, *, block_rows: int, eps: float = 1e-6,
+                interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    return rmsnorm_bwd_pallas(ct, x, weight, block_rows=block_rows, eps=eps,
+                              interpret=interpret)

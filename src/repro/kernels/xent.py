@@ -135,17 +135,156 @@ def _xent_example():
     ), {}
 
 
+def _xent_bwd_plan(ct, logits, labels, **kwargs):
+    """Backward plan: d_logits is one fused bwd dispatch site; labels carry
+    no gradient (None → float0 cotangent)."""
+    from ..core.runtime import dispatch
+
+    return dispatch("softmax_xent_bwd", ct, logits, labels, **kwargs), None
+
+
 @tunable(
     "softmax_xent",
     space=XENT_SPACE,
     reference=ref.softmax_xent,
     heuristic=_xent_heuristic,
     # logits AND labels lead with the token-row dim (both batch-sharded).
-    dispatch=DispatchSpec(example=_xent_example, data_parallel_args=(0, 1)),
+    dispatch=DispatchSpec(example=_xent_example, data_parallel_args=(0, 1),
+                          vjp="dispatch", bwd=_xent_bwd_plan),
 )
 def softmax_xent(logits, labels, *, block_rows: int, block_v: int, interpret: Optional[bool] = None):
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
     return softmax_xent_pallas(
         logits, labels, block_rows=block_rows, block_v=block_v, interpret=interpret
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backward: d_logits = (softmax − onehot(label)) · ct, vocab-streamed
+# ---------------------------------------------------------------------------
+
+
+def _xent_lse_kernel(logits_ref, lse_ref, m_scr, l_scr, *, v_steps: int):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    x = logits_ref[...].astype(jnp.float32)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, x.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.exp(x - m_new).sum(axis=-1, keepdims=True)
+    m_scr[...] = m_new
+
+    @pl.when(vi == v_steps - 1)
+    def _done():
+        lse_ref[...] = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+
+
+def _xent_bwd_kernel(logits_ref, labels_ref, ct_ref, lse_ref, dl_ref, *, block_v: int):
+    vi = pl.program_id(1)
+    x = logits_ref[...].astype(jnp.float32)        # [block_rows, block_v]
+    p = jnp.exp(x - lse_ref[...])                  # softmax given the lse
+    cols = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    hit = (cols == labels_ref[...]).astype(jnp.float32)
+    dl_ref[...] = ((p - hit) * ct_ref[...]).astype(dl_ref.dtype)
+
+
+def softmax_xent_bwd_pallas(
+    ct: jax.Array,      # [rows] — per-row loss cotangent (fp32)
+    logits: jax.Array,  # [rows, vocab]
+    labels: jax.Array,  # [rows] int32
+    *,
+    block_rows: int,
+    block_v: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Two streamed passes over the logits: an online-logsumexp pass (the
+    forward's (m, l) trick) and the d_logits pass — HBM traffic is two reads
+    + one write, never a [rows, vocab] fp32 softmax materialization."""
+    rows, vocab = logits.shape
+    block_rows = min(block_rows, rows)
+    block_v = min(block_v, vocab)
+    pad_r = (-rows) % block_rows
+    pad_v = (-vocab) % block_v
+    if pad_r or pad_v:
+        logits = jnp.pad(logits, ((0, pad_r), (0, pad_v)), constant_values=_NEG_INF)
+        labels = jnp.pad(labels, (0, pad_r))
+        ct = jnp.pad(ct, (0, pad_r))
+    rp, vp = logits.shape
+    v_steps = vp // block_v
+    grid = (rp // block_rows, v_steps)
+    labels2 = labels.astype(jnp.int32)[:, None]
+    ct2 = ct.astype(jnp.float32)[:, None]
+
+    lse = pl.pallas_call(
+        functools.partial(_xent_lse_kernel, v_steps=v_steps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, block_v), lambda ri, vi: (ri, vi))],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_rows, 1), jnp.float32),
+            pltpu.VMEM((block_rows, 1), jnp.float32),
+        ],
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(logits)
+
+    dl = pl.pallas_call(
+        functools.partial(_xent_bwd_kernel, block_v=block_v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_v), lambda ri, vi: (ri, vi)),
+            pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
+            pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
+            pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_v), lambda ri, vi: (ri, vi)),
+        out_shape=jax.ShapeDtypeStruct((rp, vp), logits.dtype),
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(logits, labels2, ct2, lse)
+    return dl[:rows, :vocab]
+
+
+def _xent_bwd_heuristic(ct, logits, labels):
+    return _xent_heuristic(logits, labels)
+
+
+def _xent_bwd_example():
+    import numpy as np
+
+    rs = np.random.RandomState(1)
+    return (
+        jnp.asarray(rs.randn(16), jnp.float32),                 # ct
+        jnp.asarray(rs.randn(16, 640) * 2, jnp.float32),        # logits
+        jnp.asarray(rs.randint(0, 640, 16), jnp.int32),         # labels
+    ), {}
+
+
+@tunable(
+    "softmax_xent_bwd",
+    space=XENT_SPACE,
+    reference=ref.softmax_xent_bwd,
+    heuristic=_xent_bwd_heuristic,
+    # ct, logits, labels all lead with the token-row dim; no 2nd-order grads.
+    dispatch=DispatchSpec(example=_xent_bwd_example,
+                          data_parallel_args=(0, 1, 2), vjp="none"),
+)
+def softmax_xent_bwd(ct, logits, labels, *, block_rows: int, block_v: int,
+                     interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    return softmax_xent_bwd_pallas(
+        ct, logits, labels, block_rows=block_rows, block_v=block_v,
+        interpret=interpret,
     )

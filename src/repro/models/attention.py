@@ -195,11 +195,22 @@ def attention_forward(
     v = _split_heads(dense(p["v"], x), n_kv, head_dim)
     q = apply_rope(q, positions, rope_theta)
     k = apply_rope(k, positions, rope_theta)
-    # [b, heads, s, hd] layout for the kernels
+    # [b, heads, s, hd] layout for the kernels. The constrain_heads anchors
+    # tell the SPMD partitioner how the head dim is laid out on both sides
+    # of the split/merge reshapes — without them the sharded train step
+    # pays an involuntary full rematerialization of q/k/v around the
+    # flash-attention dispatch (and its backward).
+    from ..distributed import sharding as shd
+
     qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+    qh = shd.constrain_heads(qh, n_heads, 1)
+    kh = shd.constrain_heads(kh, n_kv, 1)
+    vh = shd.constrain_heads(vh, n_kv, 1)
     y = _attend(qh, kh, vh, causal=True, window=window, use_kernel=True,
                 q_chunk=q_chunk, k_chunk=k_chunk)
+    y = shd.constrain_heads(y, n_heads, 1)
     y = jnp.swapaxes(y, 1, 2).reshape(b, s, n_heads * head_dim)
+    y = shd.constrain_heads(y, n_heads, 2)
     out = dense(p["o"], y)
     if not return_cache:
         return out

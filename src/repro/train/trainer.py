@@ -6,13 +6,19 @@ difference is the mesh handed in. The Trainer never constructs device state
 outside the mesh's shardings, so the same code drives 1 CPU or 512 chips.
 
 Dispatch: the model's kernel sites (projection/FFN gemms, rmsnorm, the fused
-loss, flash attention) resolve through the dispatch runtime. Pass
+loss, flash attention) resolve through the dispatch runtime — forward AND
+backward: in kernel mode the gradients are dispatch sites too (transposed
+matmul gemms, the ``*_bwd`` tunables), resolved under the same scope with
+``bwd``-tagged telemetry, so a planned campaign (``campaign plan
+--train-mesh``) pre-tunes everything a train step executes. Pass
 ``runtime=repro.runtime(db=..., mode=...)`` to pin a campaign database for
 the whole run — every trace the trainer builds executes under that scope
 *and* under the trainer's ``mesh_context``, so database keys use per-device
 local shard shapes (what a campaign tuned), and ``runtime.telemetry``
-reports which tier served each kernel×bucket. With ``runtime=None`` the
-ambient/default runtime applies, as before.
+reports which tier served each kernel×bucket per phase. With
+``runtime=None`` the ambient/default runtime applies, as before
+(``runtime=repro.runtime(..., bwd_dispatch=False)`` restores the old
+reference-VJP backward recompute).
 """
 from __future__ import annotations
 

@@ -389,3 +389,108 @@ def test_cli_plan_and_status(tmp_path, capsys):
     assert rc == 0
     out = capsys.readouterr().out
     assert "pending" in out
+
+
+def test_serving_planner_trace_faithful_warmup_exact_only(tmp_path):
+    """Serving planner parity (trace-faithful roster): with one record per
+    planned serving job, (a) warmup resolves every bucket ExactHit-only and
+    (b) a kernel-mode engine actually serving a request — admission prefill
+    + pool decode — dispatches ONLY keys the planner emitted, so nothing
+    falls through to Reference under an ExactHit-or-bust policy. Catches
+    any drift between `plan_serving_jobs` and the engine's dispatch sites
+    (the o-proj/unembed gemms were missing from the roster once)."""
+    import jax
+    import numpy as np
+
+    import repro
+    from repro.campaign.planner import plan_serving_jobs
+    from repro.configs import get_config
+    from repro.core.annotate import get_tunable
+    from repro.core.runtime import ExactHit, Reference
+    from repro.distributed.sharding import Layout
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import lm
+    from repro.models.transformer import RunConfig
+    from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+    cfg = get_config("qwen2_0_5b").reduced()
+    platform = detect_platform().name
+    max_batch, max_seq = 2, 32
+    jobs = plan_serving_jobs(cfg, max_batch, max_seq)
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    planned = set()
+    for job in jobs:
+        key = job.db_key(platform)
+        planned.add(key)
+        if not db.lookup(key):
+            cfg_default = get_tunable(job.kernel).space.default()
+            db.put(Record(key, cfg_default, 1e-6, "wallclock", 1, 0.0),
+                   save=False)
+
+    params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rt = repro.runtime(mode="kernel", db=db,
+                       policy=(ExactHit(), Reference()), name="serve-parity")
+    eng = ServingEngine(
+        cfg, RunConfig(remat="none"), params, make_host_mesh(), Layout(),
+        EngineConfig(max_batch=max_batch, max_seq=max_seq),
+        runtime=rt,
+    )
+
+    # (a) warmup: every planned bucket resolves at the exact tier
+    resolved = eng.warmup()
+    assert resolved and all(c is not None for c in resolved.values())
+    snap = rt.telemetry.snapshot()
+    assert set(snap["tiers"]) == {"exact"}, snap["tiers"]
+
+    # (b) live serving: prefill one prompt and decode a few tokens — every
+    # dispatch must still be an ExactHit on a planned key
+    rt.telemetry.reset()
+    eng.submit(Request(prompt=np.arange(5, dtype=np.int32) % cfg.vocab_size,
+                       max_new_tokens=3))
+    eng.serve()
+    snap = rt.telemetry.snapshot()
+    assert snap["tiers"].get("exact", 0) > 0
+    assert set(snap["tiers"]) == {"exact"}, snap["tiers"]
+    dispatched = set(snap["by_key"])
+    assert dispatched <= planned, dispatched - planned
+
+
+def test_plan_training_jobs_backward_roster():
+    """The training planner derives the backward plane alongside the
+    forward sites: transposed-operand matmul jobs for every gemm (dL/dx and
+    dL/dw, token dim localized), and the *_bwd tunable jobs with
+    output-shaped cotangent operands — all at per-device local shapes."""
+    from repro.campaign import plan_training_jobs
+    from repro.configs import SHAPES, get_config
+    from repro.distributed.sharding import Layout
+
+    cfg = get_config("qwen2_0_5b").reduced()
+    shape = SHAPES["train_smoke"]            # B=8, S=64 → dp=2, T=256 local
+    layout = Layout(counts=(("heads", cfg.num_heads),
+                            ("kv_heads", cfg.num_kv_heads)))
+    jobs = plan_training_jobs(cfg, shape, layout=layout, mesh_axes="2x4")
+    by_kernel = {}
+    for j in jobs:
+        by_kernel.setdefault(j.kernel, []).append(j)
+    d, hd, H, KV = cfg.d_model, cfg.hd, cfg.num_heads, cfg.num_kv_heads
+    mm = {j.arg_shapes for j in by_kernel["matmul"]}
+    # q proj fwd + its two transposed gradients
+    assert ((256, d), (d, H * hd)) in mm
+    assert ((256, H * hd), (H * hd, d)) in mm            # dL/dx (ct @ wT)
+    assert ((d, 256), (256, H * hd)) in mm               # dL/dw (xT @ ct)
+    # unembed gradients at loss-chunk rows (loss_chunk=32 → 128 local rows)
+    assert ((128, cfg.vocab_size), (cfg.vocab_size, d)) in mm
+    assert ((d, 128), (128, cfg.vocab_size)) in mm
+    # fused bwd tunables, cotangent-led shapes
+    norm_bwd = {j.arg_shapes for j in by_kernel["rmsnorm_bwd"]}
+    assert ((256, d), (256, d), (d,)) in norm_bwd
+    xent_bwd = [j for j in by_kernel["softmax_xent_bwd"]][0]
+    assert xent_bwd.arg_shapes == ((128,), (128, cfg.vocab_size), (128,))
+    assert xent_bwd.arg_dtypes == ("float32", "float32", "int32")
+    attn_bwd = [j for j in by_kernel["flash_attention_bwd"]][0]
+    assert attn_bwd.arg_shapes[0] == (4, H, 64, hd)      # ct is q-shaped
+    assert attn_bwd.key_extra == "cTruew0"
+    # per-window parity: every flash fwd job has a matching bwd job
+    fwd_extras = {j.key_extra for j in by_kernel["flash_attention"]}
+    bwd_extras = {j.key_extra for j in by_kernel["flash_attention_bwd"]}
+    assert fwd_extras == bwd_extras

@@ -130,3 +130,4 @@ def test_xent_property(rows, v, seed):
     labels = jnp.asarray(rs.randint(0, v, rows), jnp.int32)
     out = softmax_xent_pallas(logits, labels, block_rows=16, block_v=128, interpret=True)
     np.testing.assert_allclose(out, ref.softmax_xent(logits, labels), rtol=1e-4, atol=1e-4)
+

@@ -1,0 +1,76 @@
+"""Backward-kernel allclose sweeps against the ref.py VJP oracles.
+
+Separate from test_kernels.py on purpose: that module needs hypothesis for
+its property sweeps and skips wholesale without it — the backward plane's
+correctness must not ride on an optional dependency.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.attention import flash_attention_bwd_pallas
+from repro.kernels.rmsnorm import rmsnorm_bwd_pallas
+from repro.kernels.xent import softmax_xent_bwd_pallas
+
+
+def _rand(rs, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rs.randn(*shape) * scale, dtype)
+
+
+@pytest.mark.parametrize("rows,d,br", [(64, 128, 16), (37, 64, 8)])
+def test_rmsnorm_bwd(rs, rows, d, br):
+    """Fused (dx, dw) kernel vs the VJP oracle, incl. the row-padding path."""
+    x, w = _rand(rs, (rows, d)), _rand(rs, (d,))
+    ct = _rand(rs, (rows, d))
+    dx, dw = rmsnorm_bwd_pallas(ct, x, w, block_rows=br, interpret=True)
+    dx_r, dw_r = ref.rmsnorm_bwd(ct, x, w)
+    np.testing.assert_allclose(dx, dx_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dw, dw_r, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("rows,v,br,bv", [(64, 512, 16, 128), (23, 300, 8, 128)])
+def test_xent_bwd(rs, rows, v, br, bv):
+    """Vocab-streamed d_logits vs the VJP oracle (padding on both axes)."""
+    logits = _rand(rs, (rows, v), scale=2.0)
+    labels = jnp.asarray(rs.randint(0, v, rows), jnp.int32)
+    ct = _rand(rs, (rows,))
+    dl = softmax_xent_bwd_pallas(ct, logits, labels, block_rows=br, block_v=bv,
+                                 interpret=True)
+    np.testing.assert_allclose(dl, ref.softmax_xent_bwd(ct, logits, labels),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32), (False, 0)])
+def test_flash_attention_bwd(rs, causal, window):
+    """(dq, dk, dv) vs the VJP oracle across masking modes, with GQA."""
+    b, h, kv, s, d = 2, 4, 2, 128, 16
+    q = _rand(rs, (b, h, s, d), scale=0.3)
+    k = _rand(rs, (b, kv, s, d), scale=0.3)
+    v = _rand(rs, (b, kv, s, d))
+    ct = _rand(rs, (b, h, s, d))
+    dq, dk, dv = flash_attention_bwd_pallas(
+        ct, q, k, v, block_q=64, block_k=64, causal=causal, window=window,
+        interpret=True,
+    )
+    dq_r, dk_r, dv_r = ref.attention_bwd(ct, q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(dq, dq_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dk, dk_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dv, dv_r, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(32, 128), (128, 32), (64, 64)])
+def test_flash_attention_bwd_blocks(rs, block_q, block_k):
+    """Gradients are block-schedule invariant (the tunable's contract)."""
+    b, h, kv, s, d = 1, 4, 2, 128, 16
+    q = _rand(rs, (b, h, s, d), scale=0.3)
+    k = _rand(rs, (b, kv, s, d), scale=0.3)
+    v = _rand(rs, (b, kv, s, d))
+    ct = _rand(rs, (b, h, s, d))
+    grads = flash_attention_bwd_pallas(
+        ct, q, k, v, block_q=block_q, block_k=block_k, causal=True,
+        interpret=True,
+    )
+    want = ref.attention_bwd(ct, q, k, v, causal=True)
+    for g, w_ in zip(grads, want):
+        np.testing.assert_allclose(g, w_, rtol=2e-4, atol=2e-4)

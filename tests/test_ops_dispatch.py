@@ -1,5 +1,9 @@
 """Deployment dispatch through the runtime API (scoped mode/db, DB-driven
-configs, kernel-vs-reference equivalence) + one legacy global-mode shim test.
+configs, kernel-vs-reference equivalence).
+
+The legacy global-mode shims (``ops.set_kernel_mode`` / ``ops.<kernel>``)
+completed their deprecation cycle and are gone — ``repro.kernels.ops`` is a
+migration-guide module only, which `test_ops_module_is_shimless` pins down.
 
 Every test pins its mode/db with `repro.runtime(...)` scopes, so this file
 is environment-agnostic: it passes identically with and without
@@ -14,20 +18,16 @@ import pytest
 import repro
 from repro.core import Record, TuningDatabase, make_key, set_default_db
 from repro.core.platform import detect_platform
-from repro.kernels import ops, ref  # ops: legacy-shim test only
+from repro.kernels import ref
 
 
 @pytest.fixture(autouse=True)
 def fresh_global_state(tmp_path):
-    """Isolate the two process-global knobs these tests may touch: the
-    default database, and the default runtime's mode (the legacy-shim test
-    flips it via set_kernel_mode) — restored so no state leaks across tests
-    or modules, whatever the REPRO_USE_PALLAS environment."""
+    """Isolate the process-global default database so no state leaks across
+    tests or modules, whatever the REPRO_USE_PALLAS environment."""
     db = TuningDatabase(str(tmp_path / "db.json"))
     set_default_db(db)
-    prev_mode = repro.current_runtime().mode     # the root runtime: no scope active
     yield db
-    repro.current_runtime().mode = prev_mode
 
 
 def test_reference_mode_dispatches_reference():
@@ -107,32 +107,17 @@ def test_explicit_config_override(rs):
     assert rt.telemetry.snapshot()["tiers"] == {"override": 1}
 
 
-def test_legacy_global_mode_shims(rs):
-    """Back-compat: the old process-global API still flips dispatch — and
-    every shim (mode flips, reads, and the ops.<kernel> wrappers) now emits
-    a DeprecationWarning as the last step of the PR-3 deprecation cycle."""
-    x = jnp.asarray(rs.randn(64, 128), jnp.float32)
-    w = jnp.asarray(rs.randn(128, 64), jnp.float32)
-    with pytest.warns(DeprecationWarning, match="set_kernel_mode"):
-        ops.set_kernel_mode(True)
-    with pytest.warns(DeprecationWarning, match="kernels_enabled"):
-        assert ops.kernels_enabled()
-    with pytest.warns(DeprecationWarning, match="ops.matmul is deprecated"):
-        np.testing.assert_allclose(
-            ops.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-4
-        )
-    with pytest.warns(DeprecationWarning):
-        ops.set_kernel_mode(False)
-        assert not ops.kernels_enabled()
-        np.testing.assert_allclose(ops.matmul(x, w), ref.matmul(x, w))
+def test_ops_module_is_shimless():
+    """The deprecation cycle is over: importing repro.kernels.ops still
+    populates the registry (one-stop import) but exposes NO runtime shims —
+    reaching for the removed global-mode API is an AttributeError, not a
+    silently-deprecated call."""
+    from repro.kernels import ops
 
-
-def test_generated_shim_for_model_tunable_warns():
-    """__getattr__-generated shims (model-level tunables) warn too."""
-    import repro.models.tunables  # noqa: F401 — registers attn_chunks
-
-    with pytest.warns(DeprecationWarning, match="attn_chunks"):
-        fn = ops.attn_chunks
-        args, kwargs = repro.core.get_tunable("attn_chunks").dispatch.example()
-        with repro.runtime(mode="reference"):
-            fn(*args, **kwargs)
+    for gone in ("set_kernel_mode", "kernels_enabled", "matmul",
+                 "flash_attention", "rmsnorm", "softmax_xent", "attn_chunks"):
+        assert not hasattr(ops, gone), gone
+    # the registry side effect is intact: all kernel tunables registered
+    names = set(repro.core.registered())
+    assert {"matmul", "flash_attention", "rmsnorm", "softmax_xent",
+            "flash_attention_bwd", "rmsnorm_bwd", "softmax_xent_bwd"} <= names

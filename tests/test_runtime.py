@@ -54,10 +54,27 @@ def _fresh(mode):
 
 
 def test_registry_covers_all_pallas_kernels():
-    # The four Pallas kernels + the model-level chunked attention must all
-    # be deployable through the registry with example args.
+    # The Pallas kernels (forward AND backward plane) + the model-level
+    # chunked attention must all be deployable through the registry with
+    # example args.
     assert {"matmul", "flash_attention", "rmsnorm", "softmax_xent",
-            "attn_chunks"} <= set(DISPATCHABLE)
+            "attn_chunks", "flash_attention_bwd", "rmsnorm_bwd",
+            "softmax_xent_bwd"} <= set(DISPATCHABLE)
+
+
+def _assert_trees_close(out, expected, rtol=0.0, atol=0.0):
+    """Leaf-wise allclose: backward tunables return tuples of gradients
+    with heterogeneous shapes, so a bare np.asarray comparison cannot work."""
+    import jax
+
+    o_leaves = jax.tree_util.tree_leaves(out)
+    e_leaves = jax.tree_util.tree_leaves(expected)
+    assert len(o_leaves) == len(e_leaves)
+    for o, e in zip(o_leaves, e_leaves):
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(e, np.float32),
+            rtol=rtol, atol=atol,
+        )
 
 
 @pytest.mark.parametrize("name", DISPATCHABLE)
@@ -67,7 +84,7 @@ def test_parity_reference_mode(name):
     expected = t.dispatch.reference_for(t)(*args, **kwargs)
     with _fresh("reference") as rt:
         out = dispatch(name, *args, **kwargs)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(expected))
+    _assert_trees_close(out, expected)
     assert rt.telemetry.snapshot()["tiers"] == {"reference": 1}
 
 
@@ -78,10 +95,7 @@ def test_parity_kernel_mode(name):
     expected = t.dispatch.reference_for(t)(*args, **kwargs)
     with _fresh("kernel"):
         out = dispatch(name, *args, **kwargs)
-    np.testing.assert_allclose(
-        np.asarray(out, np.float32), np.asarray(expected, np.float32),
-        rtol=2e-4, atol=2e-4,
-    )
+    _assert_trees_close(out, expected, rtol=2e-4, atol=2e-4)
 
 
 @pytest.mark.parametrize("name", DISPATCHABLE)
@@ -90,9 +104,8 @@ def test_parity_entry_point_matches_dispatch(name):
     args, kwargs = t.dispatch.example()
     fn = entry_point(name)
     with _fresh("kernel"):
-        np.testing.assert_allclose(
-            np.asarray(fn(*args, **kwargs), np.float32),
-            np.asarray(dispatch(name, *args, **kwargs), np.float32),
+        _assert_trees_close(
+            fn(*args, **kwargs), dispatch(name, *args, **kwargs)
         )
 
 

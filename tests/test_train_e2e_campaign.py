@@ -1,20 +1,23 @@
 """End-to-end acceptance: campaign-tuned sharded training hits only tuned
-records.
+records — across the forward AND backward dispatch planes.
 
 One subprocess (8 fake host devices, 2×4 mesh) runs the whole pipeline the
 PR is about:
 
   1. ``plan_training_jobs`` derives the smoke train step's kernel jobs at
-     per-device local shard shapes from the arch config × production Layout;
+     per-device local shard shapes from the arch config × production Layout
+     — including the backward roster (transposed-operand matmul gradients,
+     ``*_bwd`` tunables);
   2. ``campaign run`` executes them (tiny budget) into a database;
   3. a Trainer dispatches two steps under ``repro.runtime(db=..,
      mode="kernel")``;
   4. the runtime's exported telemetry must show **ExactHit resolutions for
      every kernel×bucket in the step — no TuneNow/Heuristic/CoverSet
-     fallbacks** — and cache hits on the repeated step.
+     fallbacks and zero Reference-tier resolutions — under BOTH the ``fwd``
+     and ``bwd`` phases** — and cache hits on the repeated step.
 
-If the planner's site roster ever drifts from the model's dispatch sites,
-step 4 fails with the offending keys.
+If the planner's site roster ever drifts from the model's dispatch sites
+(forward or gradient), step 4 fails with the offending keys.
 """
 import json
 import subprocess
@@ -112,13 +115,32 @@ def test_campaign_tuned_training_is_all_exact_hits():
     assert snap["tiers"].get("exact", 0) > 0
     assert set(snap["tiers"]) == {"exact"}
 
+    # the tightened gate: BOTH dispatch phases present, each 100% ExactHit —
+    # the backward plane runs on tuned records, not reference recomputes
+    phases = snap["phases"]
+    assert set(phases) == {"fwd", "bwd"}, phases
+    for phase in ("fwd", "bwd"):
+        assert set(phases[phase]) == {"exact"}, (phase, phases[phase])
+        assert phases[phase]["exact"] > 0, (phase, phases[phase])
+    bwd_offending = {
+        key: tiers
+        for key, tiers in snap["by_key_phase"]["bwd"].items()
+        if set(tiers) - {"exact"}
+    }
+    assert not bwd_offending, f"non-exact gradient resolutions: {bwd_offending}"
+
     # the dispatched buckets are a subset of what the campaign planned
     planned = set(out["planned_keys"])
     assert set(snap["by_key"]) <= planned
 
-    # kernel coverage: the step exercised all four tunable kernel families
+    # kernel coverage: every tunable family the step can exercise, forward
+    # and backward (matmul gradients reuse the matmul tunable)
     kernels = {k.split("|")[0] for k in snap["by_key"]}
-    assert {"matmul", "rmsnorm", "softmax_xent", "flash_attention"} <= kernels
+    assert {"matmul", "rmsnorm", "softmax_xent", "flash_attention",
+            "rmsnorm_bwd", "softmax_xent_bwd",
+            "flash_attention_bwd"} <= kernels
+    bwd_kernels = {k.split("|")[0] for k in snap["by_key_phase"]["bwd"]}
+    assert "matmul" in bwd_kernels          # transposed-operand gradient gemms
 
     # second step re-used the warm resolution cache
     assert snap["cache_hits"] > 0

@@ -230,3 +230,195 @@ def test_trainer_dispatches_through_pinned_runtime(tmp_path):
     # trainer's matmul/rmsnorm/xent sites all route through this runtime
     assert snap["tiers"].get("reference", 0) > 0
     assert set(snap["tiers"]) == {"reference"}
+
+
+# ---------------------------------------------------------------------------
+# Tuned backward plane: per-tunable grad parity, bwd db keys, bwd fallbacks
+# ---------------------------------------------------------------------------
+
+_BWD_TUNABLES = ("matmul", "rmsnorm", "softmax_xent", "flash_attention")
+
+
+@pytest.mark.parametrize("name", _BWD_TUNABLES)
+def test_dispatch_grad_matches_reference(name):
+    """For every forward tunable with a dispatch-vjp backward plan, the
+    gradient of kernel-mode dispatch must match the reference VJP — and the
+    backward sites must show up as bwd-phase telemetry rows."""
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+    import repro.kernels  # noqa: F401 — registers the tunables
+    from repro.core import TuningDatabase, registered
+
+    t = registered()[name]
+    assert t.dispatch.vjp == "dispatch" and t.dispatch.bwd is not None
+    args, kwargs = t.dispatch.example()
+    ref_fn = t.dispatch.reference_for(t)
+    diff = [i for i, a in enumerate(args)
+            if jnp.issubdtype(jnp.result_type(a), jnp.inexact)]
+
+    def rebuild(inexact):
+        full = list(args)
+        for i, v in zip(diff, inexact):
+            full[i] = v
+        return tuple(full)
+
+    def loss_dispatch(*inexact):
+        out = repro.dispatch(name, *rebuild(inexact), **kwargs)
+        return sum((jnp.asarray(o, jnp.float32) ** 2).sum()
+                   for o in jax.tree_util.tree_leaves(out))
+
+    def loss_ref(*inexact):
+        out = ref_fn(*rebuild(inexact), **kwargs)
+        return sum((jnp.asarray(o, jnp.float32) ** 2).sum()
+                   for o in jax.tree_util.tree_leaves(out))
+
+    inexact = tuple(args[i] for i in diff)
+    argnums = tuple(range(len(inexact)))
+    with repro.runtime(mode="kernel", db=TuningDatabase(None)) as rt:
+        g_kernel = jax.jit(jax.grad(loss_dispatch, argnums=argnums))(*inexact)
+    g_ref = jax.grad(loss_ref, argnums=argnums)(*inexact)
+    for gk, gr in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                                   rtol=5e-4, atol=5e-4)
+    snap = rt.telemetry.snapshot()
+    assert snap["phases"].get("bwd"), snap["phases"]
+
+
+def test_bwd_db_keys_match_training_planner():
+    """bwd db-key stability: the keys backward dispatch computes under a
+    sharded mesh context (including the dp_dims transposed-operand
+    override) are exactly the keys `plan_training_jobs` emits for the same
+    sites — the contract that makes gradient ExactHits possible."""
+    import jax.numpy as jnp
+
+    from repro.campaign.planner import plan_training_jobs
+    from repro.configs.base import SHAPES, get_config
+    from repro.core.platform import detect_platform
+    from repro.core.tuner import _args_key
+    from repro.distributed.sharding import Layout, mesh_context
+    from repro.kernels.matmul import matmul as matmul_tunable
+    from repro.kernels.rmsnorm import rmsnorm_bwd as rmsnorm_bwd_tunable
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = get_config("qwen2_0_5b").reduced()
+    shape = SHAPES["train_smoke"]            # B=8, S=64
+    layout = Layout()
+    platform = detect_platform().name
+    jobs = plan_training_jobs(cfg, shape, layout=layout, mesh_axes="2x4")
+    planned = {j.db_key(platform) for j in jobs}
+
+    d, n = cfg.d_model, cfg.num_heads * cfg.hd
+    T_global = 8 * 64                        # flattened rows in the jit trace
+    x = jnp.zeros((T_global, d), jnp.float32)
+    ct = jnp.zeros((T_global, n), jnp.float32)
+    w = jnp.zeros((d, n), jnp.float32)
+    with mesh_context(make_host_mesh(), layout, dp_degree=2):
+        # dL/dx = ct @ wT: ordinary leading-dim localization
+        key_dx = _args_key(matmul_tunable, (ct, w.T), platform)
+        # dL/dw = xT @ ct: token dim sits at arg0-dim1/arg1-dim0
+        key_dw = _args_key(matmul_tunable, (x.T, ct), platform,
+                           dp_dims={0: 1, 1: 0})
+        ct_n = jnp.zeros((T_global, d), jnp.float32)
+        key_norm = _args_key(
+            rmsnorm_bwd_tunable,
+            (ct_n, x, jnp.zeros((d,), jnp.float32)), platform,
+        )
+    assert key_dx in planned, key_dx
+    assert key_dw in planned, key_dw
+    assert key_norm in planned, key_norm
+    # a dp_dims-less dw key (leading-dim convention) would NOT be planned:
+    # the transposed override is load-bearing
+    with mesh_context(make_host_mesh(), layout, dp_degree=2):
+        key_dw_wrong = _args_key(matmul_tunable, (x.T, ct), platform)
+    assert key_dw_wrong != key_dw
+
+
+def test_bwd_cover_and_warm_start_fallback(tmp_path):
+    """A backward kernel with no exact record still rides the transfer
+    machinery: its nearest record warm-starts a re-tune, and a stored cover
+    entry serves an unseen bucket at the cover tier (never Reference)."""
+    import jax.numpy as jnp
+
+    import repro
+    from repro.campaign.transfer import warm_start_configs
+    from repro.core import Record, TuningDatabase, make_key
+    from repro.core.platform import detect_platform
+    from repro.core.runtime import CoverSet, ExactHit, Heuristic
+    from repro.kernels.rmsnorm import rmsnorm_bwd as rmsnorm_bwd_tunable
+
+    platform = detect_platform().name
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    cfg = {"block_rows": 16}
+    key = make_key("rmsnorm_bwd", platform,
+                   [(64, 32), (64, 32), (32,)], "float32")
+    db.put(Record(key, cfg, 1e-6, "wallclock", 1, 0.0))
+
+    # warm start: the neighbouring bucket seeds from the stored record
+    seeds = warm_start_configs(
+        db, "rmsnorm_bwd", platform,
+        [(128, 32), (128, 32), (32,)], "float32",
+        space=rmsnorm_bwd_tunable.space,
+    )
+    assert cfg in seeds
+
+    # cover fallback: an unseen bucket resolves at the cover tier
+    db.put_cover("rmsnorm_bwd", platform, [{"config": cfg, "shapes": [(64, 32)]}])
+    args = (
+        jnp.zeros((256, 32), jnp.float32),
+        jnp.zeros((256, 32), jnp.float32),
+        jnp.zeros((32,), jnp.float32),
+    )
+    with repro.runtime(mode="kernel", db=db,
+                       policy=(ExactHit(), CoverSet(), Heuristic())) as rt:
+        res = rt.resolve(rmsnorm_bwd_tunable, args)
+    assert res.tier == "cover"
+    assert res.config == cfg
+
+
+def test_sharded_smoke_step_has_no_remat_warning():
+    """Regression for the sharding-annotation pass: the 2×4 sharded smoke
+    step (kernel mode, fwd+bwd dispatch) must not trigger XLA's
+    'Involuntary full rematerialization' on the attention reshapes."""
+    script = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import repro
+from repro.configs.base import SHAPES, get_config
+from repro.core.database import TuningDatabase
+from repro.data.pipeline import DataConfig
+from repro.launch import defaults
+from repro.launch.mesh import make_mesh_from_spec
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+import json, tempfile
+
+cfg = get_config("qwen2_0_5b").reduced()
+shape = SHAPES["train_smoke"]
+rt = repro.runtime(mode="kernel", db=TuningDatabase(None))
+tr = Trainer(cfg, defaults.default_run(cfg, shape), make_mesh_from_spec("2x4"),
+             defaults.default_layout(cfg),
+             DataConfig(seed=0, batch_size=shape.global_batch, seq_len=shape.seq_len),
+             adamw.AdamWConfig(total_steps=1),
+             TrainerConfig(total_steps=1, checkpoint_every=100,
+                           checkpoint_dir=tempfile.mkdtemp(),
+                           async_checkpoint=False),
+             runtime=rt)
+m = tr.run_one_step()
+print("RESULT_JSON=" + json.dumps({"loss": float(m["loss"])}))
+"""
+    env = dict(_ENV)
+    env["TF_CPP_MIN_LOG_LEVEL"] = "0"        # surface XLA's SPMD messages
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=560, env=env, cwd=".",
+    )
+    line = next(
+        (l for l in r.stdout.splitlines() if l.startswith("RESULT_JSON=")), None
+    )
+    assert line, f"stdout={r.stdout[-1500:]} stderr={r.stderr[-2500:]}"
+    out = json.loads(line.split("=", 1)[1])
+    assert np.isfinite(out["loss"])
+    assert "full rematerialization" not in r.stderr, r.stderr[-3000:]
