@@ -9,6 +9,9 @@ Emits ``name,us_per_call,derived`` CSV rows (derived = %speedup or context).
                  arrivals (benchmarks/serving_throughput.py)
   dispatch.*   — runtime resolution overhead, cold pipeline vs warm cache
                  (benchmarks/dispatch_overhead.py)
+  obs.*        — observability-plane overhead: per-step obs cost vs the
+                 kernel-mode step, disabled vs enabled collector
+                 (benchmarks/obs_overhead.py)
   train.*      — smoke train-step throughput under a pinned dispatch runtime
                  (benchmarks/train_step_throughput.py); train.bwd_* compares
                  the reference-VJP backward recompute against the tuned
@@ -103,6 +106,23 @@ def main() -> None:
     rows.append((
         "dispatch.resolve_warm", dres["warm_us"],
         f"hit_rate={dres['cache_hit_rate']:.2f}",
+    ))
+
+    # --- observability plane: overhead contract -----------------------------
+    from benchmarks import obs_overhead
+
+    ores = obs_overhead.bench(quick=args.quick)
+    rows.append((
+        "obs.step_instr_disabled", ores["step"]["instr_disabled_us"],
+        f"+{ores['step']['overhead_disabled_pct']:.3f}% of step",
+    ))
+    rows.append((
+        "obs.step_instr_enabled", ores["step"]["instr_enabled_us"],
+        f"+{ores['step']['overhead_enabled_pct']:.3f}% of step",
+    ))
+    rows.append((
+        "obs.resolve_enabled", ores["resolve"]["enabled_us"],
+        f"+{ores['resolve']['overhead_enabled_pct']:.1f}% vs disabled",
     ))
 
     # --- training: step throughput under the dispatch runtime ---------------

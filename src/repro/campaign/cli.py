@@ -4,6 +4,7 @@
     run     execute pending jobs best-first (interrupt-safe; rerun resumes)
     status  show the manifest's progress and banked speedups
     export  write the shippable per-platform database (records + cover sets)
+    drift   re-measure tuned sites and rank regressions vs db + roofline
 
 A CPU smoke campaign end-to-end (the TPU flow is identical minus --reduced):
 
@@ -94,13 +95,43 @@ def cmd_run(args) -> int:
         manifest.total_budget = args.budget
         manifest.save()
     db = TuningDatabase(_db_path(args))
-    summary = runner.run_campaign(
-        manifest, db,
-        evaluator=WallClockEvaluator(repeats=args.repeats, warmup=1),
-        max_jobs=args.max_jobs,
-        warm_start=not args.no_warm_start,
-    )
+    if args.metrics_out:
+        import repro.obs as obs
+
+        col = obs.collect(name="campaign")
+    else:
+        import contextlib
+
+        col = contextlib.nullcontext()
+    with col:
+        summary = runner.run_campaign(
+            manifest, db,
+            evaluator=WallClockEvaluator(repeats=args.repeats, warmup=1),
+            max_jobs=args.max_jobs,
+            warm_start=not args.no_warm_start,
+        )
     print(json.dumps(summary, indent=1, sort_keys=True))
+    if args.metrics_out:
+        col.write(args.metrics_out)
+        print(f"wrote metrics -> {args.metrics_out}")
+    return 0
+
+
+def cmd_drift(args) -> int:
+    """Ranked drift report: re-measure tuned sites, attribute vs db + roofline."""
+    from ..obs import drift as obs_drift
+
+    db = TuningDatabase(_db_path(args))
+    entries = obs_drift.drift_report(
+        db, threshold=args.threshold, platform=args.platform,
+    )
+    print(obs_drift.format_drift(entries, args.threshold))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([e.to_json() for e in entries], f, indent=1)
+        print(f"wrote drift report -> {args.json_out}")
+    if args.fail_on_drift and any(e.regressed for e in entries):
+        return 1
     return 0
 
 
@@ -191,7 +222,26 @@ def build_parser() -> argparse.ArgumentParser:
                     help="wall-clock evaluator repeats")
     pr.add_argument("--no-warm-start", action="store_true",
                     help="disable transfer seeding (cold-search control)")
+    pr.add_argument("--metrics-out", default=None,
+                    help="enable the obs collector (per-job wall-time + "
+                         "speedup histograms) and write its snapshot here")
     pr.set_defaults(fn=cmd_run)
+
+    pd = sub.add_parser(
+        "drift",
+        help="re-measure tuned sites live and rank regressions vs the db "
+             "record and the analytic roofline (re-tune trigger input)",
+    )
+    pd.add_argument("--db", default=None)
+    pd.add_argument("--platform", default=None,
+                    help="platform key to audit (default: detected)")
+    pd.add_argument("--threshold", type=float, default=1.5,
+                    help="flag sites whose live/tuned ratio exceeds this")
+    pd.add_argument("--json-out", default=None,
+                    help="write the ranked entries as JSON here")
+    pd.add_argument("--fail-on-drift", action="store_true",
+                    help="exit 1 if any site regressed past the threshold")
+    pd.set_defaults(fn=cmd_drift)
 
     ps = sub.add_parser("status", help="show campaign progress")
     ps.add_argument("--manifest", default="campaign.json")

@@ -14,6 +14,7 @@ pairs with the generic code for zero-tuning serve-time specialization.
 from __future__ import annotations
 
 import logging
+import time
 import zlib
 from typing import Callable, Dict, Optional
 
@@ -25,6 +26,8 @@ from ..core.evaluate import Evaluator, WallClockEvaluator
 from ..core.runtime import TunedRuntime
 from ..core.search import CoordinateDescent, SearchAlgorithm
 from ..core.tuner import autotune, promoted_dtype
+from ..obs.collect import current_collector as _obs_collector
+from ..obs.trace import span as _obs_span
 from .planner import TuningJob, _register_tunables
 from .scheduler import CampaignManifest
 from .transfer import compute_covers, warm_start_configs
@@ -101,9 +104,13 @@ def run_campaign(
             search_factory(job) if search_factory
             else CoordinateDescent(budget=job.budget, restarts=2)
         )
+        col = _obs_collector()
+        t_job = time.perf_counter()
         try:
             args = materialize_args(job, seed=arg_seed)
-            with campaign_rt:
+            with campaign_rt, _obs_span(
+                "campaign.job", kernel=job.kernel, budget=job.budget
+            ):
                 res = autotune(
                     tunable, args,
                     search=search, evaluator=evaluator, db=db,
@@ -115,6 +122,16 @@ def run_campaign(
             job.default_objective = res.default_objective
             job.seeded = bool(seeds)
             job.error = ""
+            if col.enabled:
+                # tune wall-time + best-vs-heuristic speedup per job, tagged
+                # by kernel family (bounded cardinality).
+                col.observe("campaign.job_s", time.perf_counter() - t_job,
+                            kernel=job.kernel)
+                if res.best_objective > 0 and res.default_objective > 0:
+                    col.observe("campaign.speedup",
+                                res.default_objective / res.best_objective,
+                                kernel=job.kernel)
+                col.counter("campaign.jobs", status="done")
             log.info(
                 "job %s %s: %.3g -> %.3g (%d evals%s)",
                 job.kernel, job.arg_shapes, res.default_objective,
@@ -124,6 +141,8 @@ def run_campaign(
         except Exception as e:  # a failed job must not sink the campaign
             job.status = "failed"
             job.error = f"{type(e).__name__}: {e}"
+            if col.enabled:
+                col.counter("campaign.jobs", status="failed")
             log.warning("job %s %s failed: %s", job.kernel, job.arg_shapes, job.error)
         manifest.save()                      # resume point after every job
     # Bank the campaign runtime's dispatch accounting in the manifest so

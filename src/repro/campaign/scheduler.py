@@ -29,63 +29,19 @@ from ..core.database import atomic_write_json
 from ..core.platform import HardwareProfile, detect_platform
 from .planner import TuningJob
 
-_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4, "int64": 8}
-
-
-def _bytes_of(dtype: str) -> int:
-    return _DTYPE_BYTES.get(dtype, 4)
-
-
 def job_roofline_seconds(job: TuningJob, profile: HardwareProfile) -> float:
     """max(FLOP time, HBM time) of one execution of the job's kernel site.
 
-    Same modelling discipline as tools/analytic.py (multiply-add = 2 FLOPs,
-    explicit per-site byte counts), specialized to the four kernel families.
+    The per-kernel-family model lives in tools/analytic.py
+    (:func:`repro.tools.analytic.site_roofline_seconds`) next to the
+    whole-step model, so the scheduler's priorities and the drift detector's
+    %-of-roofline attribution price a site identically.
     """
-    sh = job.arg_shapes
-    dt = _bytes_of(job.arg_dtypes[0])
-    if job.kernel == "matmul" and len(sh) >= 2 and len(sh[0]) == 2:
-        m, k = sh[0]
-        n = sh[1][1]
-        flops = 2.0 * m * k * n
-        mem = (m * k + k * n + m * n) * dt
-    elif job.kernel == "rmsnorm":
-        rows, d = sh[0]
-        flops = 4.0 * rows * d                       # square, mean, rsqrt-mul, scale
-        mem = 2.0 * rows * d * dt                    # one read + one write
-    elif job.kernel == "rmsnorm_bwd":
-        rows, d = sh[0]                              # ct leads, x-shaped
-        flops = 8.0 * rows * d                       # two reductions + dx combine
-        mem = 3.0 * rows * d * dt                    # ct + x read, dx write
-    elif job.kernel == "softmax_xent":
-        rows, vocab = sh[0]
-        flops = 6.0 * rows * vocab                   # max/exp/sum + label gather
-        mem = rows * vocab * dt                      # single streamed read
-    elif job.kernel == "softmax_xent_bwd":
-        rows, vocab = sh[1]                          # ct[rows] leads; logits 2nd
-        flops = 8.0 * rows * vocab                   # lse pass + (p − onehot)·ct
-        mem = 3.0 * rows * vocab * dt                # two logits reads + dl write
-    elif job.kernel in ("flash_attention", "attn_chunks"):
-        b, h, s, hd = sh[0]
-        flops = 2.0 * 2.0 * b * h * s * (s / 2.0) * hd   # qk^T + p@v, causal half
-        mem = (sum(_prod(x) for x in sh) + _prod(sh[0])) * dt  # q,k,v read + o write
-    elif job.kernel == "flash_attention_bwd":
-        b, h, s, hd = sh[0]                          # ct leads, q-shaped
-        # recompute fwd + dq pass (2 gemms) + dkv pass (4 gemms): ~2.5× fwd
-        flops = 5.0 * 2.0 * b * h * s * (s / 2.0) * hd
-        mem = (3.0 * sum(_prod(x) for x in sh[1:]) + 4.0 * _prod(sh[0])) * dt
-    else:
-        elems = sum(_prod(s) for s in sh)
-        flops = 2.0 * elems
-        mem = elems * dt * 2
-    return max(flops / profile.peak_flops_bf16, mem / profile.hbm_bandwidth)
+    from ..tools.analytic import site_roofline_seconds
 
-
-def _prod(seq) -> float:
-    out = 1.0
-    for x in seq:
-        out *= x
-    return out
+    return site_roofline_seconds(
+        job.kernel, job.arg_shapes, job.arg_dtypes[0], profile
+    )
 
 
 def dedupe_jobs(jobs: Sequence[TuningJob], platform: str) -> List[TuningJob]:

@@ -89,6 +89,11 @@ from .database import TuningDatabase, default_db
 from .params import Config
 from .platform import detect_platform, platform_override
 
+# Import order is safe: repro.obs's collector/tracing layers are
+# stdlib-only (obs.drift, which does import core modules, is lazy).
+from ..obs.collect import current_collector as _obs_collector
+from ..obs.trace import span as _obs_span
+
 _MODES = ("kernel", "reference", "auto")
 
 _platform_name: Optional[str] = None
@@ -109,10 +114,13 @@ def _platform() -> str:
 # Resolution tiers, in the order the default pipeline consults them.
 TIERS = ("override", "exact", "tune", "cover", "heuristic", "reference")
 
-# Dispatch phases: forward sites vs gradient sites (dispatches made while a
-# backward dispatch plan is executing). Ambient, not threaded through call
-# signatures: a bwd plan is ordinary model-layer code calling dispatch().
-PHASES = ("fwd", "bwd")
+# Dispatch phases: forward sites, gradient sites (dispatches made while a
+# backward dispatch plan is executing), and optimizer-update sites (the
+# trainer tags its parameter update "opt" — no kernel dispatches live there
+# today, so the tag exists for phase-resolved *timing*, not tier counts).
+# Ambient, not threaded through call signatures: a bwd plan is ordinary
+# model-layer code calling dispatch().
+PHASES = ("fwd", "bwd", "opt")
 
 _phase_ctx: "contextvars.ContextVar[str]" = contextvars.ContextVar(
     "repro_dispatch_phase", default="fwd"
@@ -121,7 +129,7 @@ _phase_ctx: "contextvars.ContextVar[str]" = contextvars.ContextVar(
 
 @contextlib.contextmanager
 def dispatch_phase(phase: str):
-    """Tag every dispatch in this scope with `phase` ('fwd' | 'bwd').
+    """Tag every dispatch in this scope with `phase` ('fwd'|'bwd'|'opt').
 
     The runtime enters ``dispatch_phase("bwd")`` around a dispatch spec's
     backward plan, so telemetry separates gradient-site resolutions from
@@ -327,6 +335,17 @@ class Telemetry:
             ph[tier] = ph.get(tier, 0) + 1
             pk = self.by_key_phase.setdefault(phase, {}).setdefault(k, {})
             pk[tier] = pk.get(tier, 0) + 1
+        # Fold into the ambient obs collector: the same accounting becomes a
+        # tagged counter next to the latency histograms (one enabled-check
+        # when nobody is collecting). Keys are deliberately NOT a tag — the
+        # per-key breakdown stays in this class; tag cardinality stays
+        # kernel × tier × phase × hit/miss.
+        col = _obs_collector()
+        if col.enabled:
+            col.counter(
+                "dispatch.calls", kernel=kernel, tier=tier, phase=phase,
+                cached="hit" if cached else "miss",
+            )
 
     def record_eviction(self, count: int = 1) -> None:
         with self._lock:
@@ -591,10 +610,17 @@ class TunedRuntime:
         tunable = _as_tunable(tunable)
         db = self.db if self.db is not None else default_db()
         platform = self.platform or _platform()
+        col = _obs_collector()
+        t0 = time.perf_counter() if col.enabled else 0.0
         key = _args_key(tunable, args, platform, key_extra, dp_dims=dp_dims)
         hit = self._cache_get(key, db)
         if hit is not None:
             self.telemetry.record(tunable.name, key, hit.tier, cached=True)
+            if col.enabled:
+                col.observe(
+                    "dispatch.resolve_s", time.perf_counter() - t0,
+                    tier=hit.tier, phase=_phase_ctx.get(), cached="hit",
+                )
             return hit
         req = ResolutionRequest(
             tunable=tunable, args=tuple(args), key=key, key_extra=key_extra,
@@ -612,6 +638,13 @@ class TunedRuntime:
             res = Resolution(None, "reference")
         self._cache_put(key, db, res)
         self.telemetry.record(tunable.name, key, res.tier)
+        if col.enabled:
+            # Per-tier resolution latency: a 'tune' row is a full search, an
+            # 'exact' miss is one db lookup, a 'hit' is the cache fast path.
+            col.observe(
+                "dispatch.resolve_s", time.perf_counter() - t0,
+                tier=res.tier, phase=_phase_ctx.get(), cached="miss",
+            )
         return res
 
     # -- dispatch ------------------------------------------------------------
@@ -636,7 +669,20 @@ class TunedRuntime:
         ``vjp="reference"`` the bound variant's backward recomputes the
         reference implementation's VJP. ``dp_dims`` overrides local-shape
         keying per arg (backward sites with transposed operands).
+
+        Under an enabled obs collector each dispatch runs inside a
+        ``span("dispatch")`` (kernel + phase on the event), so resolution
+        and execution cost shows up in the span tree; disabled collectors
+        skip straight to the implementation — one branch, no span object.
         """
+        col = _obs_collector()
+        if col.enabled:
+            name = tunable.name if isinstance(tunable, Tunable) else str(tunable)
+            with _obs_span("dispatch", kernel=name, phase=_phase_ctx.get()):
+                return self._dispatch_impl(tunable, args, config, dp_dims, kwargs)
+        return self._dispatch_impl(tunable, args, config, dp_dims, kwargs)
+
+    def _dispatch_impl(self, tunable, args, config, dp_dims, kwargs):
         tunable = _as_tunable(tunable)
         spec = tunable.dispatch or _DEFAULT_SPEC
         if not self.kernel_mode_active:

@@ -113,7 +113,32 @@ def _args_key(tunable: Tunable, args: Sequence[Any], platform: str, extra: str =
             shapes.append(tuple(a.shape))
             dtypes.append(getattr(a, "dtype", "float32"))
     shapes = _localize(shapes, arg_dims)
-    return make_key(tunable.name, platform, shapes, promoted_dtype(dtypes), extra)
+    key = make_key(tunable.name, platform, shapes, promoted_dtype(dtypes), extra)
+    _warn_if_dp_approx(key)
+    return key
+
+
+def _warn_if_dp_approx(key: str) -> None:
+    # ROADMAP-carried hazard, surfaced structurally: when the scope owner
+    # flagged its dp_degree as approximate (microbatch batch dim divides the
+    # mesh differently from the full input batch), the local-shape key we
+    # just built may not match the shard XLA actually materializes. One
+    # obs warning per key — recorded in the event buffer (and logged) even
+    # when metric collection is disabled, never warnings.warn spam.
+    from ..distributed.sharding import current_dp_approx
+
+    if not current_dp_approx():
+        return
+    from ..obs.collect import warn_once
+
+    warn_once(
+        "dispatch.local_key_approx",
+        key=key,
+        detail=(
+            "microbatch batch dim divides the mesh differently from the "
+            "full input batch; local-shape key approximates XLA's shard"
+        ),
+    )
 
 
 def _localize(shapes, arg_dims):

@@ -342,9 +342,19 @@ _DP_CTX: contextvars.ContextVar = contextvars.ContextVar(
     "repro_dp_degree", default=None
 )
 
+# Whether the ambient dp_degree is an *approximation*: the scope owner
+# computed it from a dim (the microbatch) whose divisibility differs from
+# the full input batch XLA actually sharded, so local-shape keys may not
+# match the true per-device shard. Carried separately so the keying layer
+# (tuner._args_key) can emit a structured one-time warning naming the key.
+_DP_APPROX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_dp_approx", default=False
+)
+
 
 @contextlib.contextmanager
-def mesh_context(mesh: Mesh, layout: Layout, dp_degree: Optional[int] = None):
+def mesh_context(mesh: Mesh, layout: Layout, dp_degree: Optional[int] = None,
+                 dp_approx: bool = False):
     """Ambient mesh/layout scope.
 
     `dp_degree` opts the scope into local-shape database keying (see
@@ -353,14 +363,21 @@ def mesh_context(mesh: Mesh, layout: Layout, dp_degree: Optional[int] = None):
     :func:`data_parallel_degree` on that batch dim (as the Trainer does).
     Left at None (the dry-run / lower_cell scopes), dispatch keys stay
     global.
+
+    `dp_approx` flags that degree as approximate (see :data:`_DP_APPROX`):
+    the Trainer sets it when the per-microbatch batch dim divides the mesh
+    differently from the full input batch, so keys computed under this scope
+    trigger the one-time ``dispatch.local_key_approx`` obs warning.
     """
     tok = _MESH_CTX.set((mesh, layout))
     tok_dp = _DP_CTX.set(dp_degree)
+    tok_ap = _DP_APPROX.set(bool(dp_approx))
     try:
         yield
     finally:
         _MESH_CTX.reset(tok)
         _DP_CTX.reset(tok_dp)
+        _DP_APPROX.reset(tok_ap)
 
 
 def current_mesh_layout():
@@ -369,6 +386,11 @@ def current_mesh_layout():
 
 def current_dp_degree() -> Optional[int]:
     return _DP_CTX.get()
+
+
+def current_dp_approx() -> bool:
+    """Is the ambient local-shape keying degree an approximation?"""
+    return bool(_DP_APPROX.get())
 
 
 def constrain(x, *dims):

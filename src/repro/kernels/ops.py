@@ -59,6 +59,40 @@ stored best variant for (platform, kernel, shape-bucket, dtype), else the
 campaign's 'few fit most' cover entry, else the shape heuristic, with the
 pure-jnp reference path when kernels are disabled (``REPRO_USE_PALLAS=0``
 or ``mode="reference"``).
+
+Observability (``repro.obs``)
+-----------------------------
+
+The dispatch plane is instrumented: every resolve/dispatch site, trainer
+step phase, serving tick, and campaign job reports into the *ambient
+collector* — ``repro.obs.collect(...)`` scoped the same contextvar way as
+``repro.runtime`` (thread/async isolated, nestable).
+
+* **Spans** — ``with obs.span("train.step", step=i): ...`` builds a
+  contextvar-scoped span tree; each span lands as a structured event in a
+  bounded ring buffer and as a ``span.<name>`` latency histogram. Pass
+  ``xla_annotations=True`` to ``collect`` to mirror spans into
+  ``jax.profiler.TraceAnnotation`` so they show up in XLA profiles.
+* **Metrics** — counters / gauges / log-bucketed histograms (p50/p95/p99
+  in bounded memory). Built-in hot-path series: ``dispatch.resolve_s``
+  (per-tier, cache hit/miss), ``dispatch.calls``, ``train.step_s`` /
+  ``train.tokens_per_s``, ``serve.admission_s`` / ``serve.per_token_s`` /
+  ``serve.queue_depth``, ``campaign.job_s`` / ``campaign.speedup``.
+* **Drift** — ``python -m repro.obs report --drift --db <db>`` (or
+  ``python -m repro.campaign drift``) replays each stored record's winning
+  config, attributes live seconds to %-of-tuned-best and %-of-roofline
+  (``tools/analytic.site_roofline_seconds``), and ranks regressions — the
+  re-tune queue.
+* **Export** — ``--metrics-out`` on ``launch.train`` / ``launch.serve`` /
+  ``campaign run`` writes a snapshot JSON; render with
+  ``python -m repro.obs report --metrics``, compare runs with
+  ``python -m repro.obs diff``; ``write_prom`` emits a Prometheus textfile
+  and ``write_jsonl`` an event log.
+
+**Overhead guarantee**: the process-default collector is *disabled*; every
+instrumentation site starts with one ``if not collector.enabled`` branch,
+so a tuned kernel-mode step pays no measurable cost (<2%, asserted by
+``benchmarks/obs_overhead.py`` in CI; <5% with default sampling enabled).
 """
 from __future__ import annotations
 

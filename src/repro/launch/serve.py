@@ -51,6 +51,12 @@ def main():
                     help="write the runtime telemetry snapshot JSON here "
                          "(feed to `campaign status --telemetry` / "
                          "benchmarks/campaign_report.py)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable the obs collector for the run and write its "
+                         "snapshot JSON here (render with "
+                         "`python -m repro.obs report --metrics <file>`)")
+    ap.add_argument("--metrics-sample", type=float, default=1.0,
+                    help="obs sample rate for per-tick gauges (1.0 = all)")
     args = ap.parse_args()
     if args.platform:
         from ..core.platform import set_platform_override
@@ -88,21 +94,31 @@ def main():
         EngineConfig(max_batch=8, max_seq=args.max_seq),
         runtime=rt,
     )
-    if args.warmup:
-        resolved = engine.warmup()
-        print(f"warmup resolved {len(resolved)} kernel buckets")
-    rs = np.random.RandomState(0)
-    for i in range(args.requests):
-        engine.submit(
-            Request(
-                prompt=rs.randint(0, cfg.vocab_size, 16).astype(np.int32),
-                max_new_tokens=args.new_tokens,
-                temperature=0.7 if i % 2 else 0.0,
-                seed=i,
-                arrival_time=float(i),   # staggered: exercises in-flight admission
+    import contextlib
+
+    import repro.obs as obs
+    from ..obs.metrics import percentile_row
+
+    col = (
+        obs.collect(name="serve", sample_rate=args.metrics_sample)
+        if args.metrics_out else contextlib.nullcontext()
+    )
+    with col:
+        if args.warmup:
+            resolved = engine.warmup()
+            print(f"warmup resolved {len(resolved)} kernel buckets")
+        rs = np.random.RandomState(0)
+        for i in range(args.requests):
+            engine.submit(
+                Request(
+                    prompt=rs.randint(0, cfg.vocab_size, 16).astype(np.int32),
+                    max_new_tokens=args.new_tokens,
+                    temperature=0.7 if i % 2 else 0.0,
+                    seed=i,
+                    arrival_time=float(i),  # staggered: exercises in-flight admission
+                )
             )
-        )
-    done = engine.serve()
+        done = engine.serve()
     toks = sum(len(r.output) for r in done)
     st = engine.stats
     print(f"served {len(done)} requests / {toks} tokens; "
@@ -110,6 +126,18 @@ def main():
           f"({sorted(r.latency_steps for r in done)[len(done)//2]} ticks); "
           f"{st['decode_steps']} pool decode steps, "
           f"{st['tokens_out']/max(1, st['decode_steps']):.2f} tok/step")
+    if args.metrics_out:
+        snap = col.snapshot()
+        for name, label in (("serve.admission_s", "admission"),
+                            ("serve.per_token_s", "per-token"),
+                            ("serve.latency_s", "request latency")):
+            row = percentile_row(snap, name)
+            if row:
+                print(f"{label}: p50 {row['p50']*1e3:.2f}ms  "
+                      f"p95 {row['p95']*1e3:.2f}ms  p99 {row['p99']*1e3:.2f}ms "
+                      f"(n={row['count']})")
+        col.write(args.metrics_out)
+        print(f"wrote metrics -> {args.metrics_out}")
     print(rt.telemetry.report())
     if args.telemetry_out:
         rt.telemetry.write(args.telemetry_out)

@@ -69,6 +69,12 @@ def main():
                     help="write the runtime telemetry snapshot JSON here "
                          "(feed to `campaign status --telemetry` / "
                          "benchmarks/campaign_report.py)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable the obs collector for the run and write its "
+                         "snapshot JSON here (render with "
+                         "`python -m repro.obs report --metrics <file>`)")
+    ap.add_argument("--metrics-sample", type=float, default=1.0,
+                    help="obs sample rate for high-frequency sites (1.0 = all)")
     args = ap.parse_args()
     if args.db and not os.path.exists(args.db):
         # A typo'd path would otherwise open as an EMPTY database and every
@@ -96,29 +102,45 @@ def main():
         db=TuningDatabase(args.db) if args.db else None,
         mode=args.mode, name="train",
     )
-    trainer = Trainer(
-        cfg, run, mesh, layout,
-        DataConfig(seed=args.seed, batch_size=batch, seq_len=seq,
-                   host_index=jax.process_index(), host_count=jax.process_count()),
-        adamw.AdamWConfig(total_steps=args.steps),
-        TrainerConfig(
-            total_steps=args.steps,
-            checkpoint_every=args.ckpt_every,
-            checkpoint_dir=args.ckpt_dir,
-            grad_compression=args.compression,
-            seed=args.seed,
-        ),
-        runtime=rt,
+    # Observability is opt-in: without --metrics-out the ambient collector
+    # stays the disabled process default and instrumentation costs one
+    # branch per site (the overhead contract).
+    import contextlib
+
+    import repro.obs as obs
+
+    col = (
+        obs.collect(name="train", sample_rate=args.metrics_sample)
+        if args.metrics_out else contextlib.nullcontext()
     )
-    # resume if a checkpoint exists
-    if trainer.ckpt.latest_step() is not None:
-        trainer.restore_checkpoint()
-    metrics = trainer.train()
+    with col:
+        trainer = Trainer(
+            cfg, run, mesh, layout,
+            DataConfig(seed=args.seed, batch_size=batch, seq_len=seq,
+                       host_index=jax.process_index(),
+                       host_count=jax.process_count()),
+            adamw.AdamWConfig(total_steps=args.steps),
+            TrainerConfig(
+                total_steps=args.steps,
+                checkpoint_every=args.ckpt_every,
+                checkpoint_dir=args.ckpt_dir,
+                grad_compression=args.compression,
+                seed=args.seed,
+            ),
+            runtime=rt,
+        )
+        # resume if a checkpoint exists
+        if trainer.ckpt.latest_step() is not None:
+            trainer.restore_checkpoint()
+        metrics = trainer.train()
     print(f"done at step {trainer.step}: {metrics}")
     print(rt.telemetry.report())
     if args.telemetry_out:
         rt.telemetry.write(args.telemetry_out)
         print(f"wrote telemetry -> {args.telemetry_out}")
+    if args.metrics_out:
+        col.write(args.metrics_out)
+        print(f"wrote metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,72 @@
+"""repro.obs — the sustained-performance observability plane.
+
+The tuning campaign proves *peak* performance at tune time; this package
+proves it is *sustained* under live traffic — the other half of the paper's
+claim. Three coordinated layers, all scoped/thread-isolated the same way the
+dispatch runtime is:
+
+* **tracing** (:mod:`.trace`) — ``obs.span("train.step")`` context managers
+  build a contextvar-scoped span tree; each span lands in a log-bucketed
+  latency histogram plus a bounded ring buffer of structured events, and may
+  opt into ``jax.profiler.TraceAnnotation`` so spans appear in XLA profiles.
+* **metrics** (:mod:`.metrics` via :class:`.ObsCollector`) — counters,
+  gauges, and log-bucketed histograms (p50/p95/p99 without unbounded
+  memory), recorded at the hot paths: dispatch resolution (per-tier latency,
+  cache hit/miss), trainer step phases, serving engine ticks, and campaign
+  jobs.
+* **drift** (:mod:`.drift`) — compares live per-site timings against the
+  database's measured records and the per-site roofline model
+  (``tools/analytic.py``), attributing every dispatch site to
+  %%-of-tuned-best and %%-of-roofline and ranking the regressions: the
+  re-tune trigger input for the future ``BackgroundTune`` tier.
+
+Overhead contract: the *default* collector is disabled, and every recording
+path begins with a single ``enabled`` check — a kernel-mode train step under
+a disabled (or default-sampled) collector regresses by <2%% (<5%%), enforced
+by ``benchmarks/obs_overhead.py`` in CI.
+
+Scoping mirrors ``repro.runtime``::
+
+    import repro.obs as obs
+
+    with obs.collect(name="serve") as col:
+        with obs.span("serve.drain"):
+            engine.serve()
+    col.write("metrics.json")                   # python -m repro.obs report
+
+Exports: JSON snapshot (``write``), JSONL event sink (``write_jsonl``),
+Prometheus textfile (``write_prom``); ``python -m repro.obs report/diff``
+renders and compares snapshots, ``report --drift`` runs the drift detector.
+"""
+from .collect import (  # noqa: F401
+    Event,
+    ObsCollector,
+    collect,
+    counter,
+    current_collector,
+    enabled,
+    event,
+    gauge,
+    observe,
+    warn_once,
+)
+from .metrics import Counter, Gauge, Histogram  # noqa: F401
+from .trace import current_span, span  # noqa: F401
+
+__all__ = [
+    "Counter",
+    "Event",
+    "Gauge",
+    "Histogram",
+    "ObsCollector",
+    "collect",
+    "counter",
+    "current_collector",
+    "current_span",
+    "enabled",
+    "event",
+    "gauge",
+    "observe",
+    "span",
+    "warn_once",
+]

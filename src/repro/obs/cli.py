@@ -1,0 +1,108 @@
+"""`python -m repro.obs` — render, diff, and drift-check observability data.
+
+    repro.obs report --metrics metrics.json [--events 10]
+    repro.obs report --drift --db tuning.json [--platform cpu]
+                     [--threshold 1.5] [--live live.json]
+    repro.obs diff a.json b.json
+
+`report` renders a `--metrics-out` snapshot; with `--drift` it runs the
+replay probe against a tuning database (or consumes `--live` key→seconds
+timings) and prints the ranked `campaign drift` report. `diff` compares two
+snapshots — canary vs suspect — and names the shifted histograms.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from .export import (
+    diff_snapshots,
+    format_diff,
+    format_snapshot,
+    load_snapshot,
+)
+
+
+def cmd_report(ns: argparse.Namespace) -> int:
+    if not ns.drift and not ns.metrics:
+        print("error: report needs --metrics and/or --drift", file=sys.stderr)
+        return 2
+    if ns.metrics:
+        snap = load_snapshot(ns.metrics)
+        print(format_snapshot(snap, max_events=ns.events))
+    if ns.drift:
+        if not ns.db:
+            print("error: --drift needs --db tuning.json", file=sys.stderr)
+            return 2
+        from ..core.database import TuningDatabase
+        from .drift import drift_report, format_drift
+
+        db = TuningDatabase(ns.db)
+        live = None
+        if ns.live:
+            with open(ns.live) as f:
+                live = {k: float(v) for k, v in json.load(f).items()}
+        entries = drift_report(
+            db, platform=ns.platform, threshold=ns.threshold, live=live,
+            seed=ns.seed,
+        )
+        print(format_drift(entries, threshold=ns.threshold))
+        if ns.json_out:
+            from ..core.database import atomic_write_json
+
+            atomic_write_json(ns.json_out, {
+                "threshold": ns.threshold,
+                "entries": [e.to_json() for e in entries],
+            })
+        if ns.fail_on_drift and any(e.regressed for e in entries):
+            return 1
+    return 0
+
+
+def cmd_diff(ns: argparse.Namespace) -> int:
+    a = load_snapshot(ns.a)
+    b = load_snapshot(ns.b)
+    print(format_diff(diff_snapshots(a, b)))
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro.obs", description="observability reports over snapshots"
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    rep = sub.add_parser("report", help="render a metrics snapshot / drift check")
+    rep.add_argument("--metrics", help="metrics snapshot (a --metrics-out file)")
+    rep.add_argument("--events", type=int, default=0,
+                     help="also print the last N span events")
+    rep.add_argument("--drift", action="store_true",
+                     help="run the drift detector against a tuning db")
+    rep.add_argument("--db", help="tuning database for --drift")
+    rep.add_argument("--platform", help="restrict drift to one platform key")
+    rep.add_argument("--threshold", type=float, default=1.5,
+                     help="slowdown factor that flags a site as regressed")
+    rep.add_argument("--live", help="JSON {key: seconds} instead of replaying")
+    rep.add_argument("--seed", type=int, default=0,
+                     help="replay-probe tensor seed")
+    rep.add_argument("--json-out", help="also write the drift entries as JSON")
+    rep.add_argument("--fail-on-drift", action="store_true",
+                     help="exit 1 when any site is flagged regressed")
+    rep.set_defaults(fn=cmd_report)
+
+    dif = sub.add_parser("diff", help="compare two metrics snapshots (b - a)")
+    dif.add_argument("a")
+    dif.add_argument("b")
+    dif.set_defaults(fn=cmd_diff)
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ns = build_parser().parse_args(argv)
+    return ns.fn(ns)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

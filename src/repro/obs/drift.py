@@ -1,0 +1,216 @@
+"""Drift detection: is tuned performance *sustained*, or has it rotted?
+
+A tuning database is a set of promises: "config C hit `objective` seconds on
+key K on this platform". Those promises decay — driver/runtime upgrades,
+thermal backoff, noisy neighbours, a re-sharded deployment shifting local
+shapes. This module re-checks them:
+
+1. **replay probe** (:func:`measure_sites`) — for each stored record,
+   rebuild representative arguments from the key (the same seeded-tensor
+   recipe the campaign runner measured with) and re-time the stored winning
+   config through the same wall-clock evaluator.
+2. **attribution** (:func:`detect_drift`) — compare live seconds against the
+   record's measured `objective` (%-of-tuned-best) and against the
+   first-principles hardware bound from
+   :func:`repro.tools.analytic.site_roofline_seconds` (%-of-roofline). The
+   roofline column separates "the site regressed" from "the site was never
+   close to the hardware anyway" — a 1.5× slowdown at 80% of roofline is a
+   machine problem; at 3% of roofline it's a tuning problem.
+3. **ranked report** (:func:`format_drift`) — worst slowdown first, the
+   `campaign drift` artifact. Sites flagged `regressed` are exactly the
+   re-tune queue a future BackgroundTune tier would consume (ROADMAP item
+   2); until that lands, `python -m repro.obs report --drift` is the human
+   trigger.
+
+Live timings can also come from a metrics snapshot instead of the replay
+probe (``--live``): any mapping of db key → seconds works, so a fleet can
+feed per-site timings scraped from production collectors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import types
+from typing import Any, Dict, List, Optional, Sequence
+
+# Lazy-import discipline: repro.core.runtime imports repro.obs, so this
+# module must not be imported from the package __init__; it pulls core/
+# campaign modules only when actually called.
+
+
+@dataclasses.dataclass
+class DriftEntry:
+    """One dispatch site's sustained-performance attribution."""
+
+    key: str
+    kernel: str
+    tuned_s: float            # the database record's measured objective
+    live_s: float             # what the same config costs right now
+    roofline_s: float         # first-principles hardware bound for the site
+    slowdown: float           # live_s / tuned_s (>1 = slower than tuned)
+    pct_of_tuned_best: float  # 100 * tuned_s / live_s (100 = promise holds)
+    pct_of_roofline: float    # 100 * roofline_s / live_s
+    regressed: bool
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _arg_dtypes_for(kernel: str, shapes: Sequence[Sequence[int]], dtype: str) -> List[str]:
+    """Reconstruct per-arg dtypes from a key's promoted dtype.
+
+    Keys store only the promoted float dtype; the integer label args of the
+    xent family (the planner's only int args) are re-marked here so the
+    replay tensors match what the campaign measured.
+    """
+    dtypes = [dtype] * len(shapes)
+    if kernel == "softmax_xent" and len(shapes) >= 2:
+        dtypes[1] = "int32"                      # (T,) labels
+    elif kernel == "softmax_xent_bwd" and len(shapes) >= 3:
+        dtypes[2] = "int32"                      # ct, logits, labels
+    return dtypes
+
+
+def measure_sites(
+    db,
+    platform: Optional[str] = None,
+    evaluator=None,
+    keys: Optional[Sequence[str]] = None,
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Replay probe: re-time each stored record's winning config *now*.
+
+    Returns {db key: live seconds}. Sites whose kernel is not registered or
+    whose replay fails are skipped (a probe must degrade, not crash) —
+    failures land as +inf so the report still surfaces them.
+    """
+    import math
+
+    from ..campaign.planner import _register_tunables
+    from ..campaign.runner import materialize_args
+    from ..core.annotate import get_tunable, registered
+    from ..core.database import split_key
+    from ..core.evaluate import WallClockEvaluator
+
+    _register_tunables()
+    evaluator = evaluator or WallClockEvaluator(repeats=3, warmup=1)
+    want = set(keys) if keys is not None else None
+    live: Dict[str, float] = {}
+    for record in db.records():
+        if want is not None and record.key not in want:
+            continue
+        kernel, plat, shapes, dtype, _extra = split_key(record.key)
+        if platform is not None and plat != platform:
+            continue
+        if kernel not in registered():
+            continue
+        tunable = get_tunable(kernel)
+        # materialize_args only reads .kernel/.arg_shapes/.arg_dtypes, so a
+        # namespace stands in for a TuningJob — same seeded recipe, same
+        # tensors the campaign originally measured.
+        job = types.SimpleNamespace(
+            kernel=kernel,
+            arg_shapes=tuple(tuple(s) for s in shapes),
+            arg_dtypes=tuple(_arg_dtypes_for(kernel, shapes, dtype or "float32")),
+        )
+        try:
+            args = materialize_args(job, seed=seed)
+            variant = tunable.variant(**record.config)
+            m = evaluator.evaluate(variant, args)
+            live[record.key] = m.objective if m.ok else math.inf
+        except Exception:
+            live[record.key] = math.inf
+    return live
+
+
+def detect_drift(
+    db,
+    live: Dict[str, float],
+    threshold: float = 1.5,
+    profile=None,
+    platform: Optional[str] = None,
+) -> List[DriftEntry]:
+    """Attribute live per-site seconds against tuned-best and roofline.
+
+    `live` maps db keys to current seconds — from :func:`measure_sites`, or
+    from any external source (a production metrics snapshot). A site is
+    `regressed` when live exceeds `threshold` × the record's tuned
+    objective. Entries come back ranked worst-slowdown-first.
+    """
+    from ..core.database import split_key
+    from ..core.platform import detect_platform
+    from ..tools.analytic import site_roofline_seconds
+
+    profile = profile or detect_platform()
+    out: List[DriftEntry] = []
+    for record in db.records():
+        live_s = live.get(record.key)
+        if live_s is None:
+            continue
+        kernel, plat, shapes, dtype, _extra = split_key(record.key)
+        if platform is not None and plat != platform:
+            continue
+        tuned_s = record.objective
+        roof_s = site_roofline_seconds(kernel, shapes, dtype or "float32", profile)
+        slow = (live_s / tuned_s) if tuned_s > 0 else float("inf")
+        out.append(
+            DriftEntry(
+                key=record.key,
+                kernel=kernel,
+                tuned_s=tuned_s,
+                live_s=live_s,
+                roofline_s=roof_s,
+                slowdown=slow,
+                pct_of_tuned_best=(100.0 * tuned_s / live_s) if live_s > 0 else 0.0,
+                pct_of_roofline=(100.0 * roof_s / live_s) if live_s > 0 else 0.0,
+                regressed=slow > threshold,
+            )
+        )
+    out.sort(key=lambda e: -e.slowdown)
+    return out
+
+
+def drift_report(
+    db,
+    platform: Optional[str] = None,
+    threshold: float = 1.5,
+    evaluator=None,
+    profile=None,
+    live: Optional[Dict[str, float]] = None,
+    seed: int = 0,
+) -> List[DriftEntry]:
+    """measure (unless `live` is supplied) + attribute, ranked worst-first."""
+    if live is None:
+        live = measure_sites(db, platform=platform, evaluator=evaluator, seed=seed)
+    return detect_drift(db, live, threshold=threshold, profile=profile,
+                        platform=platform)
+
+
+def format_drift(entries: Sequence[DriftEntry], threshold: float = 1.5) -> str:
+    """The `campaign drift` report: ranked table + re-tune queue."""
+    if not entries:
+        return "drift: no measured sites (empty db or no live timings)"
+    lines = [
+        f"campaign drift report ({len(entries)} sites, "
+        f"regression threshold {threshold:.2f}x)",
+        f"  {'slowdown':>9}  {'%tuned':>7}  {'%roof':>6}  "
+        f"{'tuned_s':>10}  {'live_s':>10}  key",
+    ]
+    for e in entries:
+        flag = " <-- REGRESSED" if e.regressed else ""
+        lines.append(
+            f"  {e.slowdown:>8.2f}x  {e.pct_of_tuned_best:>6.1f}%  "
+            f"{e.pct_of_roofline:>5.1f}%  {e.tuned_s:>10.3e}  "
+            f"{e.live_s:>10.3e}  {e.key}{flag}"
+        )
+    n_reg = sum(1 for e in entries if e.regressed)
+    if n_reg:
+        lines.append(
+            f"  {n_reg} site(s) regressed — re-tune queue "
+            f"(future BackgroundTune input):"
+        )
+        for e in entries:
+            if e.regressed:
+                lines.append(f"    campaign re-tune candidate: {e.key}")
+    else:
+        lines.append("  all sites within threshold — tuned performance sustained")
+    return "\n".join(lines)

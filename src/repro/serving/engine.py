@@ -65,6 +65,8 @@ from ..core.runtime import TunedRuntime
 from ..distributed import sharding as shd
 from ..models import lm
 from ..models.transformer import RunConfig
+from ..obs.collect import current_collector as _obs_collector
+from ..obs.trace import span as _obs_span
 
 
 @dataclasses.dataclass
@@ -197,11 +199,12 @@ class ServingEngine:
 
     # ------------------------------------------------------------- admission
     def _admit(self, req: Request, slot: int, now: int, done: List[Request]) -> None:
+        t_wall = time.perf_counter()
         L = len(req.prompt)
         sb = self._bucket_len(L)
         toks = np.zeros((1, sb), np.int32)
         toks[0, :L] = req.prompt
-        with self._scope():
+        with self._scope(), _obs_span("serve.admit", slot=slot, prompt_len=L):
             logits, cache = self._prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(L, jnp.int32)
             )
@@ -214,6 +217,11 @@ class ServingEngine:
         t_admit = self.clock()
         rng = np.random.default_rng(req.seed)
         first = _sample_one(np.asarray(logits, np.float32)[0], req, rng)
+        col = _obs_collector()
+        if col.enabled:
+            # admission → first token: prefill + the first sample, wall time.
+            col.observe("serve.admission_s", time.perf_counter() - t_wall)
+            col.counter("serve.requests")
         max_new = min(req.max_new_tokens, self.ecfg.max_seq - L)
         state = _Slot(req=req, rng=rng, cur=first, pos=L, max_new=max_new,
                       emitted=[first], t_admit=t_admit)
@@ -231,6 +239,13 @@ class ServingEngine:
         req.latency_steps = now - req.admitted_step
         req.latency_s = self.clock() - state.t_admit
         self.stats["tokens_out"] += len(state.emitted)
+        col = _obs_collector()
+        if col.enabled:
+            n = len(state.emitted)
+            col.observe("serve.latency_s", req.latency_s)
+            if n:
+                col.observe("serve.per_token_s", req.latency_s / n)
+                col.counter("serve.tokens", n)
 
     # ----------------------------------------------------------------- serve
     def serve(self) -> List[Request]:
@@ -240,6 +255,9 @@ class ServingEngine:
         done: List[Request] = []
         now = 0
         B = self.ecfg.max_batch
+        col = _obs_collector()
+        t_serve0 = time.perf_counter()
+        tok0 = self.stats["tokens_out"]
 
         def active() -> int:
             return sum(s is not None for s in self._slots)
@@ -271,6 +289,12 @@ class ServingEngine:
             self.stats["decode_steps"] += 1
             self.stats["slot_steps_active"] += n_act
             self.stats["slot_steps_idle"] += B - n_act
+            # Per-tick gauges go through the sampler: ticks are the engine's
+            # highest-frequency site, and the last-written value is what a
+            # gauge means anyway.
+            if col.enabled and col.sample():
+                col.gauge("serve.queue_depth", len(pending))
+                col.gauge("serve.slots_active", n_act)
             now += 1
             logits_np = np.asarray(logits, np.float32)
             for i, s in enumerate(self._slots):
@@ -284,6 +308,13 @@ class ServingEngine:
                     self._finish(s, now)
                     done.append(s.req)
                     self._slots[i] = None     # freed: next arrival admits here
+        if col.enabled:
+            wall = time.perf_counter() - t_serve0
+            if wall > 0:
+                col.gauge(
+                    "serve.tokens_per_s",
+                    (self.stats["tokens_out"] - tok0) / wall,
+                )
         return sorted(done, key=lambda r: r._order)
 
     # ---------------------------------------------------------------- warmup

@@ -203,6 +203,69 @@ def _cache_bytes(cfg: ArchConfig, B: int, S: int, chips: int, model_par: int,
     return total / chips
 
 
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4, "int64": 8}
+
+
+def _prod(seq) -> float:
+    out = 1.0
+    for x in seq:
+        out *= x
+    return out
+
+
+def site_roofline_seconds(
+    kernel: str,
+    arg_shapes: Tuple[Tuple[int, ...], ...],
+    dtype: str,
+    profile: HardwareProfile,
+) -> float:
+    """max(FLOP time, HBM time) of one execution of a single kernel site.
+
+    The per-site counterpart of the whole-step model above (same modelling
+    discipline: multiply-add = 2 FLOPs, explicit byte counts), specialized
+    to the tuned kernel families. The campaign scheduler prices jobs with it
+    (seconds-at-stake ordering) and the drift detector uses it as the
+    hardware bound a tuned record is attributed against (%-of-roofline).
+    """
+    sh = arg_shapes
+    dt = _DTYPE_BYTES.get(dtype, 4)
+    if kernel == "matmul" and len(sh) >= 2 and len(sh[0]) == 2:
+        m, k = sh[0]
+        n = sh[1][1]
+        flops = 2.0 * m * k * n
+        mem = (m * k + k * n + m * n) * dt
+    elif kernel == "rmsnorm":
+        rows, d = sh[0]
+        flops = 4.0 * rows * d                       # square, mean, rsqrt-mul, scale
+        mem = 2.0 * rows * d * dt                    # one read + one write
+    elif kernel == "rmsnorm_bwd":
+        rows, d = sh[0]                              # ct leads, x-shaped
+        flops = 8.0 * rows * d                       # two reductions + dx combine
+        mem = 3.0 * rows * d * dt                    # ct + x read, dx write
+    elif kernel == "softmax_xent":
+        rows, vocab = sh[0]
+        flops = 6.0 * rows * vocab                   # max/exp/sum + label gather
+        mem = rows * vocab * dt                      # single streamed read
+    elif kernel == "softmax_xent_bwd":
+        rows, vocab = sh[1]                          # ct[rows] leads; logits 2nd
+        flops = 8.0 * rows * vocab                   # lse pass + (p − onehot)·ct
+        mem = 3.0 * rows * vocab * dt                # two logits reads + dl write
+    elif kernel in ("flash_attention", "attn_chunks"):
+        b, h, s, hd = sh[0]
+        flops = 2.0 * 2.0 * b * h * s * (s / 2.0) * hd   # qk^T + p@v, causal half
+        mem = (sum(_prod(x) for x in sh) + _prod(sh[0])) * dt  # q,k,v read + o write
+    elif kernel == "flash_attention_bwd":
+        b, h, s, hd = sh[0]                          # ct leads, q-shaped
+        # recompute fwd + dq pass (2 gemms) + dkv pass (4 gemms): ~2.5× fwd
+        flops = 5.0 * 2.0 * b * h * s * (s / 2.0) * hd
+        mem = (3.0 * sum(_prod(x) for x in sh[1:]) + 4.0 * _prod(sh[0])) * dt
+    else:
+        elems = sum(_prod(s) for s in sh)
+        flops = 2.0 * elems
+        mem = elems * dt * 2
+    return max(flops / profile.peak_flops_bf16, mem / profile.hbm_bandwidth)
+
+
 @dataclasses.dataclass
 class AnalyticRoofline:
     compute_s: float

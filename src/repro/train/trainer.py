@@ -34,11 +34,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
+from ..core.runtime import dispatch_phase
 from ..data.pipeline import DataConfig, SyntheticPipeline
 from ..distributed import sharding as shd
 from ..distributed.collectives import compress_grads, ef_init
 from ..models import lm
 from ..models.transformer import RunConfig
+from ..obs.collect import current_collector as _obs_collector
+from ..obs.trace import span as _obs_span
 from ..optim import adamw
 from . import checkpoint as ckpt_mod
 from .resilience import RestartPolicy, StragglerMonitor, run_with_recovery
@@ -87,9 +90,19 @@ class Trainer:
         # the axes that divide b), XLA's reshape propagation decides the
         # true per-device shape — keys then state the b/k-derived degree,
         # which planner and dispatch still agree on (see ROADMAP).
+        sizes = shd.mesh_axis_sizes(mesh)
         self._dp_degree = shd.data_parallel_degree(
-            shd.mesh_axis_sizes(mesh), layout,
+            sizes, layout,
             max(1, data_cfg.batch_size // max(1, run.microbatches)),
+        )
+        # When the microbatch divides the mesh differently from the full
+        # input batch, the degree above is an approximation of XLA's actual
+        # shard choice — flagged so the keying layer emits a one-time
+        # structured warning naming the affected key.
+        self._dp_approx = (
+            run.microbatches > 1
+            and self._dp_degree
+            != shd.data_parallel_degree(sizes, layout, data_cfg.batch_size)
         )
         self.data = SyntheticPipeline(cfg, data_cfg)
         self.ckpt = ckpt_mod.Checkpointer(
@@ -112,7 +125,8 @@ class Trainer:
         if self.runtime is not None:
             stack.enter_context(self.runtime)
         stack.enter_context(
-            shd.mesh_context(self.mesh, self.layout, dp_degree=self._dp_degree)
+            shd.mesh_context(self.mesh, self.layout, dp_degree=self._dp_degree,
+                             dp_approx=self._dp_approx)
         )
         return stack
 
@@ -173,7 +187,14 @@ class Trainer:
                     params, batch
                 )
             grads, ef_state = compress_grads(grads, ef_state, comp_mode)
-            params, opt_state, om = adamw.update(opt_cfg, grads, opt_state, params)
+            # Phase-tag the optimizer update: any dispatch resolved while
+            # tracing it carries phase="opt" in telemetry/obs. adamw itself
+            # contains no dispatch sites today, so existing fwd/bwd-only
+            # accounting is unchanged — the tag is the hook.
+            with dispatch_phase("opt"):
+                params, opt_state, om = adamw.update(
+                    opt_cfg, grads, opt_state, params
+                )
             return params, opt_state, ef_state, {"loss": loss, **om}
 
         b_abs = jax.tree_util.tree_map(
@@ -242,20 +263,35 @@ class Trainer:
 
     # -------------------------------------------------------------------- run
     def run_one_step(self) -> Dict[str, float]:
-        batch_np = self.data.next_batch()
+        with _obs_span("train.data"):
+            batch_np = self.data.next_batch()
         batch = jax.tree_util.tree_map(
             lambda x, s: jax.device_put(x, s), batch_np, self._b_sh
         )
         t0 = time.perf_counter()
-        with self._scope():
-            self.params, self.opt_state, self.ef_state, metrics = self._train_step(
-                self.params, self.opt_state, self.ef_state, batch
-            )
+        with _obs_span("train.step", step=self.step):
+            with self._scope():
+                self.params, self.opt_state, self.ef_state, metrics = (
+                    self._train_step(
+                        self.params, self.opt_state, self.ef_state, batch
+                    )
+                )
         metrics = {k: float(v) for k, v in metrics.items()}
         dt = time.perf_counter() - t0
         self.monitor.record(self.step, dt)
         self.step += 1
         metrics["step_time_s"] = dt
+        col = _obs_collector()
+        if col.enabled:
+            leaves = jax.tree_util.tree_leaves(batch_np)
+            tokens = (
+                int(np.prod(leaves[0].shape[:2]))
+                if leaves and getattr(leaves[0], "ndim", 0) >= 2 else 0
+            )
+            col.observe("train.step_s", dt)
+            if tokens and dt > 0:
+                col.counter("train.tokens", tokens)
+                col.gauge("train.tokens_per_s", tokens / dt)
         if self.step % self.tcfg.checkpoint_every == 0:
             self.save_checkpoint()
         if self.step % self.tcfg.log_every == 0:

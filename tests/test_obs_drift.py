@@ -1,0 +1,189 @@
+"""Drift detection: attribution unit tests plus the end-to-end protocol —
+tune a small roster, replay with an artificially slowed kernel, and the
+report must flag exactly the regressed site."""
+import json
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.database import Record, TuningDatabase, make_key
+from repro.obs.drift import (
+    DriftEntry,
+    detect_drift,
+    drift_report,
+    format_drift,
+    measure_sites,
+)
+
+
+def _db_with(tmp_path=None, *entries):
+    db = TuningDatabase(str(tmp_path / "db.json") if tmp_path else None)
+    for key, config, objective in entries:
+        db.put(Record(key, config, objective, "wallclock", 4, 0.0),
+               save=tmp_path is not None)
+    return db
+
+
+K_MM = make_key("matmul", "cpu-host", [(64, 32), (32, 16)], "float32")
+K_RN = make_key("rmsnorm", "cpu-host", [(64, 32), (32,)], "float32")
+
+
+# ---------------------------------------------------------------------------
+# unit: attribution against synthetic live timings
+# ---------------------------------------------------------------------------
+
+def test_detect_drift_flags_exactly_the_slowed_site():
+    db = _db_with(None,
+                  (K_MM, {"bm": 8, "bn": 16, "bk": 32}, 1e-4),
+                  (K_RN, {"block_rows": 16}, 2e-4))
+    live = {K_MM: 1.1e-4,          # holds its promise
+            K_RN: 8e-4}            # 4x slower than tuned
+    entries = detect_drift(db, live, threshold=1.5)
+    assert [e.regressed for e in entries] == [True, False]  # ranked worst-first
+    worst = entries[0]
+    assert worst.key == K_RN and worst.kernel == "rmsnorm"
+    assert worst.slowdown == pytest.approx(4.0)
+    assert worst.pct_of_tuned_best == pytest.approx(25.0)   # 100*tuned/live
+    assert worst.roofline_s > 0
+    assert worst.pct_of_roofline == pytest.approx(
+        100.0 * worst.roofline_s / worst.live_s)
+    ok = entries[1]
+    assert ok.key == K_MM and not ok.regressed
+    assert {k for k in worst.to_json()} >= {
+        "key", "kernel", "tuned_s", "live_s", "slowdown",
+        "pct_of_tuned_best", "pct_of_roofline", "regressed"}
+
+
+def test_detect_drift_missing_live_and_failed_replay():
+    db = _db_with(None, (K_MM, {"bm": 8, "bn": 16, "bk": 32}, 1e-4))
+    assert detect_drift(db, {}, threshold=1.5) == []        # no live timing
+    entries = detect_drift(db, {K_MM: math.inf}, threshold=1.5)
+    assert entries[0].regressed and entries[0].pct_of_tuned_best == 0.0
+
+
+def test_format_drift_report():
+    db = _db_with(None,
+                  (K_MM, {"bm": 8, "bn": 16, "bk": 32}, 1e-4),
+                  (K_RN, {"block_rows": 16}, 2e-4))
+    entries = detect_drift(db, {K_MM: 1e-4, K_RN: 9e-4}, threshold=1.5)
+    text = format_drift(entries, threshold=1.5)
+    assert "REGRESSED" in text
+    assert f"campaign re-tune candidate: {K_RN}" in text
+    assert K_MM in text and "1 site(s) regressed" in text
+    assert "no measured sites" in format_drift([], 1.5)
+    healthy = format_drift(detect_drift(db, {K_MM: 1e-4}, threshold=1.5), 1.5)
+    assert "sustained" in healthy
+
+
+# ---------------------------------------------------------------------------
+# e2e: tune a roster, slow one kernel, replay, flag it
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def tuned_db(tmp_path):
+    """A real two-site tuned database (matmul + rmsnorm, tiny shapes)."""
+    from repro.core.evaluate import WallClockEvaluator
+    from repro.core.search import CoordinateDescent
+    from repro.core.tuner import autotune
+    from repro.kernels.matmul import matmul as matmul_tunable
+    from repro.kernels.rmsnorm import rmsnorm as rmsnorm_tunable
+
+    rs = np.random.RandomState(0)
+    db = TuningDatabase(str(tmp_path / "tuned.json"))
+    ev = WallClockEvaluator(repeats=2, warmup=1)
+    autotune(matmul_tunable,
+             (jnp.asarray(rs.randn(64, 32), jnp.float32),
+              jnp.asarray(rs.randn(32, 16), jnp.float32)),
+             search=CoordinateDescent(budget=4), evaluator=ev, db=db)
+    autotune(rmsnorm_tunable,
+             (jnp.asarray(rs.randn(64, 32), jnp.float32),
+              jnp.asarray(rs.randn(32), jnp.float32)),
+             search=CoordinateDescent(budget=4), evaluator=ev, db=db)
+    assert len(db) == 2
+    return db
+
+
+def _slow_rmsnorm(monkeypatch, factor=40):
+    """Chain `factor` dependent rmsnorm calls — shape-preserving, not
+    DCE-able, so the replayed variant is genuinely ~factor× slower."""
+    from repro.kernels.rmsnorm import rmsnorm as rmsnorm_tunable
+
+    orig = rmsnorm_tunable.fn
+
+    def chained(x, w, **cfg):
+        out = orig(x, w, **cfg)
+        for _ in range(factor - 1):
+            out = orig(out, w, **cfg)
+        return out
+
+    monkeypatch.setattr(rmsnorm_tunable, "fn", chained)
+
+
+def test_replay_flags_exactly_the_slowed_kernel(tuned_db, monkeypatch):
+    _slow_rmsnorm(monkeypatch)
+    # threshold 3: far above wall-clock noise, far below the 40x slowdown
+    entries = drift_report(tuned_db, threshold=3.0)
+    assert len(entries) == 2
+    flagged = [e for e in entries if e.regressed]
+    assert [e.kernel for e in flagged] == ["rmsnorm"]
+    assert entries[0].kernel == "rmsnorm"                  # ranked first
+    assert entries[0].slowdown > 3.0
+    assert entries[0].pct_of_tuned_best < 35.0
+    assert "campaign re-tune candidate" in format_drift(entries, 3.0)
+
+
+def test_measure_sites_skips_unregistered_and_filters_keys(tuned_db):
+    stray = make_key("not_a_kernel", "cpu-host", [(8, 8)], "float32")
+    tuned_db.put(Record(stray, {}, 1e-5, "wallclock", 1, 0.0), save=False)
+    live = measure_sites(tuned_db)
+    assert stray not in live                               # unregistered: skipped
+    assert len(live) == 2
+    only = measure_sites(tuned_db, keys=[next(iter(live))])
+    assert len(only) == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI: `repro.obs report --drift` and `campaign drift`
+# ---------------------------------------------------------------------------
+
+def test_obs_cli_drift_with_live_timings(tmp_path, capsys):
+    from repro.obs.cli import main
+
+    db_path = str(tmp_path / "db.json")
+    _db_with(tmp_path,
+             (K_MM, {"bm": 8, "bn": 16, "bk": 32}, 1e-4),
+             (K_RN, {"block_rows": 16}, 2e-4))
+    live_path = str(tmp_path / "live.json")
+    with open(live_path, "w") as f:
+        json.dump({K_MM: 1e-4, K_RN: 1e-3}, f)
+    out_path = str(tmp_path / "drift.json")
+    rc = main(["report", "--drift", "--db", db_path, "--live", live_path,
+               "--json-out", out_path])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out and K_RN in out
+    report = json.load(open(out_path))
+    assert report["threshold"] == 1.5
+    flagged = [e for e in report["entries"] if e["regressed"]]
+    assert [e["kernel"] for e in flagged] == ["rmsnorm"]
+    # --fail-on-drift turns the flag into a nonzero exit
+    assert main(["report", "--drift", "--db", db_path, "--live", live_path,
+                 "--fail-on-drift"]) == 1
+
+
+def test_campaign_cli_drift_replay(tuned_db, tmp_path, monkeypatch, capsys):
+    from repro.campaign.cli import main
+
+    _slow_rmsnorm(monkeypatch)
+    out_path = str(tmp_path / "drift.json")
+    rc = main(["drift", "--db", tuned_db.path, "--threshold", "3",
+               "--json-out", out_path])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "campaign drift report" in out and "REGRESSED" in out
+    entries = json.load(open(out_path))
+    assert [e["kernel"] for e in entries if e["regressed"]] == ["rmsnorm"]
+    assert main(["drift", "--db", tuned_db.path, "--threshold", "3",
+                 "--fail-on-drift"]) == 1
