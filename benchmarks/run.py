@@ -17,6 +17,10 @@ Emits ``name,us_per_call,derived`` CSV rows (derived = %speedup or context).
                  the reference-VJP backward recompute against the tuned
                  backward plane (gradients as dispatch sites)
   kernel.*     — Pallas-kernel interpret-mode correctness-at-speed spot check
+  ssm.*        — selective-scan dispatch plane: chunked associative scan vs
+                 the sequential lax.scan reference oracle
+  moe.*        — grouped expert-gemm dispatch vs the per-expert einsum
+                 reference (the three ``ecd,edf`` contractions it replaced)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -165,6 +169,40 @@ def main() -> None:
     out = rmsnorm_pallas(x, w, block_rows=64, interpret=True)
     err = float(jnp.max(jnp.abs(out - ref.rmsnorm(x, w))))
     rows.append(("kernel.rmsnorm.pallas_interp_maxerr", err, "correctness"))
+
+    # --- SSM / MoE dispatch plane: tuned form vs reference oracle ----------
+    import functools
+
+    import repro
+    from repro.kernels.ssm_scan import ssm_scan_chunked
+
+    b, s, di, ds = 2, (64 if args.quick else 256), 32, 16
+    xc = jnp.asarray(rs.randn(b, s, di) * 0.3, jnp.float32)
+    dt = jnp.asarray(np.abs(rs.randn(b, s, di)) * 0.1 + 0.01, jnp.float32)
+    Bc = jnp.asarray(rs.randn(b, s, ds) * 0.3, jnp.float32)
+    Cc = jnp.asarray(rs.randn(b, s, ds) * 0.3, jnp.float32)
+    A = jnp.asarray(-np.abs(rs.randn(di, ds)) - 0.1, jnp.float32)
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    t_seq = _time(ref.ssm_scan, xc, dt, Bc, Cc, A, h0)
+    rows.append(("ssm.scan.ref_sequential", t_seq * 1e6, f"s={s}"))
+    t_chunk = _time(functools.partial(ssm_scan_chunked, chunk=32),
+                    xc, dt, Bc, Cc, A, h0)
+    rows.append((
+        "ssm.scan.chunked32", t_chunk * 1e6,
+        f"{(t_seq / t_chunk - 1) * 100:+.0f}% vs sequential",
+    ))
+
+    e, cap, k, n = 4, (32 if args.quick else 128), 64, 128
+    gx = jnp.asarray(rs.randn(e, cap, k) * 0.3, jnp.float32)
+    gw = jnp.asarray(rs.randn(e, k, n) * 0.3, jnp.float32)
+    t_eg_ref = _time(ref.expert_gemm, gx, gw)
+    rows.append(("moe.expert_gemm.ref_einsum", t_eg_ref * 1e6, f"e={e} c={cap}"))
+    with repro.runtime(mode="kernel"):
+        t_eg = _time(lambda a, w_: repro.dispatch("expert_gemm", a, w_), gx, gw)
+    rows.append((
+        "moe.expert_gemm.dispatch", t_eg * 1e6,
+        f"{(t_eg_ref / t_eg - 1) * 100:+.0f}% vs einsum",
+    ))
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

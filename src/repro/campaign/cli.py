@@ -85,6 +85,19 @@ def cmd_plan(args) -> int:
 
 def cmd_run(args) -> int:
     manifest = scheduler.CampaignManifest.load(args.manifest)
+    if scheduler.manifest_missing_bwd(manifest) and not args.allow_missing_bwd:
+        print(
+            "error: manifest has sharding-aware training jobs (@dp scenarios) "
+            "but no backward roster — it predates the tuned backward plane. "
+            "Running it would bank a forward-only database: the train step's "
+            "gradient dispatch sites would never ExactHit.\n"
+            f"re-plan it:   python -m repro.campaign plan --train-mesh ... "
+            f"--out {args.manifest}\n"
+            "or pass --allow-missing-bwd to run forward-only anyway (pin "
+            "repro.runtime(bwd_dispatch=False) at train time to match).",
+            file=sys.stderr,
+        )
+        return 2
     if args.budget is not None:
         # re-split the new global budget across still-pending jobs
         pending = [j for j in manifest.jobs if j.status == "pending"]
@@ -222,6 +235,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="wall-clock evaluator repeats")
     pr.add_argument("--no-warm-start", action="store_true",
                     help="disable transfer seeding (cold-search control)")
+    pr.add_argument("--allow-missing-bwd", action="store_true",
+                    help="run a training manifest that has no backward "
+                         "roster (pre-backward-plane plan) instead of "
+                         "failing with a re-plan instruction")
     pr.add_argument("--metrics-out", default=None,
                     help="enable the obs collector (per-job wall-time + "
                          "speedup histograms) and write its snapshot here")

@@ -28,21 +28,28 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from ..configs.base import SHAPES, ArchConfig, ShapeSpec, get_config
 from ..core.database import make_key, shape_bucket
 from ..core.tuner import promoted_dtype
+from ..models.moe import expert_capacity
 
 # Kernels a campaign tunes by default. `attn_chunks` is the model-level
 # chunked-attention tunable (meaningful on any platform); the rest are the
 # Pallas kernel sites behind runtime dispatch — the `*_bwd` entries are the
-# tuned backward plane (gradient dispatch sites; matmul gradients reuse the
-# `matmul` tunable with transposed operands, so they need no entry).
+# tuned backward plane (gradient dispatch sites; matmul and expert_gemm
+# gradients reuse their forward tunables with transposed operands, so they
+# need no entry).
 DEFAULT_KERNELS = (
     "matmul",
     "rmsnorm",
     "flash_attention",
     "softmax_xent",
     "attn_chunks",
+    "ssm_scan",
+    "ssm_update",
+    "expert_gemm",
     "rmsnorm_bwd",
     "flash_attention_bwd",
     "softmax_xent_bwd",
+    "ssm_scan_bwd",
+    "ssm_update_bwd",
 )
 
 
@@ -101,14 +108,38 @@ class TuningJob:
 def _site_counts(cfg: ArchConfig) -> Dict[str, float]:
     """Per-step execution counts of each kernel site family."""
     n_attn = n_dense_ffn = n_norm = 0.0
+    n_mamba = n_mlstm = n_slstm = n_moe = 0.0
     for seg in cfg.segments():
         for spec in seg.pattern:
             if spec.mixer == "attn":
                 n_attn += seg.repeats
+            elif spec.mixer == "mamba":
+                n_mamba += seg.repeats
+            elif spec.mixer == "mlstm":
+                n_mlstm += seg.repeats
+            elif spec.mixer == "slstm":
+                n_slstm += seg.repeats
             if spec.ffn in ("dense", "moe+dense"):
                 n_dense_ffn += seg.repeats
+            if "moe" in spec.ffn:
+                n_moe += seg.repeats
             n_norm += 2 * seg.repeats            # pre-mixer + pre-ffn norms
-    return {"attn": n_attn, "ffn": n_dense_ffn, "norm": n_norm}
+    return {
+        "attn": n_attn, "ffn": n_dense_ffn, "norm": n_norm,
+        "mamba": n_mamba, "mlstm": n_mlstm, "slstm": n_slstm, "moe": n_moe,
+    }
+
+
+def _mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(d_inner, d_state, dt_rank) as ``ssm.mamba_init`` derives them."""
+    di = cfg.mamba_expand * cfg.d_model
+    dtr = max(1, -(-cfg.d_model // 16))          # ceil(d / 16)
+    return di, cfg.mamba_d_state, dtr
+
+
+def _slstm_ff(d: int) -> int:
+    """sLSTM post-MLP width (GeGLU pf=4/3, rounded up to 64)."""
+    return ((4 * d // 3 + 63) // 64) * 64
 
 
 def plan_train_jobs(
@@ -156,6 +187,41 @@ def plan_train_jobs(
     # dispatch key_extra must match flash_attention's f"c{causal}w{window}"
     add("flash_attention", [q, kv, kv], [f, f, f], counts["attn"], extra="cTruew0")
     add("attn_chunks", [q, kv, kv], [f, f, f], counts["attn"])
+
+    # SSM mixers: projection gemms at token rows + the batch-shaped scan.
+    if counts["mamba"] > 0:
+        di, ds, dtr = _mamba_dims(cfg)
+        add("matmul", [(T, d), (d, 2 * di)], [f, f], counts["mamba"])
+        add("matmul", [(T, di), (di, dtr + 2 * ds)], [f, f], counts["mamba"])
+        add("matmul", [(T, dtr), (dtr, di)], ["float32", "float32"], counts["mamba"])
+        add("matmul", [(T, di), (di, d)], ["float32", "float32"], counts["mamba"])
+        add("ssm_scan",
+            [(b_att, s_att, di), (b_att, s_att, di), (b_att, s_att, ds),
+             (b_att, s_att, ds), (di, ds), (b_att, di, ds)],
+            [f, "float32", "float32", "float32", "float32", "float32"],
+            counts["mamba"])
+    if counts["mlstm"] > 0:
+        di = 2 * d
+        add("matmul", [(T, d), (d, 2 * di)], [f, f], counts["mlstm"])
+        add("matmul", [(T, di), (di, di)], [f, f], 3 * counts["mlstm"])
+        add("matmul", [(T, di), (di, d)], ["float32", "float32"], counts["mlstm"])
+    if counts["slstm"] > 0:
+        ffs = _slstm_ff(d)
+        add("matmul", [(T, d), (d, 4 * d)], [f, f], counts["slstm"])
+        add("matmul", [(T, d), (d, ffs)], [f, f], 2 * counts["slstm"])
+        add("matmul", [(T, ffs), (ffs, d)], [f, f], counts["slstm"])
+    # MoE expert FFN: grouped gemms keyed on (experts × capacity × hidden).
+    # Capacity follows the *global* traced token count (what moe_apply sees
+    # under jit), capped for materializability like every leading dim.
+    if counts["moe"] > 0 and cfg.num_experts > 0:
+        e = cfg.num_experts
+        cap = min(max_tokens, expert_capacity(
+            B * S, e, cfg.experts_per_token, cfg.capacity_factor))
+        n_up = 2 if cfg.ffn_kind in ("swiglu", "geglu") else 1
+        add("expert_gemm", [(e, cap, d), (e, d, cfg.d_ff)], [f, f],
+            n_up * counts["moe"])
+        add("expert_gemm", [(e, cap, cfg.d_ff), (e, cfg.d_ff, d)], [f, f],
+            counts["moe"])
     return jobs
 
 
@@ -195,9 +261,14 @@ def plan_training_jobs(
     Unlike :func:`plan_train_jobs` (shape-level roster used when no mesh is
     specified), the site list here mirrors the model's dispatch sites
     one-for-one: q/k/v/o projections, FFN gemms (per ``ffn_kind``), the
-    per-loss-chunk unembed matmul + fused xent rows, rmsnorm rows, and one
+    per-loss-chunk unembed matmul + fused xent rows, rmsnorm rows, one
     flash-attention job per distinct sliding-window value in the layer
-    pattern (``key_extra`` must match dispatch's ``c{causal}w{window}``).
+    pattern (``key_extra`` must match dispatch's ``c{causal}w{window}``),
+    the SSM plane (mamba projection gemms + the ``ssm_scan`` /
+    ``ssm_scan_bwd`` selective-scan sites at the local batch shard,
+    mLSTM/sLSTM projection gemms), and the MoE plane (``expert_gemm``
+    grouped gemms keyed on experts × capacity × hidden, capacity from
+    ``capacity_factor`` at the global traced token count).
 
     The roster covers the **backward plane** too: every matmul site derives
     its dL/dx (``ct @ wᵀ``) and dL/dw (``xᵀ @ ct``) transposed-operand
@@ -247,7 +318,7 @@ def plan_training_jobs(
                 weight=float(weight),
             ))
 
-    def add_gemm(m, kdim, n, weight):
+    def add_gemm(m, kdim, n, weight, dtype=None):
         """One matmul dispatch site + its two backward dispatch sites.
 
         The backward jobs mirror what `_matmul_bwd` dispatches at trace
@@ -255,13 +326,30 @@ def plan_training_jobs(
         local-shape keying) and dL/dw = xᵀ[k,m] @ ct[m,n], whose token dim
         sits at arg0-dim1/arg1-dim0 — dispatch passes ``dp_dims`` for it,
         and `m` here is already the local token count, so the shapes agree.
+        `dtype` overrides the model dtype for fp32 sites (mamba's dt/out
+        projections, mLSTM's out projection).
         """
-        add("matmul", [(m, kdim), (kdim, n)], [f, f], weight)
-        add("matmul", [(m, n), (n, kdim)], [f, f], weight)        # dL/dx
-        add("matmul", [(kdim, m), (m, n)], [f, f], weight)        # dL/dw
+        dt_ = dtype or f
+        add("matmul", [(m, kdim), (kdim, n)], [dt_, dt_], weight)
+        add("matmul", [(m, n), (n, kdim)], [dt_, dt_], weight)    # dL/dx
+        add("matmul", [(kdim, m), (m, n)], [dt_, dt_], weight)    # dL/dw
+
+    def add_egemm(e_, c_, kdim, n_, weight):
+        """One expert_gemm dispatch site + its two backward sites.
+
+        Mirrors `_expert_gemm_bwd`: dL/dx = ct[e,c,n] @ wᵀ[e,n,k] and
+        dL/dw = xᵀ[e,k,c] @ ct[e,c,n] — both resolve as transposed-operand
+        ``expert_gemm`` keys (no dedicated bwd tunable, like matmul). No
+        arg is batch-sharded (capacity derives from the global token
+        count), so shapes are global as-is.
+        """
+        add("expert_gemm", [(e_, c_, kdim), (e_, kdim, n_)], [f, f], weight)
+        add("expert_gemm", [(e_, c_, n_), (e_, n_, kdim)], [f, f], weight)
+        add("expert_gemm", [(e_, kdim, c_), (e_, c_, n_)], [f, f], weight)
 
     # Per-layer site families (weights = executions per step).
     n_attn = n_norm = n_ffn = 0.0
+    n_mamba = n_mlstm = n_slstm = n_moe = 0.0
     windows: Dict[int, float] = {}
     for seg in cfg.segments():
         for spec in seg.pattern:
@@ -269,10 +357,18 @@ def plan_training_jobs(
             if spec.mixer == "attn":
                 n_attn += seg.repeats
                 windows[spec.window] = windows.get(spec.window, 0.0) + seg.repeats
+            elif spec.mixer == "mamba":
+                n_mamba += seg.repeats
+            elif spec.mixer == "mlstm":
+                n_mlstm += seg.repeats
+            elif spec.mixer == "slstm":
+                n_slstm += seg.repeats
             if spec.ffn != "none":
                 n_norm += seg.repeats       # pre-ffn norm
             if spec.ffn in ("dense", "moe+dense"):
                 n_ffn += seg.repeats
+            if "moe" in spec.ffn:
+                n_moe += seg.repeats
 
     # Attention projections: x[T, d] @ w (canonicalized to 2-D rows).
     add_gemm(T, d, H * hd, n_attn)                                # q proj
@@ -313,6 +409,58 @@ def plan_training_jobs(
         add("flash_attention", [q, kv, kv], [f, f, f], n, extra=f"cTruew{w}")
         add("flash_attention_bwd", [q, q, kv, kv], [f, f, f, f], n,
             extra=f"cTruew{w}")
+
+    # --- SSM mixers ------------------------------------------------------
+    # Mamba: four projection gemm sites (dt/out run in fp32, matching
+    # `ssm._mamba_dtBC` / `_mamba_out`) plus the selective scan at the
+    # local batch shard — xc/dt/B/C/h0 are batch-sharded
+    # (data_parallel_args), so b_att here mirrors what dispatch keys under
+    # the trainer's mesh_context. The scan's gradient resolves the
+    # dedicated `ssm_scan_bwd` tunable (cotangents take the y/hN output
+    # shapes, fp32).
+    if n_mamba > 0:
+        di, ds, dtr = _mamba_dims(cfg)
+        add_gemm(T, d, 2 * di, n_mamba)                           # in_proj
+        add_gemm(T, di, dtr + 2 * ds, n_mamba)                    # x_proj
+        add_gemm(T, dtr, di, n_mamba, dtype="float32")            # dt_proj
+        add_gemm(T, di, d, n_mamba, dtype="float32")              # out_proj
+        xc_s = (b_att, s, di)
+        bc_s = (b_att, s, ds)
+        a_s, h_s = (di, ds), (b_att, di, ds)
+        add("ssm_scan", [xc_s, xc_s, bc_s, bc_s, a_s, h_s],
+            [f, "float32", "float32", "float32", "float32", "float32"],
+            n_mamba)
+        add("ssm_scan_bwd",
+            [xc_s, h_s, xc_s, xc_s, bc_s, bc_s, a_s, h_s],
+            ["float32", "float32", f, "float32", "float32", "float32",
+             "float32", "float32"],
+            n_mamba)
+    # mLSTM: chunkwise projections (the decayed intra-chunk score matmuls
+    # stay fused in the scan body — the decay mask makes them
+    # non-substitutable by a plain matmul record).
+    if n_mlstm > 0:
+        di = 2 * d
+        add_gemm(T, d, 2 * di, n_mlstm)                           # in_proj
+        add_gemm(T, di, di, 3 * n_mlstm)                          # wq/wk/wv
+        add_gemm(T, di, d, n_mlstm, dtype="float32")              # out_proj
+    if n_slstm > 0:
+        ffs = _slstm_ff(d)
+        add_gemm(T, d, 4 * d, n_slstm)                            # gate stack
+        add_gemm(T, d, ffs, 2 * n_slstm)                          # up_g/up_u
+        add_gemm(T, ffs, d, n_slstm)                              # down
+
+    # --- MoE expert FFN --------------------------------------------------
+    # Grouped gemms keyed on (experts × capacity × hidden). Capacity
+    # follows the *global* per-microbatch token count — `moe_apply` traces
+    # the unsharded shape, and expert_gemm args are not batch-sharded —
+    # capped like every leading dim (capped jobs warm-start only).
+    if n_moe > 0 and cfg.num_experts > 0:
+        e = cfg.num_experts
+        cap = min(max_tokens, expert_capacity(
+            b_mb * S, e, cfg.experts_per_token, cfg.capacity_factor))
+        n_up = 2 if cfg.ffn_kind in ("swiglu", "geglu") else 1
+        add_egemm(e, cap, d, cfg.d_ff, n_up * n_moe)              # wg/wu
+        add_egemm(e, cap, cfg.d_ff, d, n_moe)                     # wd
     return jobs
 
 
@@ -404,6 +552,49 @@ def plan_serving_jobs(
             add("flash_attention", [q, kv, kv], [f, f, f], counts["attn"], scen_p,
                 extra="cTruew0")
             add("attn_chunks", [q, kv, kv], [f, f, f], counts["attn"], scen_p)
+            # SSM mixers at prefill: projections over s rows + the batch-1
+            # scan (prefill-with-state is the same ssm_scan site training
+            # resolves, at the admission shape).
+            if counts["mamba"] > 0:
+                di, ds_, dtr = _mamba_dims(cfg)
+                add("matmul", [(s, d), (d, 2 * di)], [f, f],
+                    counts["mamba"], scen_p)
+                add("matmul", [(s, di), (di, dtr + 2 * ds_)], [f, f],
+                    counts["mamba"], scen_p)
+                add("matmul", [(s, dtr), (dtr, di)], ["float32", "float32"],
+                    counts["mamba"], scen_p)
+                add("matmul", [(s, di), (di, d)], ["float32", "float32"],
+                    counts["mamba"], scen_p)
+                add("ssm_scan",
+                    [(1, s, di), (1, s, di), (1, s, ds_), (1, s, ds_),
+                     (di, ds_), (1, di, ds_)],
+                    [f, "float32", "float32", "float32", "float32", "float32"],
+                    counts["mamba"], scen_p)
+            if counts["mlstm"] > 0:
+                di = 2 * d
+                add("matmul", [(s, d), (d, 2 * di)], [f, f],
+                    counts["mlstm"], scen_p)
+                add("matmul", [(s, di), (di, di)], [f, f],
+                    3 * counts["mlstm"], scen_p)
+                add("matmul", [(s, di), (di, d)], ["float32", "float32"],
+                    counts["mlstm"], scen_p)
+            if counts["slstm"] > 0:
+                ffs = _slstm_ff(d)
+                add("matmul", [(s, d), (d, 4 * d)], [f, f],
+                    counts["slstm"], scen_p)
+                add("matmul", [(s, d), (d, ffs)], [f, f],
+                    2 * counts["slstm"], scen_p)
+                add("matmul", [(s, ffs), (ffs, d)], [f, f],
+                    counts["slstm"], scen_p)
+            if counts["moe"] > 0 and cfg.num_experts > 0:
+                e = cfg.num_experts
+                cap = expert_capacity(s, e, cfg.experts_per_token,
+                                      cfg.capacity_factor)
+                n_up = 2 if cfg.ffn_kind in ("swiglu", "geglu") else 1
+                add("expert_gemm", [(e, cap, d), (e, d, cfg.d_ff)], [f, f],
+                    n_up * counts["moe"], scen_p)
+                add("expert_gemm", [(e, cap, cfg.d_ff), (e, cfg.d_ff, d)],
+                    [f, f], counts["moe"], scen_p)
         # --- decode pool: max_batch rows, once per generated token
         if B * s > max_tokens:
             continue
@@ -419,6 +610,48 @@ def plan_serving_jobs(
                 counts["ffn"] * s, scen_d)
         add("matmul", [(B, d), (d, cfg.vocab_size)], [f, f], float(s), scen_d)
         add("rmsnorm", [(B, d), (d,)], [f, f], counts["norm"] * s, scen_d)
+        # SSM decode state: one fused `ssm_update` per mamba layer per tick
+        # (the decode-state rows), plus the per-tick projection gemms.
+        if counts["mamba"] > 0:
+            di, ds_, dtr = _mamba_dims(cfg)
+            add("matmul", [(B, d), (d, 2 * di)], [f, f],
+                counts["mamba"] * s, scen_d)
+            add("matmul", [(B, di), (di, dtr + 2 * ds_)], [f, f],
+                counts["mamba"] * s, scen_d)
+            add("matmul", [(B, dtr), (dtr, di)], ["float32", "float32"],
+                counts["mamba"] * s, scen_d)
+            add("matmul", [(B, di), (di, d)], ["float32", "float32"],
+                counts["mamba"] * s, scen_d)
+            add("ssm_update",
+                [(B, di), (B, di), (B, ds_), (B, ds_), (di, ds_),
+                 (B, di, ds_)],
+                [f, "float32", "float32", "float32", "float32", "float32"],
+                counts["mamba"] * s, scen_d)
+        if counts["mlstm"] > 0:
+            di = 2 * d
+            add("matmul", [(B, d), (d, 2 * di)], [f, f],
+                counts["mlstm"] * s, scen_d)
+            add("matmul", [(B, di), (di, di)], [f, f],
+                3 * counts["mlstm"] * s, scen_d)
+            add("matmul", [(B, di), (di, d)], ["float32", "float32"],
+                counts["mlstm"] * s, scen_d)
+        if counts["slstm"] > 0:
+            ffs = _slstm_ff(d)
+            add("matmul", [(B, d), (d, 4 * d)], [f, f],
+                counts["slstm"] * s, scen_d)
+            add("matmul", [(B, d), (d, ffs)], [f, f],
+                2 * counts["slstm"] * s, scen_d)
+            add("matmul", [(B, ffs), (ffs, d)], [f, f],
+                counts["slstm"] * s, scen_d)
+        if counts["moe"] > 0 and cfg.num_experts > 0:
+            e = cfg.num_experts
+            cap = expert_capacity(B, e, cfg.experts_per_token,
+                                  cfg.capacity_factor)
+            n_up = 2 if cfg.ffn_kind in ("swiglu", "geglu") else 1
+            add("expert_gemm", [(e, cap, d), (e, d, cfg.d_ff)], [f, f],
+                n_up * counts["moe"] * s, scen_d)
+            add("expert_gemm", [(e, cap, cfg.d_ff), (e, cfg.d_ff, d)],
+                [f, f], counts["moe"] * s, scen_d)
     # decode-shaped attention lookup: one query row against the pool cache.
     # The slot pool allocates its cache at max_seq depth ONCE — decode never
     # sees a shallower kv tensor, so only the max_seq bucket is a live key.

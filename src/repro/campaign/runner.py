@@ -41,7 +41,10 @@ def materialize_args(job: TuningJob, seed: int = 0):
     Float args are unit-scale gaussians (what the correctness gates and the
     paper's own measurements use); integer args are labels/ids drawn against
     the first ≥2-D arg's trailing dim (the vocab for softmax_xent and its
-    backward, whose leading cotangent arg is 1-D).
+    backward, whose leading cotangent arg is 1-D). SSM scan/update jobs
+    condition their coefficient args instead — dt must be a small positive
+    step and A a negative decay rate, or exp(dt·A) leaves the regime the
+    selective scan ever traces and the measurement is of overflow handling.
     """
     import jax.numpy as jnp
 
@@ -54,12 +57,28 @@ def materialize_args(job: TuningJob, seed: int = 0):
         default=2,
     ))                                             # vocab bound for label args
     attn_like = ("flash_attention", "flash_attention_bwd", "attn_chunks")
-    for shape, dtype in zip(job.arg_shapes, job.arg_dtypes):
+    # (dt arg index, A arg index) per SSM kernel — bwd signatures lead with
+    # the two cotangents, shifting the forward args right by two.
+    ssm_coeffs = {
+        "ssm_scan": (1, 4), "ssm_update": (1, 4),
+        "ssm_scan_bwd": (3, 6), "ssm_update_bwd": (3, 6),
+    }
+    for i, (shape, dtype) in enumerate(zip(job.arg_shapes, job.arg_dtypes)):
         if dtype.startswith("int") or dtype.startswith("uint"):
             args.append(jnp.asarray(rs.randint(0, hi, size=shape), jnp.int32))
-        else:
-            scale = 0.3 if job.kernel in attn_like else 1.0
-            args.append(jnp.asarray(rs.randn(*shape) * scale, jnp.dtype(dtype)))
+            continue
+        t = rs.randn(*shape)
+        if job.kernel in ssm_coeffs:
+            dt_i, a_i = ssm_coeffs[job.kernel]
+            if i == dt_i:
+                t = np.abs(t) * 0.1 + 0.01         # post-softplus step sizes
+            elif i == a_i:
+                t = -np.abs(t) - 0.1               # stable decay rates
+            else:
+                t = t * 0.3
+        elif job.kernel in attn_like:
+            t = t * 0.3
+        args.append(jnp.asarray(t, jnp.dtype(dtype)))
     return tuple(args)
 
 

@@ -227,6 +227,26 @@ class CampaignManifest:
         }
 
 
+def manifest_missing_bwd(manifest: CampaignManifest) -> bool:
+    """True when a sharding-aware training manifest predates the tuned
+    backward plane: it carries ``@dp`` training scenarios (the
+    ``plan_training_jobs`` marker) but not a single ``*_bwd`` kernel row.
+
+    Such manifests were planned when the roster stopped at the forward
+    pass — running one banks a forward-only database, so the train step's
+    gradient sites resolve at warm-start/cover/heuristic tiers and never
+    ExactHit. ``campaign run`` refuses them with a re-plan instruction
+    unless ``--allow-missing-bwd`` is passed. Shape-level (no-mesh) and
+    serving manifests are forward-only by design and are not flagged.
+    """
+    has_train_mesh = any(
+        any("@dp" in s for s in j.scenarios) for j in manifest.jobs
+    )
+    if not has_train_mesh or manifest.meta.get("bwd_roster"):
+        return False
+    return not any(j.kernel.endswith("_bwd") for j in manifest.jobs)
+
+
 def build_manifest(
     jobs: Sequence[TuningJob],
     total_budget: int,
@@ -247,5 +267,8 @@ def build_manifest(
     m = CampaignManifest(
         path=path, platform=platform, jobs=list(scheduled), total_budget=total_budget
     )
+    # Stamp whether this plan carries the tuned backward roster, so resume
+    # can tell a deliberately forward-only plan from a stale pre-bwd one.
+    m.meta["bwd_roster"] = any(j.kernel.endswith("_bwd") for j in scheduled)
     m.save()
     return m

@@ -8,6 +8,11 @@ Modules:
   rmsnorm.py   — fused RMSNorm, tunable block_rows + fused rmsnorm_bwd
   xent.py      — fused large-vocab cross entropy, tunable (block_rows,
                  block_v) + vocab-streamed softmax_xent_bwd
+  ssm_scan.py  — Mamba selective scan: Pallas chunked scan (chunk, block_d)
+                 + fused single-step decode update, each with a chunk/block-
+                 windowed bwd tunable
+  moe_gemm.py  — grouped expert GEMM [e,c,k]@[e,k,n], tunable (bc, bn, bk);
+                 backward = transposed-operand expert_gemm dispatches
   ops.py       — migration guide from the removed global-mode API
   ref.py       — reference oracles, forward AND backward (correctness gate +
                  dry-run lowering path + Reference-tier gradient fallback)
@@ -21,5 +26,17 @@ from .attention import (
     flash_attention_pallas,
 )
 from .matmul import MATMUL_SPACE, matmul, matmul_pallas
+from .moe_gemm import EXPERT_GEMM_SPACE, expert_gemm, expert_gemm_pallas
 from .rmsnorm import RMSNORM_SPACE, rmsnorm, rmsnorm_bwd, rmsnorm_bwd_pallas, rmsnorm_pallas
+from .ssm_scan import (
+    SSM_SCAN_SPACE,
+    SSM_UPDATE_SPACE,
+    ssm_scan,
+    ssm_scan_bwd,
+    ssm_scan_chunked,
+    ssm_scan_pallas,
+    ssm_update,
+    ssm_update_bwd,
+    ssm_update_pallas,
+)
 from .xent import XENT_SPACE, softmax_xent, softmax_xent_bwd, softmax_xent_bwd_pallas, softmax_xent_pallas

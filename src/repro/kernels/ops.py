@@ -53,6 +53,38 @@ Database-key semantics (what a record must look like to hit):
   ``repro.runtime(bwd_dispatch=False)`` to restore the old reference-VJP
   recompute (fwd-only tuning) while you do.
 
+Arch coverage — which tunables each model family dispatches
+------------------------------------------------------------
+
+Every registered arch family now routes its hot contractions through the
+registry; the planners (``plan_train_jobs`` / ``plan_training_jobs`` /
+``plan_serving_jobs``) emit roster rows for every cell below, so a planned
+campaign can take ANY config to 100% ExactHit, fwd and bwd:
+
+===========  =================================================================
+family       dispatch sites (beyond the shared matmul/rmsnorm/softmax_xent)
+===========  =================================================================
+attention    ``flash_attention`` (+ ``flash_attention_bwd``); QKV/out/FFN
+             projections as ``matmul``
+mamba (SSM)  ``ssm_scan`` chunked selective scan for train/prefill
+             (+ ``ssm_scan_bwd``), ``ssm_update`` fused single-step state
+             update for decode (+ ``ssm_update_bwd``); in/x/dt/out
+             projections as ``matmul`` (dt_proj and out_proj run f32)
+moe          ``expert_gemm`` grouped (experts × capacity × hidden) gemm for
+             all three expert-FFN contractions; backward resolves
+             transposed-operand ``expert_gemm`` keys (dL/dx, dL/dw). The
+             router matmul stays plain jnp (below the tile floor).
+mlstm        q/k/v/in/out projections and the post-cell gemms as ``matmul``;
+             the inner score matmuls carry fused decay masks and are NOT
+             substitutable by plain matmul records (kept in-model)
+slstm        input projection + the three GeGLU MLP gemms as ``matmul``
+===========  =================================================================
+
+Hybrid configs (jamba = attention + mamba + moe, arctic = attention + moe)
+compose rows per segment. SSM jobs key dt/A-conditioned arguments (see
+``campaign.runner.materialize_args``); expert_gemm jobs are not
+batch-sharded (capacity derives from the *global* traced token count).
+
 Semantics are otherwise unchanged: dispatch resolves through the *active*
 runtime, whose default policy reproduces the old precedence exactly —
 stored best variant for (platform, kernel, shape-bucket, dtype), else the
@@ -102,7 +134,12 @@ from . import ref  # noqa: F401  (re-exported: the reference oracles)
 from .attention import flash_attention as _flash_tunable  # noqa: F401
 from .attention import flash_attention_bwd as _flash_bwd_tunable  # noqa: F401
 from .matmul import matmul as _matmul_tunable  # noqa: F401
+from .moe_gemm import expert_gemm as _expert_gemm_tunable  # noqa: F401
 from .rmsnorm import rmsnorm as _rmsnorm_tunable  # noqa: F401
+from .ssm_scan import ssm_scan as _ssm_scan_tunable  # noqa: F401
+from .ssm_scan import ssm_scan_bwd as _ssm_scan_bwd_tunable  # noqa: F401
+from .ssm_scan import ssm_update as _ssm_update_tunable  # noqa: F401
+from .ssm_scan import ssm_update_bwd as _ssm_update_bwd_tunable  # noqa: F401
 from .rmsnorm import rmsnorm_bwd as _rmsnorm_bwd_tunable  # noqa: F401
 from .xent import softmax_xent as _xent_tunable  # noqa: F401
 from .xent import softmax_xent_bwd as _xent_bwd_tunable  # noqa: F401

@@ -66,6 +66,52 @@ def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
     return lse - label_logit
 
 
+def ssm_scan(xc: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+             A: jax.Array, h0: jax.Array):
+    """Sequential S6 selective scan over time (one live state, `lax.scan`).
+
+    xc [b,s,di] (model dtype), dt [b,s,di] fp32 (post-softplus), B/C
+    [b,s,ds] fp32, A [di,ds] fp32 (negative), h0 [b,di,ds] fp32 carry-in.
+    Returns (y [b,s,di] fp32, hN [b,di,ds] fp32).
+    """
+    xf = xc.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                       # [b,di],[b,di],[b,ds]x2
+        dA = jnp.exp(dt_t[..., None] * A)               # [b,di,ds]
+        h = dA * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)       # [b,di]
+        return h, y
+
+    hN, ys = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (xf.swapaxes(0, 1), dt.swapaxes(0, 1), B.swapaxes(0, 1),
+         C.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1), hN
+
+
+def ssm_update(xc: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+               A: jax.Array, h: jax.Array):
+    """One fused decode step of the selective scan.
+
+    xc/dt [b,di], B/C [b,ds], A [di,ds], h [b,di,ds].
+    Returns (y [b,di] fp32, h_new [b,di,ds] fp32).
+    """
+    dA = jnp.exp(dt[..., None] * A)
+    hn = dA * h + (dt * xc.astype(jnp.float32))[..., None] * B[:, None, :]
+    y = jnp.sum(hn * C[:, None, :], axis=-1)
+    return y, hn
+
+
+def expert_gemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped expert GEMM: [e, c, k] @ [e, k, n] -> [e, c, n], fp32 acc."""
+    return jnp.einsum(
+        "eck,ekn->ecn", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Backward oracles — the reference plane of the tuned backward dispatch
 # sites. Each is the VJP of its forward oracle (so fwd/bwd reference pairs
@@ -107,3 +153,19 @@ def softmax_xent_bwd(ct: jax.Array, logits: jax.Array, labels: jax.Array) -> jax
     """
     _, vjp = jax.vjp(lambda ll: softmax_xent(ll, labels), logits)
     return vjp(ct)[0]
+
+
+def ssm_scan_bwd(ct_y: jax.Array, ct_h: jax.Array, xc, dt, B, C, A, h0):
+    """VJP of :func:`ssm_scan`: (d_xc, d_dt, d_B, d_C, d_A, d_h0).
+
+    Cotangents come first — ``ct_y`` for the per-step outputs, ``ct_h`` for
+    the carried-out final state (prefill hands it to decode, so it is live).
+    """
+    _, vjp = jax.vjp(ssm_scan, xc, dt, B, C, A, h0)
+    return vjp((ct_y, ct_h))
+
+
+def ssm_update_bwd(ct_y: jax.Array, ct_h: jax.Array, xc, dt, B, C, A, h):
+    """VJP of :func:`ssm_update`: (d_xc, d_dt, d_B, d_C, d_A, d_h)."""
+    _, vjp = jax.vjp(ssm_update, xc, dt, B, C, A, h)
+    return vjp((ct_y, ct_h))

@@ -23,9 +23,31 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.runtime import dispatch as rt_dispatch
 from .layers import Axes, Params, _init
 
 DispatchMode = str  # "scatter" | "dense"
+
+
+def expert_capacity(n_tokens: int, n_experts: int, top_k: int,
+                    capacity_factor: float) -> int:
+    """Expert buffer depth for the scatter path.
+
+    Derived from the *global* (traced, unsharded) token count so the shape is
+    static under jit. The campaign planner imports this to key expert_gemm
+    tuning jobs on the exact (experts, capacity, hidden) the model will trace.
+    """
+    return int(max(top_k, capacity_factor * n_tokens * top_k / n_experts))
+
+
+def _valid_mask(true_len, b: int, s: int) -> Optional[jax.Array]:
+    """[b, s] bool validity mask from a scalar or per-row ``true_len``."""
+    if true_len is None:
+        return None
+    tl = jnp.asarray(true_len)
+    if tl.ndim == 0:
+        tl = jnp.broadcast_to(tl, (b,))
+    return jnp.arange(s)[None, :] < tl[:, None]
 
 
 def moe_init(
@@ -50,28 +72,48 @@ def moe_init(
 
 
 def _expert_ffn(p: Params, x: jax.Array, ffn_kind: str) -> jax.Array:
-    """x: [e, c, d] -> [e, c, d], grouped over the expert dim."""
+    """x: [e, c, d] -> [e, c, d], grouped over the expert dim.
+
+    All three expert contractions are ``expert_gemm`` dispatch sites keyed on
+    (experts × capacity × hidden) — the tuned runtime resolves them instead
+    of XLA's default grouped-einsum lowering.
+    """
     if "wg" in p:
         act = jax.nn.silu if ffn_kind == "swiglu" else jax.nn.gelu
-        h = act(jnp.einsum("ecd,edf->ecf", x, p["wg"])) * jnp.einsum(
-            "ecd,edf->ecf", x, p["wu"]
+        h = act(rt_dispatch("expert_gemm", x, p["wg"])) * rt_dispatch(
+            "expert_gemm", x, p["wu"]
         )
     else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, p["wu"]))
-    return jnp.einsum("ecf,efd->ecd", h, p["wd"])
+        h = jax.nn.gelu(rt_dispatch("expert_gemm", x, p["wu"]))
+    return rt_dispatch("expert_gemm", h, p["wd"])
 
 
-def _route(router_w, x2, top_k: int):
-    """x2: [n, d] -> (weights [n, k] fp32, ids [n, k] int32, aux_loss)."""
+def _route(router_w, x2, top_k: int, valid: Optional[jax.Array] = None):
+    """x2: [n, d] -> (weights [n, k] fp32, ids [n, k] int32, aux_loss).
+
+    ``valid`` ([n] bool, optional) marks real tokens. Padding tokens get zero
+    combine weight and are excluded from both factors of the load-balancing
+    loss — otherwise pad routing skews ``ce`` toward whatever expert wins on
+    the zero vector and the aux loss changes with batch padding.
+    """
+    # Router projection stays a plain jnp matmul: [n, d] @ [d, e] with e a
+    # handful of experts is far below the tuned-gemm tile floor.
     logits = x2.astype(jnp.float32) @ router_w          # [n, e]
     probs = jax.nn.softmax(logits, axis=-1)
     weights, ids = jax.lax.top_k(probs, top_k)          # [n, k]
     weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
     # Switch-style load-balancing auxiliary loss.
     n, e = probs.shape
-    me = probs.mean(0)                                   # mean prob per expert
     one_hot = jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32)
-    ce = one_hot.mean(0)                                 # fraction routed (top-1)
+    if valid is None:
+        me = probs.mean(0)                               # mean prob per expert
+        ce = one_hot.mean(0)                             # fraction routed (top-1)
+    else:
+        vf = valid.astype(jnp.float32)[:, None]          # [n, 1]
+        denom = jnp.maximum(vf.sum(), 1.0)
+        me = (probs * vf).sum(0) / denom
+        ce = (one_hot * vf).sum(0) / denom
+        weights = weights * vf.astype(weights.dtype)
     aux = e * jnp.sum(me * ce)
     return weights, ids, aux
 
@@ -84,13 +126,24 @@ def moe_apply(
     ffn_kind: str = "swiglu",
     capacity_factor: float = 1.25,
     dispatch: DispatchMode = "scatter",
+    true_len: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (output [b, s, d], aux_loss scalar)."""
+    """Returns (output [b, s, d], aux_loss scalar).
+
+    ``true_len`` (scalar or [b] int, optional): number of real tokens per
+    row. Padding tokens beyond it are excluded from routing — they consume
+    no expert capacity, contribute nothing to the aux loss, and produce zero
+    output. Without the mask, batch-major flattening lets one row's padding
+    claim capacity ahead of a later row's *real* tokens, silently dropping
+    them and corrupting both output and load-balancing gradients.
+    """
     b, s, d = x.shape
     n = b * s
     x2 = x.reshape(n, d)
     e = p["wu"].shape[0]
-    weights, ids, aux = _route(p["router"], x2, top_k)
+    mask = _valid_mask(true_len, b, s)
+    valid = None if mask is None else mask.reshape(n)
+    weights, ids, aux = _route(p["router"], x2, top_k, valid=valid)
 
     if dispatch == "dense":
         # Oracle: every expert sees every token. [e, n, d] compute.
@@ -103,13 +156,21 @@ def moe_apply(
     # --- scatter dispatch --------------------------------------------------
     from ..distributed.sharding import constrain
 
-    cap = int(max(top_k, capacity_factor * n * top_k / e))
+    cap = expert_capacity(n, e, top_k, capacity_factor)
     # position of each (token, slot) within its expert's buffer
     flat_ids = ids.reshape(-1)                             # [n*k]
     onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)  # [n*k, e]
+    if valid is not None:
+        # Padding slots must not advance the running count: a masked token
+        # contributes no occupancy, so real tokens later in the flat order
+        # keep their capacity.
+        flat_valid = jnp.repeat(valid, top_k)              # [n*k]
+        onehot = onehot * flat_valid[:, None].astype(jnp.int32)
     pos_in_e = jnp.cumsum(onehot, axis=0) - 1              # running count
     pos = jnp.take_along_axis(pos_in_e, flat_ids[:, None], axis=1)[:, 0]
     keep = pos < cap                                       # dropped if over capacity
+    if valid is not None:
+        keep = keep & flat_valid
     slot = flat_ids * cap + jnp.where(keep, pos, 0)        # [n*k]
 
     xk = jnp.repeat(x2, top_k, axis=0)                     # [n*k, d]

@@ -5,17 +5,22 @@ All three follow the same deployment contract as attention:
   *_decode(params, x_t, state) -> (y_t, new_state)  # one-token decode
 
 Sequence-parallel forms never materialize [b, s, d_inner, d_state]:
-  * Mamba uses an outer `lax.scan` over length-`chunk` chunks with an inner
-    `associative_scan` — peak live tensor is [b, chunk, d_inner, d_state].
+  * Mamba routes its selective scan through the ``ssm_scan`` dispatch site
+    (Pallas chunked kernel / chunked associative-scan reference — peak live
+    tensor is [b, chunk, d_inner, d_state]) and decode through the fused
+    ``ssm_update`` site; the projection gemms are registry ``matmul``
+    dispatches, so a tuned database serves every hot op of the layer.
   * mLSTM uses the stabilized *chunkwise* form: intra-chunk attention-like
     matmuls under a cumulative-forget decay mask + inter-chunk matrix-memory
-    carry. Peak live tensor is [b, h, chunk, chunk].
+    carry (peak live tensor [b, h, chunk, chunk]); its projection gemms
+    also dispatch registry ``matmul``.
   * sLSTM is inherently sequential (recurrent R matrix): `lax.scan` over
-    time with exp-gating stabilizers.
+    time with exp-gating stabilizers; input/MLP gemms dispatch ``matmul``.
 
-`chunk` is a tunable (VMEM-working-set knob, same role as flash attention's
-block_k). Decode state is O(1) in sequence length — which is why the
-long_500k cells run for xlstm/jamba and are skipped for quadratic archs.
+The scan chunk/block schedule is the kernel tunable's knob now (same role
+as flash attention's block_k). Decode state is O(1) in sequence length —
+which is why the long_500k cells run for xlstm/jamba and are skipped for
+quadratic archs.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.runtime import dispatch
 from .layers import Axes, Params, _init
 
 LOG_EPS = -1e30
@@ -81,63 +87,62 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
 
 
 def _mamba_project(p, x):
-    xz = x @ p["in_proj"]
+    xz = dispatch("matmul", x, p["in_proj"])
     x_in, z = jnp.split(xz, 2, axis=-1)
     return x_in, z
 
 
-def _mamba_coeffs(p, xc):
-    """xc: conv'd, silu'd branch [b, s, di] -> (dA [b,s,di,ds], dBx, C)."""
+def _mamba_dtBC(p, xc):
+    """xc: conv'd, silu'd branch [b, s, di] -> coefficient inputs.
+
+    Returns (dt [b,s,di] fp32 post-softplus, B [b,s,ds] fp32, C [b,s,ds]
+    fp32) — the precomputed per-step coefficients the ``ssm_scan`` /
+    ``ssm_update`` dispatch sites consume.
+    """
     d_state = p["A_log"].shape[1]
     dt_rank = p["x_proj"].shape[1] - 2 * d_state
-    proj = xc @ p["x_proj"]
+    proj = dispatch("matmul", xc, p["x_proj"])
     dt, B, C = jnp.split(proj.astype(jnp.float32), [dt_rank, dt_rank + d_state], axis=-1)
-    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])  # [b,s,di]
-    A = -jnp.exp(p["A_log"])                                    # [di, ds]
-    dA = jnp.exp(dt[..., None] * A)                             # [b,s,di,ds]
-    dBx = (dt * xc.astype(jnp.float32))[..., None] * B[:, :, None, :]
-    return dA, dBx, C
+    dt = jax.nn.softplus(
+        dispatch("matmul", dt, p["dt_proj"].astype(jnp.float32)) + p["dt_bias"]
+    )  # [b,s,di]
+    return dt, B, C
+
+
+def _mamba_out(p, y, xc, z, out_dtype):
+    """Skip term, silu gate, down-projection (fp32 gemm like the original)."""
+    y = y + p["D"] * xc.astype(jnp.float32)
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    return dispatch("matmul", g, p["out_proj"].astype(jnp.float32)).astype(out_dtype)
 
 
 def mamba_forward(p: Params, x: jax.Array, *, chunk: int = 32,
-                  return_state: bool = False):
-    """x: [b, s, d]. Returns y or (y, state) with state=(h, conv_tail)."""
+                  return_state: bool = False, scan_fn=None):
+    """x: [b, s, d]. Returns y or (y, state) with state=(h, conv_tail).
+
+    The scan is the ``ssm_scan`` dispatch site; its chunk/block schedule
+    comes from the tuned runtime, so the ``chunk`` parameter here is inert
+    (kept for call-site compatibility). The model-level ``mamba_chunk``
+    tunable instead passes ``scan_fn`` (same (xc, dt, B, C, A, h0) contract)
+    to pin an explicit chunk schedule for wall-clock measurement.
+    Zero-padded tails inside the kernel are identity steps (dt = 0 =>
+    dA = 1, dBx = 0), so the returned state is exactly h at step s-1 for
+    any sequence length.
+    """
     b, s, d = x.shape
     di = p["conv_b"].shape[0]
     d_state = p["A_log"].shape[1]
     k = p["conv_w"].shape[0]
     x_in, z = _mamba_project(p, x)
     xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
-
-    chunk = min(chunk, s)
-    pad = (-s) % chunk
-    if pad:
-        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
-    else:
-        xc_p = xc
-    sp = xc_p.shape[1]
-    n_chunks = sp // chunk
-    xcs = xc_p.reshape(b, n_chunks, chunk, di).swapaxes(0, 1)  # [nc, b, c, di]
-
-    def chunk_step(h, xc_c):
-        dA, dBx, C = _mamba_coeffs(p, xc_c)                    # [b,c,di,ds]x2, [b,c,ds]
-        # prepend carry as a pseudo-step: h_0 contribution
-        a_all = jnp.concatenate([jnp.ones((b, 1, di, d_state)), dA], axis=1)
-        b_all = jnp.concatenate([h[:, None], dBx], axis=1)
-        def combine(e1, e2):
-            a1, b1 = e1
-            a2, b2 = e2
-            return a2 * a1, a2 * b1 + b2
-        _, hs = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
-        hs = hs[:, 1:]                                          # [b,c,di,ds]
-        y = jnp.einsum("bcds,bcs->bcd", hs, C)
-        return hs[:, -1], y
-
+    dt, B, C = _mamba_dtBC(p, xc)
+    A = -jnp.exp(p["A_log"])                                    # [di, ds]
     h0 = jnp.zeros((b, di, d_state), jnp.float32)
-    hN, ys = jax.lax.scan(chunk_step, h0, xcs)
-    y = ys.swapaxes(0, 1).reshape(b, sp, di)[:, :s]
-    y = y + p["D"] * xc.astype(jnp.float32)
-    out = ((y * jax.nn.silu(z.astype(jnp.float32))) @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    if scan_fn is None:
+        y, hN = dispatch("ssm_scan", xc, dt, B, C, A, h0)
+    else:
+        y, hN = scan_fn(xc, dt, B, C, A, h0)
+    out = _mamba_out(p, y, xc, z, x.dtype)
     if not return_state:
         return out
     # decode needs the last k-1 *pre-conv* inputs
@@ -157,17 +162,18 @@ def mamba_state_spec(batch: int, d: int, dtype, expand: int = 2,
 
 
 def mamba_decode(p: Params, x: jax.Array, state: Dict[str, jax.Array]):
-    """x: [b, 1, d] one token. Returns (y [b,1,d], new_state)."""
-    b = x.shape[0]
-    k = p["conv_w"].shape[0]
+    """x: [b, 1, d] one token. Returns (y [b,1,d], new_state).
+
+    The state update is the fused ``ssm_update`` dispatch site.
+    """
     x_in, z = _mamba_project(p, x)                              # [b,1,di]
     window = jnp.concatenate([state["conv"].astype(x.dtype), x_in], axis=1)  # [b,k,di]
     xc = jax.nn.silu((window * p["conv_w"][None]).sum(axis=1, keepdims=True) + p["conv_b"])
-    dA, dBx, C = _mamba_coeffs(p, xc)                           # [b,1,di,ds]
-    h = dA[:, 0] * state["h"] + dBx[:, 0]
-    y = jnp.einsum("bds,bs->bd", h, C[:, 0])[:, None]
-    y = y + p["D"] * xc.astype(jnp.float32)
-    out = ((y * jax.nn.silu(z.astype(jnp.float32))) @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    dt, B, C = _mamba_dtBC(p, xc)                               # [b,1,...]
+    A = -jnp.exp(p["A_log"])
+    y, h = dispatch("ssm_update", xc[:, 0], dt[:, 0], B[:, 0], C[:, 0], A,
+                    state["h"])
+    out = _mamba_out(p, y[:, None], xc, z, x.dtype)
     return out, {"h": h, "conv": window[:, 1:]}
 
 
@@ -206,11 +212,12 @@ def _mlstm_qkvg(p, x, n_heads):
     b, s, d = x.shape
     di = p["wq"].shape[0]
     hd = di // n_heads
-    xz = x @ p["in_proj"]
+    xz = dispatch("matmul", x, p["in_proj"])
     xb, z = jnp.split(xz, 2, axis=-1)
-    q = (xb @ p["wq"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)  # [b,h,s,hd]
-    kk = (xb @ p["wk"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)
-    v = (xb @ p["wv"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)
+    q = dispatch("matmul", xb, p["wq"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)
+    kk = dispatch("matmul", xb, p["wk"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)
+    v = dispatch("matmul", xb, p["wv"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)
+    # gate projection is tiny ([di, 2h]) — stays a plain jnp matmul
     gates = xb.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
     log_i, f_raw = jnp.split(gates, 2, axis=-1)                   # [b,s,h]
     log_f = jax.nn.log_sigmoid(f_raw)
@@ -280,7 +287,10 @@ def mlstm_forward(p: Params, x: jax.Array, *, n_heads: int, chunk: int = 64,
     # per-head group norm (rms) then gate + down-proj
     hn = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + 1e-6)
     hn = (hn * p["norm_scale"]).astype(jnp.float32)
-    out = ((hn * jax.nn.silu(z.astype(jnp.float32))) @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    out = dispatch(
+        "matmul", hn * jax.nn.silu(z.astype(jnp.float32)),
+        p["out_proj"].astype(jnp.float32),
+    ).astype(x.dtype)
     if not return_state:
         return out
     return out, {"C": CN, "n": nN, "m": mN}
@@ -317,7 +327,10 @@ def mlstm_decode(p: Params, x: jax.Array, state, *, n_heads: int):
     h = h.reshape(b, 1, di)
     hn = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + 1e-6)
     hn = (hn * p["norm_scale"]).astype(jnp.float32)
-    out = ((hn * jax.nn.silu(z.astype(jnp.float32))) @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    out = dispatch(
+        "matmul", hn * jax.nn.silu(z.astype(jnp.float32)),
+        p["out_proj"].astype(jnp.float32),
+    ).astype(x.dtype)
     return out, {"C": C, "n": n, "m": m_new}
 
 
@@ -372,10 +385,16 @@ def _slstm_cell(p, xw, state, n_heads):
     return {"c": c, "n": n, "h": h, "m": m_new}
 
 
+def _slstm_mlp(p: Params, h: jax.Array) -> jax.Array:
+    """Post-cell GeGLU MLP (pf=4/3); all three gemms are dispatch sites."""
+    g = jax.nn.gelu(dispatch("matmul", h, p["up_g"])) * dispatch("matmul", h, p["up_u"])
+    return dispatch("matmul", g, p["down"])
+
+
 def slstm_forward(p: Params, x: jax.Array, *, n_heads: int, unroll: int = 1,
                   return_state: bool = False):
     b, s, d = x.shape
-    xw = (x @ p["w"]).astype(jnp.float32)                       # [b,s,4d]
+    xw = dispatch("matmul", x, p["w"]).astype(jnp.float32)      # [b,s,4d]
     state0 = {
         "c": jnp.zeros((b, d), jnp.float32),
         "n": jnp.zeros((b, d), jnp.float32),
@@ -390,7 +409,7 @@ def slstm_forward(p: Params, x: jax.Array, *, n_heads: int, unroll: int = 1,
     stateN, hs = jax.lax.scan(step, state0, xw.swapaxes(0, 1), unroll=unroll)
     h = hs.swapaxes(0, 1).astype(x.dtype)                       # [b,s,d]
     # post-MLP (GeGLU, pf=4/3)
-    y = (jax.nn.gelu(h @ p["up_g"]) * (h @ p["up_u"])) @ p["down"]
+    y = _slstm_mlp(p, h)
     if not return_state:
         return y
     return y, stateN
@@ -402,8 +421,8 @@ def slstm_state_spec(batch: int, d: int):
 
 def slstm_decode(p: Params, x: jax.Array, state, *, n_heads: int):
     b = x.shape[0]
-    xw = (x[:, 0] @ p["w"]).astype(jnp.float32)
+    xw = dispatch("matmul", x[:, 0], p["w"]).astype(jnp.float32)
     new = _slstm_cell(p, xw, state, n_heads)
     h = new["h"].astype(x.dtype)[:, None]
-    y = (jax.nn.gelu(h @ p["up_g"]) * (h @ p["up_u"])) @ p["down"]
+    y = _slstm_mlp(p, h)
     return y, new

@@ -179,6 +179,7 @@ def layer_apply(p, x, spec: LayerSpec, cfg: ArchConfig, run: RunConfig,
             ym, aux = moe_mod.moe_apply(
                 p["moe"], h2, top_k=cfg.experts_per_token, ffn_kind=cfg.ffn_kind,
                 capacity_factor=cfg.capacity_factor, dispatch=run.moe_dispatch,
+                true_len=true_len,
             )
             y2 = y2 + ym
         if spec.ffn in ("dense", "moe+dense"):

@@ -64,15 +64,26 @@ MAMBA_CHUNK_SPACE = ParamSpace([PowerOfTwoParam("chunk", 4, 512)])
 
 
 def make_mamba_tunable(params):
-    """Binds mamba params (closure) so the tunable signature is (x, *, chunk)."""
+    """Binds mamba params (closure) so the tunable signature is (x, *, chunk).
+
+    ``mamba_forward``'s own chunk arg is inert now that the scan is the
+    ``ssm_scan`` dispatch site, so the knob pins an explicit chunked-scan
+    schedule through the ``scan_fn`` hook — same measurement protocol as
+    before the dispatch rewire.
+    """
+    from ..kernels.ssm_scan import ssm_scan_chunked
 
     def ref_fn(x):
-        return ssm.mamba_forward(params, x, chunk=x.shape[1])
+        return ssm.mamba_forward(
+            params, x,
+            scan_fn=functools.partial(ssm_scan_chunked, chunk=x.shape[1]))
 
     @tunable("mamba_chunk", space=MAMBA_CHUNK_SPACE, reference=ref_fn,
              default={"chunk": 32})
     def mamba_chunked(x, *, chunk: int):
-        return ssm.mamba_forward(params, x, chunk=chunk)
+        return ssm.mamba_forward(
+            params, x,
+            scan_fn=functools.partial(ssm_scan_chunked, chunk=chunk))
 
     return mamba_chunked
 

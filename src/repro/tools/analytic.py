@@ -259,6 +259,32 @@ def site_roofline_seconds(
         # recompute fwd + dq pass (2 gemms) + dkv pass (4 gemms): ~2.5× fwd
         flops = 5.0 * 2.0 * b * h * s * (s / 2.0) * hd
         mem = (3.0 * sum(_prod(x) for x in sh[1:]) + 4.0 * _prod(sh[0])) * dt
+    elif kernel == "expert_gemm" and len(sh) >= 2 and len(sh[0]) == 3:
+        e, c, k = sh[0]                              # grouped matmul roofline
+        n = sh[1][2]
+        flops = 2.0 * e * c * k * n
+        mem = e * (c * k + k * n + c * n) * dt
+    elif kernel in ("ssm_scan", "ssm_scan_bwd"):
+        # Selective scan: per step, one dA/dBx coefficient build + one
+        # state update + one C-contraction over [di, ds] — bandwidth-bound
+        # (state streams through VMEM; ~6 fp32 ops per h element).
+        off = 2 if kernel == "ssm_scan_bwd" else 0   # ct_y, ct_h lead in bwd
+        b, s, di = sh[off]
+        ds_ = sh[off + 2][2]
+        flops = 6.0 * b * s * di * ds_
+        mem = (sum(_prod(x) for x in sh) + 2.0 * _prod(sh[off])) * 4
+        if kernel == "ssm_scan_bwd":                 # fwd recompute + grads
+            flops *= 3.0
+            mem *= 2.0
+    elif kernel in ("ssm_update", "ssm_update_bwd"):
+        off = 2 if kernel == "ssm_update_bwd" else 0
+        b, di = sh[off]
+        ds_ = sh[off + 2][1]
+        flops = 6.0 * b * di * ds_
+        mem = (sum(_prod(x) for x in sh) + _prod(sh[-1])) * 4
+        if kernel == "ssm_update_bwd":
+            flops *= 3.0
+            mem *= 2.0
     else:
         elems = sum(_prod(s) for s in sh)
         flops = 2.0 * elems

@@ -494,3 +494,158 @@ def test_plan_training_jobs_backward_roster():
     fwd_extras = {j.key_extra for j in by_kernel["flash_attention"]}
     bwd_extras = {j.key_extra for j in by_kernel["flash_attention_bwd"]}
     assert fwd_extras == bwd_extras
+
+
+def test_plan_training_jobs_ssm_roster():
+    """Hybrid-SSM archs get selective-scan rows at local shard shapes: the
+    four mamba projection gemm families (dt/out in fp32) plus the ssm_scan
+    and ssm_scan_bwd sites whose batch dim is the per-device shard."""
+    from repro.campaign import plan_training_jobs
+    from repro.campaign.planner import _mamba_dims
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config("jamba_1_5_large").reduced()
+    jobs = plan_training_jobs(cfg, SHAPES["train_smoke"], mesh_axes="2x4")
+    by_kernel = {}
+    for j in jobs:
+        by_kernel.setdefault(j.kernel, []).append(j)
+    assert "ssm_scan" in by_kernel and "ssm_scan_bwd" in by_kernel
+    di, ds, dtr = _mamba_dims(cfg)
+    d = cfg.d_model
+    scan = by_kernel["ssm_scan"][0]
+    b_loc, s = scan.arg_shapes[0][0], scan.arg_shapes[0][1]
+    dp = int(scan.scenarios[0].rsplit("@dp", 1)[1])
+    assert b_loc * dp <= SHAPES["train_smoke"].global_batch
+    assert scan.arg_shapes == (
+        (b_loc, s, di), (b_loc, s, di), (b_loc, s, ds), (b_loc, s, ds),
+        (di, ds), (b_loc, di, ds),
+    )
+    assert scan.arg_dtypes[1:] == ("float32",) * 5
+    # bwd: two output-shaped cotangents lead, then the forward args
+    bwd = by_kernel["ssm_scan_bwd"][0]
+    assert bwd.arg_shapes == ((b_loc, s, di), (b_loc, di, ds)) + scan.arg_shapes
+    assert bwd.arg_dtypes[:2] == ("float32", "float32")
+    # projection gemms: in/x in model dtype, dt/out in fp32 (matching the
+    # model's fp32 dt_proj/out_proj dispatches)
+    f = str(cfg.jdtype)
+    mm = {(j.arg_shapes, j.arg_dtypes) for j in by_kernel["matmul"]}
+    T = [j for j in by_kernel["rmsnorm"]][0].arg_shapes[0][0]
+    assert (((T, d), (d, 2 * di)), (f, f)) in mm
+    assert (((T, di), (di, dtr + 2 * ds)), (f, f)) in mm
+    assert (((T, dtr), (dtr, di)), ("float32", "float32")) in mm
+    assert (((T, di), (di, d)), ("float32", "float32")) in mm
+    # dL/dw transposes exist for the fp32 sites too
+    assert (((dtr, T), (T, di)), ("float32", "float32")) in mm
+
+
+def test_plan_training_jobs_moe_roster():
+    """MoE archs get grouped expert-gemm rows keyed on (experts × capacity ×
+    hidden), capacity from capacity_factor at the global traced token count,
+    with both transposed-operand gradient rows per site."""
+    from repro.campaign import plan_training_jobs
+    from repro.configs import SHAPES, get_config
+    from repro.models.moe import expert_capacity
+
+    cfg = get_config("mixtral_8x7b").reduced()
+    shape = SHAPES["train_smoke"]
+    jobs = plan_training_jobs(cfg, shape, mesh_axes="2x4")
+    eg = [j for j in jobs if j.kernel == "expert_gemm"]
+    assert eg, "MoE roster must include expert_gemm jobs"
+    e, d, ff = cfg.num_experts, cfg.d_model, cfg.d_ff
+    # capacity from the *global* per-microbatch token count (scatter traces
+    # the unsharded shape; expert_gemm args are not batch-sharded)
+    caps = {j.arg_shapes[0][1] for j in eg if j.arg_shapes[0][2] == d}
+    assert len(caps) == 1
+    cap = caps.pop()
+    shapes = {j.arg_shapes for j in eg}
+    # up-gemm fwd + dL/dx + dL/dw
+    assert ((e, cap, d), (e, d, ff)) in shapes
+    assert ((e, cap, ff), (e, ff, d)) in shapes
+    assert ((e, d, cap), (e, cap, ff)) in shapes
+    # down-gemm dL/dw
+    assert ((e, ff, cap), (e, cap, d)) in shapes
+    # consistency with the model's own capacity formula for SOME microbatch
+    # split of the global batch
+    possible = {
+        min(4096, expert_capacity(
+            (shape.global_batch // mb) * shape.seq_len, e,
+            cfg.experts_per_token, cfg.capacity_factor))
+        for mb in (1, 2, 4, 8)
+    }
+    assert cap in possible
+
+
+def test_plan_serving_jobs_ssm_and_moe_buckets():
+    """Serving rosters cover the SSM decode-state site (ssm_update at the
+    slot width, weighted by tokens generated) and per-bucket expert-gemm
+    rows; prefill buckets get batch-1 ssm_scan rows."""
+    from repro.campaign import plan_serving_jobs
+    from repro.campaign.planner import _mamba_dims
+    from repro.configs import get_config
+    from repro.models.moe import expert_capacity
+
+    cfg = get_config("jamba_1_5_large").reduced()
+    jobs = plan_serving_jobs(cfg, max_batch=4, max_seq=64)
+    di, ds, _ = _mamba_dims(cfg)
+    ups = [j for j in jobs if j.kernel == "ssm_update"]
+    assert ups, "decode roster must include the fused state-update site"
+    for j in ups:
+        assert j.arg_shapes == (
+            (4, di), (4, di), (4, ds), (4, ds), (di, ds), (4, di, ds))
+        assert all("serve_decode" in s for s in j.scenarios)
+        assert j.weight >= 1.0
+    scans = [j for j in jobs if j.kernel == "ssm_scan"]
+    assert scans and all(j.arg_shapes[0][0] == 1 for j in scans)
+    assert all("serve_prefill" in s for j in scans for s in j.scenarios)
+    # expert rows exist for both prefill (cap from s) and decode (cap from B)
+    eg_pre = [j for j in jobs if j.kernel == "expert_gemm"
+              and any("serve_prefill" in s for s in j.scenarios)]
+    eg_dec = [j for j in jobs if j.kernel == "expert_gemm"
+              and any("serve_decode" in s for s in j.scenarios)]
+    assert eg_pre and eg_dec
+    e = cfg.num_experts
+    cap_dec = expert_capacity(4, e, cfg.experts_per_token, cfg.capacity_factor)
+    assert any(j.arg_shapes[0][1] == cap_dec for j in eg_dec)
+
+
+def test_campaign_run_rejects_pre_bwd_training_manifest(tmp_path, capsys):
+    """Implicit resume on a manifest planned before the tuned backward plane
+    (training @dp rows, no *_bwd jobs) must fail with a re-plan instruction;
+    --allow-missing-bwd overrides; forward-only serving manifests pass."""
+    from repro.campaign import cli, plan_training_jobs, plan_serving_jobs
+    from repro.campaign.scheduler import (
+        build_manifest, manifest_missing_bwd, CampaignManifest,
+    )
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config("qwen2_0_5b").reduced()
+    fwd_only = tuple(k for k in
+                     ("matmul", "rmsnorm", "flash_attention", "softmax_xent")
+                     )
+    stale_jobs = plan_training_jobs(
+        cfg, SHAPES["train_smoke"], mesh_axes="2x4", kernels=fwd_only)
+    assert stale_jobs and not any(j.kernel.endswith("_bwd") for j in stale_jobs)
+    stale_path = str(tmp_path / "stale.json")
+    m = build_manifest(stale_jobs, 8, path=stale_path)
+    # simulate the pre-backward-plane era: no meta stamp at all
+    m.meta.pop("bwd_roster", None)
+    m.save()
+    assert manifest_missing_bwd(CampaignManifest.load(stale_path))
+    rc = cli.main(["run", "--manifest", stale_path,
+                   "--db", str(tmp_path / "db.json")])
+    assert rc == 2
+    assert "re-plan" in capsys.readouterr().err
+    # fresh plan with the full kernel roster is accepted by the guard
+    fresh = build_manifest(
+        plan_training_jobs(cfg, SHAPES["train_smoke"], mesh_axes="2x4"),
+        8, path=str(tmp_path / "fresh.json"))
+    assert not manifest_missing_bwd(fresh)
+    assert fresh.meta["bwd_roster"] is True
+    # serving manifests are forward-only by design: never flagged
+    serve = build_manifest(
+        plan_serving_jobs(cfg, 2, 32), 8, path=str(tmp_path / "serve.json"))
+    assert not manifest_missing_bwd(serve)
+    # the escape hatch: --allow-missing-bwd proceeds (0 budget -> no work)
+    rc = cli.main(["run", "--manifest", stale_path, "--allow-missing-bwd",
+                   "--db", str(tmp_path / "db.json"), "--max-jobs", "0"])
+    assert rc == 0

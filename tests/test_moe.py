@@ -1,0 +1,142 @@
+"""MoE routing invariants under right-padded (bucketed) inputs.
+
+Regression coverage for the pad-routing bug: ``moe_apply`` used to route
+padding tokens — they consumed expert capacity ahead of later rows' real
+tokens (batched prefill) and skewed the load-balancing aux statistics,
+and ``transformer.layer_apply`` never forwarded ``true_len`` at all.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe
+
+D, FF, E = 8, 16, 2
+
+
+def _params(seed=0):
+    p, _ = moe.moe_init(jax.random.PRNGKey(seed), D, FF, E, jnp.float32)
+    return p
+
+
+def _one_expert_params(seed=0):
+    """Router biased so every all-positive token picks expert 0."""
+    p = _params(seed)
+    bias = jnp.concatenate(
+        [jnp.full((D, 1), 10.0), jnp.full((D, E - 1), -10.0)], axis=1
+    )
+    p["router"] = bias
+    return p
+
+
+def _positive_x(seed, b, s):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, s, D))
+    return jnp.abs(x) + 0.1  # positive entries => positive router logit dot
+
+
+def test_pad_tokens_do_not_consume_capacity():
+    """Batched bucketed prefill: row 0 is short (its tail is padding), row 1
+    is full. Every token routes to expert 0; the real tokens exactly fit
+    capacity — but only if row 0's pads are excluded from the cumsum.
+    Pre-fix, the pads occupy slots ahead of row 1's real tokens and drop
+    them to zero.
+    """
+    p = _one_expert_params()
+    b, s = 2, 8
+    true_len = jnp.array([2, 8], jnp.int32)
+    x = _positive_x(1, b, s)
+    # n*k = 16 -> cap = int(1.25 * 16 / 2) = 10 >= the 10 real tokens.
+    kw = dict(top_k=1, capacity_factor=1.25, true_len=true_len)
+    y_scatter, aux_s = moe.moe_apply(p, x, dispatch="scatter", **kw)
+    y_dense, aux_d = moe.moe_apply(p, x, dispatch="dense", **kw)
+    mask = (jnp.arange(s)[None, :] < true_len[:, None])[..., None]
+    np.testing.assert_allclose(
+        y_scatter * mask, y_dense * mask, rtol=1e-5, atol=1e-5
+    )
+    # No real token may be silently dropped (the pre-fix failure mode zeroes
+    # the tail of row 1).
+    real_norms = jnp.abs(y_scatter * mask).sum(-1)[1]
+    assert bool(jnp.all(real_norms > 0)), real_norms
+    np.testing.assert_allclose(aux_s, aux_d, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dispatch", ["scatter", "dense"])
+def test_real_prefix_output_and_aux_pad_invariant(dispatch):
+    """Bucketed prefill: output for the real prefix and the aux loss must be
+    independent of how much padding the bucket added. Pre-fix the aux
+    statistics (me/ce) averaged over pad tokens too.
+    """
+    p = _params()
+    s_real = 6
+    x_real = _positive_x(2, 1, s_real)
+    got = []
+    for pad in (2, 10):
+        x_pad = jnp.pad(
+            x_real, ((0, 0), (0, pad), (0, 0)), constant_values=0.9
+        )
+        y, aux = moe.moe_apply(
+            p, x_pad, top_k=2, capacity_factor=4.0, dispatch=dispatch,
+            true_len=jnp.int32(s_real),
+        )
+        got.append((y[:, :s_real], aux))
+    np.testing.assert_allclose(got[0][0], got[1][0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got[0][1], got[1][1], rtol=1e-6, atol=1e-7)
+
+
+def test_no_mask_matches_full_length_mask():
+    """true_len=None must behave exactly like true_len == s (back-compat:
+    the training path has no padding)."""
+    p = _params()
+    x = _positive_x(3, 2, 8)
+    kw = dict(top_k=2, capacity_factor=1.25, dispatch="scatter")
+    y0, aux0 = moe.moe_apply(p, x, **kw)
+    y1, aux1 = moe.moe_apply(p, x, true_len=jnp.int32(8), **kw)
+    np.testing.assert_allclose(y0, y1, rtol=0, atol=0)
+    np.testing.assert_allclose(aux0, aux1, rtol=0, atol=0)
+
+
+def test_scatter_matches_dense_with_mask():
+    """Masked scatter dispatch must agree with the dense oracle on real
+    tokens (ample capacity), for top_k in {1, 2}."""
+    p = _params(seed=4)
+    b, s = 2, 12
+    true_len = jnp.array([5, 9], jnp.int32)
+    x = _positive_x(5, b, s)
+    for top_k in (1, 2):
+        kw = dict(top_k=top_k, capacity_factor=8.0, true_len=true_len)
+        y_s, aux_s = moe.moe_apply(p, x, dispatch="scatter", **kw)
+        y_d, aux_d = moe.moe_apply(p, x, dispatch="dense", **kw)
+        mask = (jnp.arange(s)[None, :] < true_len[:, None])[..., None]
+        np.testing.assert_allclose(
+            y_s * mask, y_d * mask, rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(aux_s, aux_d, rtol=1e-6, atol=1e-6)
+
+
+def test_layer_apply_threads_true_len(monkeypatch):
+    """transformer.layer_apply must forward true_len into moe_apply —
+    the wiring half of the pad-routing fix."""
+    from repro.configs import get_config
+    from repro.models import transformer
+
+    cfg = get_config("mixtral_8x7b").reduced()
+    spec = next(
+        s for seg in cfg.segments() for s in seg.pattern if "moe" in s.ffn
+    )
+    rng = jax.random.PRNGKey(0)
+    p, _ = transformer.layer_init(rng, cfg, spec)
+    seen = {}
+    real_apply = moe.moe_apply
+
+    def spy(params, xx, **kw):
+        seen.update(kw)
+        return real_apply(params, xx, **kw)
+
+    monkeypatch.setattr(transformer.moe_mod, "moe_apply", spy)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model), cfg.jdtype)
+    transformer.layer_apply(
+        p, x, spec, cfg, transformer.RunConfig(), "prefill",
+        true_len=jnp.int32(5),
+    )
+    assert "true_len" in seen and seen["true_len"] is not None, seen

@@ -1,0 +1,74 @@
+"""Prefill→decode state-continuity for every recurrent mixer.
+
+``*_forward(x[:, :s], return_state=True)`` followed by ``*_decode`` over the
+remainder must reproduce the full-length forward for *arbitrary* prefix
+length vs chunk size. Regression coverage for the Mamba prefill-state bug:
+the zero-padded chunk tail used to keep stepping the recurrence
+(``dt = softplus(dt_bias) > 0`` on zero input, so ``dA < 1`` decays ``h``
+for the pad steps), corrupting the handed-off state whenever
+``s % chunk != 0``. (Hypothesis-free on purpose — these must run in tier-1
+everywhere; the hypothesis property sweeps live in test_ssm.py.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+
+B, S, D, H = 2, 24, 32, 4
+
+
+def _x(seed=1, s=S):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, s, D)) * 0.5
+
+
+@pytest.mark.parametrize("s_prefix,chunk", [(13, 8), (17, 8), (24, 8), (5, 16)])
+def test_mamba_prefill_state_continuity(s_prefix, chunk):
+    p, _ = ssm.mamba_init(jax.random.PRNGKey(0), D, jnp.float32)
+    x = _x()
+    y_full = ssm.mamba_forward(p, x, chunk=chunk)
+    y_pre, state = ssm.mamba_forward(
+        p, x[:, :s_prefix], chunk=chunk, return_state=True
+    )
+    ys = [y_pre]
+    for t in range(s_prefix, S):
+        yt, state = ssm.mamba_decode(p, x[:, t : t + 1], state)
+        ys.append(yt)
+    np.testing.assert_allclose(
+        jnp.concatenate(ys, 1), y_full, rtol=2e-4, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("s_prefix", [13, 24])
+def test_mlstm_prefill_state_continuity(s_prefix):
+    p, _ = ssm.mlstm_init(jax.random.PRNGKey(0), D, H, jnp.float32)
+    x = _x()
+    y_full = ssm.mlstm_forward(p, x, n_heads=H, chunk=8)
+    y_pre, state = ssm.mlstm_forward(
+        p, x[:, :s_prefix], n_heads=H, chunk=8, return_state=True
+    )
+    ys = [y_pre]
+    for t in range(s_prefix, S):
+        yt, state = ssm.mlstm_decode(p, x[:, t : t + 1], state, n_heads=H)
+        ys.append(yt)
+    np.testing.assert_allclose(
+        jnp.concatenate(ys, 1), y_full, rtol=2e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("s_prefix", [13, 24])
+def test_slstm_prefill_state_continuity(s_prefix):
+    p, _ = ssm.slstm_init(jax.random.PRNGKey(0), D, H, jnp.float32)
+    x = _x()
+    y_full = ssm.slstm_forward(p, x, n_heads=H)
+    y_pre, state = ssm.slstm_forward(
+        p, x[:, :s_prefix], n_heads=H, return_state=True
+    )
+    ys = [y_pre]
+    for t in range(s_prefix, S):
+        yt, state = ssm.slstm_decode(p, x[:, t : t + 1], state, n_heads=H)
+        ys.append(yt)
+    np.testing.assert_allclose(
+        jnp.concatenate(ys, 1), y_full, rtol=2e-4, atol=2e-5
+    )

@@ -18,10 +18,17 @@ PR is about:
 
 If the planner's site roster ever drifts from the model's dispatch sites
 (forward or gradient), step 4 fails with the offending keys.
+
+Parametrized over one arch per dispatch plane: dense attention
+(qwen2_0_5b), hybrid SSM + MoE (jamba_1_5_large — ssm_scan fwd+bwd rows),
+and pure MoE (mixtral_8x7b — grouped expert_gemm fwd + transposed-operand
+gradients).
 """
 import json
 import subprocess
 import sys
+
+import pytest
 
 _ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"}
 
@@ -45,7 +52,7 @@ from repro.optim import adamw
 from repro.train.trainer import Trainer, TrainerConfig
 
 tmp = tempfile.mkdtemp()
-cfg = get_config("qwen2_0_5b").reduced()
+cfg = get_config("__ARCH__").reduced()
 shape = SHAPES["train_smoke"]
 run = defaults.default_run(cfg, shape)
 layout = defaults.default_layout(cfg)
@@ -89,9 +96,20 @@ print("RESULT_JSON=" + json.dumps({
 """
 
 
-def test_campaign_tuned_training_is_all_exact_hits():
+# per-arch kernel families the step must resolve (fwd plane assertion);
+# matmul gradients reuse the matmul tunable so they never appear separately
+_ARCH_KERNELS = {
+    "qwen2_0_5b": {"flash_attention", "flash_attention_bwd"},
+    "jamba_1_5_large": {"flash_attention", "flash_attention_bwd",
+                        "ssm_scan", "ssm_scan_bwd", "expert_gemm"},
+    "mixtral_8x7b": {"flash_attention", "flash_attention_bwd", "expert_gemm"},
+}
+
+
+@pytest.mark.parametrize("arch", sorted(_ARCH_KERNELS))
+def test_campaign_tuned_training_is_all_exact_hits(arch):
     r = subprocess.run(
-        [sys.executable, "-c", _E2E],
+        [sys.executable, "-c", _E2E.replace("__ARCH__", arch)],
         capture_output=True, text=True, timeout=560, env=dict(_ENV), cwd=".",
     )
     line = next(
@@ -136,11 +154,14 @@ def test_campaign_tuned_training_is_all_exact_hits():
     # kernel coverage: every tunable family the step can exercise, forward
     # and backward (matmul gradients reuse the matmul tunable)
     kernels = {k.split("|")[0] for k in snap["by_key"]}
-    assert {"matmul", "rmsnorm", "softmax_xent", "flash_attention",
-            "rmsnorm_bwd", "softmax_xent_bwd",
-            "flash_attention_bwd"} <= kernels
+    assert {"matmul", "rmsnorm", "softmax_xent",
+            "rmsnorm_bwd", "softmax_xent_bwd"} | _ARCH_KERNELS[arch] <= kernels
     bwd_kernels = {k.split("|")[0] for k in snap["by_key_phase"]["bwd"]}
     assert "matmul" in bwd_kernels          # transposed-operand gradient gemms
+    if "ssm_scan" in _ARCH_KERNELS[arch]:
+        assert "ssm_scan_bwd" in bwd_kernels
+    if "expert_gemm" in _ARCH_KERNELS[arch]:
+        assert "expert_gemm" in bwd_kernels  # transposed grouped-gemm grads
 
     # second step re-used the warm resolution cache
     assert snap["cache_hits"] > 0
