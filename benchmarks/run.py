@@ -21,6 +21,9 @@ Emits ``name,us_per_call,derived`` CSV rows (derived = %speedup or context).
                  the sequential lax.scan reference oracle
   moe.*        — grouped expert-gemm dispatch vs the per-expert einsum
                  reference (the three ``ecd,edf`` contractions it replaced)
+  analysis.*   — static legality pruning: configs the abstract grid-model
+                 checker removes from each kernel's space on a tpu-v5e
+                 fingerprint before any measurement is spent
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -203,6 +206,18 @@ def main() -> None:
         "moe.expert_gemm.dispatch", t_eg * 1e6,
         f"{(t_eg_ref / t_eg - 1) * 100:+.0f}% vs einsum",
     ))
+
+    # --- static analysis: legality pruning per kernel config space ---------
+    from repro.core.gridmodel import registered_models, space_report
+    from repro.core.runtime import ensure_registered
+
+    ensure_registered()
+    for kernel in sorted(registered_models()):
+        rep = space_report(kernel, "tpu-v5e")
+        rows.append((
+            f"analysis.{kernel}.pruned", float(rep["illegal"]),
+            f"{rep['legal']} of {rep['total']} legal on tpu-v5e",
+        ))
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

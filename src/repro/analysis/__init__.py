@@ -1,0 +1,22 @@
+"""repro.analysis — static analysis over the autotuning contract.
+
+Three passes, no compilation:
+
+1. **lint** — dispatch-completeness: raw compute in model code
+   (``jnp.einsum``/``@``/``jax.nn.softmax``/``lax.scan``) must route through
+   a registry tunable or carry a ``# repro: allow-raw(<reason>)`` pragma.
+2. **legality** — every Pallas grid model abstractly evaluated over its full
+   config space × platform fingerprint: lane/sublane alignment, index-map
+   bounds, write-write races (``repro.core.gridmodel``).
+3. **contracts** — registry/planner/database coherence: backward plans
+   dispatch registered tunables with oracles, ``DEFAULT_KERNELS`` is
+   registry-covered, databases/manifests carry no stale or unreachable keys.
+
+CLI: ``python -m repro.analysis check [--strict] [--db ...] [--manifest ...]``
+(also exposed as ``python -m repro.campaign check`` for the db/manifest
+subset operators run against live campaigns).
+"""
+from .findings import Finding, Report
+from .cli import main, run_checks
+
+__all__ = ["Finding", "Report", "main", "run_checks"]

@@ -1,0 +1,106 @@
+"""``python -m repro.analysis check`` — run the static-analysis passes.
+
+    check   lint model code for unrouted raw compute (pass 1), abstractly
+            verify every Pallas grid model over its full config space on
+            TPU fingerprints (pass 2), and cross-check registry/planner
+            contracts (pass 3); optionally audit a tuning database and
+            campaign manifest (--db/--manifest, the `campaign check` body).
+
+Exit code: 1 when any error finding is present; ``--strict`` also fails on
+warnings (the CI leg runs strict). ``--json`` emits the machine-readable
+report for tooling.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from .findings import Report
+
+PASSES = ("lint", "legality", "contracts", "db")
+
+
+def run_checks(
+    models_dir: Optional[str] = None,
+    platforms: Optional[List[str]] = None,
+    db: Optional[str] = None,
+    manifest: Optional[str] = None,
+    passes: Optional[List[str]] = None,
+) -> Report:
+    """Programmatic entry point (also the `campaign check` backend)."""
+    from . import contracts, db_check, legality, lint
+
+    passes = list(passes or PASSES)
+    report = Report()
+    if "lint" in passes:
+        lint.lint_paths([models_dir or lint.default_models_dir()], report)
+    if "legality" in passes:
+        legality.check_legality(
+            platforms or list(legality.DEFAULT_PLATFORMS), report
+        )
+    if "contracts" in passes:
+        contracts.check_contracts(report)
+    if "db" in passes and db:
+        db_check.check_db(db, manifest_path=manifest, report=report)
+    return report
+
+
+def cmd_check(args) -> int:
+    passes = [p for p in args.passes.split(",") if p]
+    unknown = set(passes) - set(PASSES)
+    if unknown:
+        print(f"error: unknown pass(es) {sorted(unknown)}; "
+              f"choose from {list(PASSES)}", file=sys.stderr)
+        return 2
+    report = run_checks(
+        models_dir=args.models_dir,
+        platforms=[p for p in args.platforms.split(",") if p],
+        db=args.db,
+        manifest=args.manifest,
+        passes=passes,
+    )
+    if args.json:
+        print(report.dumps())
+    else:
+        print(report.format(verbose=args.verbose))
+    return report.exit_code(strict=args.strict)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    pc = sub.add_parser("check", help="run the static-analysis passes")
+    pc.add_argument("--models-dir", default=None,
+                    help="directory to lint (default: src/repro/models)")
+    pc.add_argument("--platforms", default="tpu-v5e,tpu-v4",
+                    help="comma-separated platform fingerprints for the "
+                         "legality pass")
+    pc.add_argument("--db", default=None,
+                    help="tuning database to audit (enables the db pass)")
+    pc.add_argument("--manifest", default=None,
+                    help="campaign manifest to cross-check against --db")
+    pc.add_argument("--passes", default=",".join(PASSES),
+                    help="comma-separated subset of passes to run")
+    pc.add_argument("--strict", action="store_true",
+                    help="exit 1 on warnings too (the CI gate)")
+    pc.add_argument("--json", action="store_true",
+                    help="emit the machine-readable report")
+    pc.add_argument("--verbose", "-v", action="store_true",
+                    help="also print info findings (allowed sites, pruning)")
+    pc.set_defaults(fn=cmd_check)
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

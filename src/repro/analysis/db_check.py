@@ -1,0 +1,187 @@
+"""Database + manifest contract checks (``campaign check`` backend).
+
+Loads the tuning database as *raw JSON* on purpose: ``TuningDatabase.load``
+silently drops wrong-schema blobs (correct for the runtime — stale records
+must not be served), but an operator running ``check`` wants the finding,
+not a silent fresh start. Checks:
+
+* schema version drift (pre-current databases) — warn;
+* record keys naming a platform fingerprint that is neither a known profile
+  nor the detected one — warn (a db tuned elsewhere, or a typo'd export);
+* stale pre-promoted-dtype keys: an integer-dtype key for a tunable whose
+  example call promotes to float (softmax_xent keyed on its int32 labels,
+  before keys switched to the promoted dtype) — error, the runtime will
+  never hit it;
+* records whose stored config is no longer valid in the tunable's current
+  space — warn (the space evolved; dispatch would fall through this record);
+* manifest: the pre-backward-plane hazard (``@dp`` training scenarios, no
+  ``*_bwd`` roster) — error, mirroring ``campaign run``'s refusal;
+* expert_gemm capacity drift: db records whose bucketed capacity dim no
+  longer matches any capacity the manifest's expert_gemm jobs expect —
+  warn, deduplicated through ``obs.warn_once`` so drift also lands in the
+  event buffer operators already watch.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Sequence
+
+from .findings import Report
+
+
+def _load_raw_db(path: str) -> Optional[Dict[str, Any]]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _example_promotes_float(tunable) -> Optional[bool]:
+    """True when the tunable's example call computes in a float dtype."""
+    spec = tunable.dispatch
+    if spec is None or getattr(spec, "example", None) is None:
+        return None
+    try:
+        args, _kwargs = spec.example()
+        from ..core.tuner import promoted_dtype
+
+        dtypes = [a.dtype for a in args if hasattr(a, "dtype")]
+        return promoted_dtype(dtypes).startswith(("float", "bfloat", "f"))
+    except Exception:                                 # pragma: no cover
+        return None
+
+
+def check_db(
+    db_path: str,
+    manifest_path: Optional[str] = None,
+    report: Optional[Report] = None,
+) -> Report:
+    report = report if report is not None else Report()
+    from ..core.annotate import registered
+    from ..core.database import SCHEMA_VERSION, shape_bucket, split_key
+    from ..core.platform import PROFILES, detect_platform
+    from ..core.runtime import ensure_registered
+
+    ensure_registered()
+    regs = registered()
+    known_platforms = set(PROFILES) | {detect_platform().name}
+
+    blob = _load_raw_db(db_path)
+    if blob is None:
+        report.add("db", "info", db_path, "no tuning database at this path")
+        report.stats["db"] = {"records": 0}
+        return report
+
+    schema = blob.get("schema", 0)
+    if schema != SCHEMA_VERSION:
+        report.add(
+            "db", "warn", db_path,
+            f"schema {schema} != current {SCHEMA_VERSION}: the runtime "
+            "ignores every record in this file (re-run the campaign)",
+        )
+    records: Dict[str, Any] = blob.get("records", {})
+    report.stats["db"] = {"records": len(records), "schema": schema}
+
+    seen_platforms = set()
+    float_example_cache: Dict[str, Optional[bool]] = {}
+    for key, rec in sorted(records.items()):
+        kernel, platform, shapes, dtype, _extra = split_key(key)
+        if platform not in known_platforms and platform not in seen_platforms:
+            seen_platforms.add(platform)
+            report.add(
+                "db", "warn", key,
+                f"unknown platform fingerprint {platform!r} (known: "
+                f"{sorted(known_platforms)}) — foreign export or typo",
+            )
+        t = regs.get(kernel)
+        if t is None:
+            report.add(
+                "db", "warn", key,
+                f"record for unregistered tunable {kernel!r}: dead weight, "
+                "nothing will ever look it up",
+            )
+            continue
+        if dtype.startswith(("int", "uint")):
+            if kernel not in float_example_cache:
+                float_example_cache[kernel] = _example_promotes_float(t)
+            if float_example_cache[kernel]:
+                report.add(
+                    "db", "error", key,
+                    f"stale integer-dtype key ({dtype}) for a float-computing "
+                    "kernel — recorded before keys used the promoted dtype; "
+                    "the runtime will never hit it (re-tune rebuilds it)",
+                )
+        cfg = (rec or {}).get("config")
+        if cfg is not None and not t.space.is_valid(cfg):
+            why = t.space.why_invalid(cfg)
+            report.add(
+                "db", "warn", key,
+                f"stored config is no longer valid in {kernel}'s space "
+                f"({why}); dispatch falls through this record",
+            )
+
+    if manifest_path:
+        _check_manifest(manifest_path, records, report)
+    else:
+        report.add(
+            "db", "info", db_path,
+            "no manifest given: capacity-drift and backward-roster checks "
+            "skipped (pass --manifest)",
+        )
+    return report
+
+
+def _check_manifest(
+    manifest_path: str, records: Dict[str, Any], report: Report
+) -> None:
+    from ..campaign import scheduler
+    from ..core.database import split_key
+
+    if not os.path.exists(manifest_path):
+        report.add("db", "warn", manifest_path, "manifest path does not exist")
+        return
+    manifest = scheduler.CampaignManifest.load(manifest_path)
+    if scheduler.manifest_missing_bwd(manifest):
+        report.add(
+            "db", "error", manifest_path,
+            "manifest has sharding-aware training jobs (@dp scenarios) but "
+            "no backward roster — it predates the tuned backward plane; "
+            "re-plan before running",
+        )
+    # Expert-capacity drift: the MoE x operand is (experts, capacity, d) —
+    # its bucketed middle dim is the capacity the records were tuned at. If
+    # the plan's expert_gemm jobs (derived from today's arch configs via
+    # expert_capacity()) expect a different bucket set, the banked records
+    # will never ExactHit under the new routing.
+    expected = {
+        s[1]
+        for j in manifest.jobs
+        if j.kernel == "expert_gemm"
+        for s in (j.bucketed_shapes()[:1] or ())
+        if len(s) == 3
+    }
+    if not expected:
+        return
+    from ..obs.collect import warn_once
+
+    for key in sorted(records):
+        kernel, platform, shapes, _dtype, _extra = split_key(key)
+        if kernel != "expert_gemm" or not shapes or len(shapes[0]) != 3:
+            continue
+        capacity = shapes[0][1]
+        if capacity not in expected:
+            warn_once(
+                "analysis.expert_gemm_capacity",
+                key=key,
+                detail=(
+                    f"record capacity bucket {capacity} not among the plan's "
+                    f"expected buckets {sorted(expected)}"
+                ),
+            )
+            report.add(
+                "db", "warn", key,
+                f"expert_gemm capacity bucket {capacity} no longer matches "
+                f"the plan's expert_capacity() buckets {sorted(expected)} — "
+                "routing changed; this record is unreachable",
+            )

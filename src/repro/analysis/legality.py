@@ -1,0 +1,75 @@
+"""Pass 2 — Pallas kernel legality over full config spaces.
+
+Abstractly evaluates every registered grid model (``repro.core.gridmodel``)
+over its tunable's complete config space on each requested platform
+fingerprint, without compiling anything:
+
+* **race** or **oob** findings are errors — a shipped kernel whose output
+  refs alias along a parallel grid axis, or whose index map walks off the
+  padded array, is wrong on *some* platform even if today's interpreter
+  runs happen to pass.
+* a space with **zero** legal configs is an error — the tuner would find
+  no valid variant on that platform.
+* alignment-only pruning is ``info`` accounting: those configs exist for
+  CPU-interpret coverage and are statically skipped on TPU (the tuner's
+  pre-pass and ``ParamSpace.legal_configs`` consume the same verdicts).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from .findings import Report
+
+DEFAULT_PLATFORMS = ("tpu-v5e", "tpu-v4")
+
+
+def check_legality(
+    platforms: Sequence[str] = DEFAULT_PLATFORMS,
+    report: Optional[Report] = None,
+) -> Report:
+    report = report if report is not None else Report()
+    from ..core.gridmodel import registered_models, space_report
+    from ..core.runtime import ensure_registered
+
+    ensure_registered()
+    stats = {}
+    for kernel in sorted(registered_models()):
+        for platform in platforms:
+            r = space_report(kernel, platform)
+            loc = f"{kernel}@{platform}"
+            stats[loc] = {
+                "total": r["total"], "legal": r["legal"], "illegal": r["illegal"],
+            }
+            by_cat = r.get("by_category", {})
+            for cat in ("race", "oob"):
+                n = by_cat.get(cat, 0)
+                if n:
+                    sample = next(
+                        (s for s in r.get("reasons", ()) if s.startswith(cat)),
+                        "",
+                    )
+                    report.add(
+                        "legality", "error", loc,
+                        f"{n} config(s) with a {cat} hazard — e.g. {sample}"
+                        if sample else f"{n} config(s) with a {cat} hazard",
+                    )
+            if r["legal"] == 0:
+                report.add(
+                    "legality", "error", loc,
+                    f"no legal configs (all {r['total']} pruned): the tuner "
+                    "would find no valid variant on this platform",
+                )
+            elif r["illegal"]:
+                report.add(
+                    "legality", "info", loc,
+                    f"{r['illegal']} of {r['total']} configs statically "
+                    f"pruned ({r['legal']} legal)",
+                )
+            if r.get("redundant"):
+                report.add(
+                    "legality", "info", loc,
+                    f"{r['redundant']} legal config(s) are grid-signature "
+                    "duplicates at nominal shapes (measurement redundancy)",
+                )
+    report.stats["legality"] = stats
+    return report

@@ -3,6 +3,8 @@
     plan    derive + schedule jobs, write the resumable manifest
     run     execute pending jobs best-first (interrupt-safe; rerun resumes)
     status  show the manifest's progress and banked speedups
+    check   validate the tuning db + manifest (stale keys, missing bwd
+            roster, capacity drift) via the repro.analysis passes
     export  write the shippable per-platform database (records + cover sets)
     drift   re-measure tuned sites and rank regressions vs db + roofline
 
@@ -151,6 +153,13 @@ def cmd_drift(args) -> int:
 def cmd_status(args) -> int:
     manifest = scheduler.CampaignManifest.load(args.manifest)
     print(json.dumps(manifest.summary(), indent=1, sort_keys=True))
+    # Static-legality accounting stamped at plan time: configs the tuner
+    # prunes before measurement, so budgets are read against *legal* spaces.
+    for kernel, counts in sorted((manifest.meta.get("legality") or {}).items()):
+        if counts.get("pruned"):
+            print(f"  legality: {kernel}: pruned {counts['pruned']} of "
+                  f"{counts['total']} configs ({counts['legal']} legal) "
+                  f"on {manifest.platform}")
     for j in manifest.jobs:
         line = _fmt_job(j, manifest.platform)
         if j.status == "done" and j.best_objective > 0:
@@ -172,6 +181,22 @@ def cmd_status(args) -> int:
     for path in args.telemetry or ():
         print(runner.format_telemetry(runner.load_telemetry(path), path))
     return 0
+
+
+def cmd_check(args) -> int:
+    """Validate db + manifest through the repro.analysis contract passes."""
+    from ..analysis import run_checks
+
+    passes = ["contracts", "db"]
+    if args.full:
+        passes = ["lint", "legality"] + passes
+    report = run_checks(
+        db=_db_path(args),
+        manifest=args.manifest,
+        passes=passes,
+    )
+    print(report.format(verbose=args.verbose))
+    return report.exit_code(strict=args.strict)
 
 
 def cmd_export(args) -> int:
@@ -267,6 +292,24 @@ def build_parser() -> argparse.ArgumentParser:
                          "serve --telemetry-out); repeatable — prints per-tier "
                          "hit rates and per-kernel exact-hit shares")
     ps.set_defaults(fn=cmd_status)
+
+    pk = sub.add_parser(
+        "check",
+        help="validate the tuning db + manifest (stale keys, missing "
+             "backward roster, expert-capacity drift)",
+    )
+    pk.add_argument("--db", default=None)
+    pk.add_argument("--manifest", default=None,
+                    help="campaign manifest to cross-check (enables the "
+                         "backward-roster and capacity-drift checks)")
+    pk.add_argument("--full", action="store_true",
+                    help="also run the lint + kernel-legality passes "
+                         "(python -m repro.analysis check runs everything)")
+    pk.add_argument("--strict", action="store_true",
+                    help="exit 1 on warnings too")
+    pk.add_argument("--verbose", "-v", action="store_true",
+                    help="also print info findings")
+    pk.set_defaults(fn=cmd_check)
 
     pe = sub.add_parser("export", help="write the per-platform database artifact")
     pe.add_argument("--db", default=None)

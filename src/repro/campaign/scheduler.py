@@ -216,6 +216,7 @@ class CampaignManifest:
             for j in done
             if j.best_objective > 0 and j.default_objective > 0
         ]
+        legality = self.meta.get("legality") or {}
         return {
             "platform": self.platform,
             "jobs": len(self.jobs),
@@ -224,7 +225,37 @@ class CampaignManifest:
             "total_budget": self.total_budget,
             "mean_speedup": (sum(speedups) / len(speedups)) if speedups else 0.0,
             "seeded_jobs": sum(1 for j in done if j.seeded),
+            "configs_pruned": sum(v.get("pruned", 0) for v in legality.values()),
         }
+
+
+def plan_legality(
+    jobs: Sequence[TuningJob], profile: Optional[HardwareProfile] = None
+) -> Dict[str, Dict[str, int]]:
+    """Per-kernel static-legality counts for the plan's config spaces.
+
+    For every distinct kernel in the plan that declares an abstract grid
+    model (:mod:`repro.core.gridmodel`), count how many of its space's
+    configs are statically illegal on this platform — those never reach
+    compile+run (the tuner's pre-pass prunes them), so the budget the
+    scheduler allocates is effectively spread over ``legal`` configs only.
+    ``campaign status`` surfaces these counts.
+    """
+    from ..core.gridmodel import registered_models, space_report
+
+    profile = profile or detect_platform()
+    models = registered_models()
+    out: Dict[str, Dict[str, int]] = {}
+    for kernel in sorted({j.kernel for j in jobs}):
+        if kernel not in models:
+            continue
+        r = space_report(kernel, profile)
+        out[kernel] = {
+            "total": r["total"],
+            "legal": r["legal"],
+            "pruned": r["illegal"],
+        }
+    return out
 
 
 def manifest_missing_bwd(manifest: CampaignManifest) -> bool:
@@ -270,5 +301,11 @@ def build_manifest(
     # Stamp whether this plan carries the tuned backward roster, so resume
     # can tell a deliberately forward-only plan from a stale pre-bwd one.
     m.meta["bwd_roster"] = any(j.kernel.endswith("_bwd") for j in scheduled)
+    # Stamp per-kernel static-legality counts (configs the tuner will prune
+    # before measurement), so `campaign status` can report them offline.
+    try:
+        m.meta["legality"] = plan_legality(scheduled, profile)
+    except Exception:                                 # pragma: no cover
+        pass                          # legality stamping must never block a plan
     m.save()
     return m

@@ -24,6 +24,16 @@ from .params import (
     PowerOfTwoParam,
 )
 from .annotate import DispatchSpec, Tunable, get_tunable, registered, tunable
+from .gridmodel import (
+    GridModel,
+    RefModel,
+    config_verdict,
+    register_grid_model,
+    registered_models,
+    space_illegal,
+    space_report,
+    sublanes_for,
+)
 from .database import (
     Record,
     TuningDatabase,

@@ -230,6 +230,39 @@ class ParamSpace:
             return cfg
         raise RuntimeError("search space is empty")
 
+    def legal_configs(
+        self,
+        platform: Any = None,
+        shapes: Optional[Sequence[Tuple[int, ...]]] = None,
+    ) -> List[Config]:
+        """Valid configs that are also *statically legal* on ``platform``.
+
+        Constraints (above) encode what the search space's author knew;
+        legality is derived from the kernels' abstract grid models
+        (:mod:`repro.core.gridmodel`): TPU lane/sublane alignment, index-map
+        bounds, and write-write race freedom, evaluated at ``shapes`` (or
+        each kernel's nominal shapes). A space shared by several kernels
+        (e.g. rmsnorm fwd + bwd) keeps a config only if it is legal under
+        *every* linked kernel — the campaign scheduler prunes with this
+        before spending measurement budget. Spaces with no Pallas grid
+        model behind them (model-level chunk knobs, jnp-only backward
+        spaces) are returned in full.
+        """
+        kernels = getattr(self, "_grid_kernels", ())
+        if not kernels:
+            return list(self.enumerate())
+        from .gridmodel import config_verdict, resolve_profile
+
+        profile = resolve_profile(platform)
+        out: List[Config] = []
+        for cfg in self.enumerate():
+            if all(
+                config_verdict(k, cfg, profile, shapes) is None
+                for k in kernels
+            ):
+                out.append(cfg)
+        return out
+
     def __repr__(self) -> str:
         ps = ", ".join(f"{p.name}[{p.cardinality}]" for p in self.params)
         return f"ParamSpace({ps}; |product|={self.cardinality})"

@@ -26,7 +26,7 @@ import jax
 from .annotate import Tunable
 from .database import Record, TuningDatabase, default_db, make_key, now
 from .evaluate import Evaluator, WallClockEvaluator
-from .params import Config
+from .params import Config, ParamSpace
 from .platform import detect_platform
 from .search import SearchAlgorithm, SearchResult, Trial, CoordinateDescent
 from .search.base import INVALID
@@ -176,8 +176,34 @@ def autotune(
         reference = jax.jit(tunable.reference)(*args)
         jax.block_until_ready(reference)
 
+    # Static legality pre-pass: configs whose abstract grid model is
+    # infeasible on this platform (lane misalignment, OOB index map, racy
+    # output ref) never reach compile+run — the Petrovič et al. 2019
+    # "filter before measurement" step. Fail-open: a model-building error
+    # must never block tuning, only skip the pruning.
+    illegal: Dict[str, str] = {}
+    try:
+        from .gridmodel import space_illegal
+
+        shapes = tuple(
+            tuple(a.shape) for a in args if hasattr(a, "shape")
+        )
+        for ck, (cat, reason) in space_illegal(
+            tunable.name, platform, shapes or None
+        ).items():
+            illegal[ck] = f"{cat}: {reason}"
+    except Exception:                                 # pragma: no cover
+        log.debug("legality pre-pass failed for %s", tunable.name, exc_info=True)
+
     # 2-4. Search with compile+run+gate per proposed config.
     def objective(config: Config) -> Trial:
+        pruned = illegal.get(ParamSpace.config_key(config))
+        if pruned is not None:
+            log.debug("variant %s statically pruned: %s", config, pruned)
+            return Trial(
+                config=config, objective=INVALID, ok=False,
+                meta={"pruned": pruned},
+            )
         variant = tunable.variant(**config)
         m = evaluator.evaluate(variant, args, reference=reference)
         if not m.ok:

@@ -617,3 +617,110 @@ def flash_attention_bwd(
         ct, q, k, v, block_q=block_q, block_k=block_k,
         causal=causal, window=window, scale=scale, interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Abstract grid models (static legality; see core/gridmodel.py). The
+# forward asserts block divisibility instead of padding, so the builders
+# return None (= kernel rejects the shapes) when s_q/s_k don't divide. The
+# backward realizes THREE pallas_calls — (o, lse) recompute, dq, dk/dv —
+# one model each; both tunables share ATTENTION_SPACE, so a config must be
+# legal under all four models.
+# ---------------------------------------------------------------------------
+from ..core.gridmodel import GridModel, RefModel, register_grid_model
+
+
+def _flash_grid_model(config, shapes=None):
+    if shapes is None:
+        shapes = ((2, 4, 4096, 128), (2, 2, 4096, 128), (2, 2, 4096, 128))
+    b, h, s_q, d = shapes[0]
+    kv, s_k = shapes[1][1], shapes[1][2]
+    if h % kv:
+        return None
+    group = h // kv
+    bq = min(config["block_q"], s_q)
+    bk = min(config["block_k"], s_k)
+    if s_q % bq or s_k % bk:
+        return None
+    grid = (b * h, s_q // bq, s_k // bk)
+    qmap = lambda bh, qi, ki: (bh, qi, 0)
+    kvmap = lambda bh, qi, ki: ((bh // h) * kv + (bh % h) // group, ki, 0)
+    return GridModel(
+        "flash_attention", grid, ("parallel", "parallel", "arbitrary"),
+        (
+            RefModel("q", (1, bq, d), qmap, (b * h, s_q, d)),
+            RefModel("k", (1, bk, d), kvmap, (b * kv, s_k, d)),
+            RefModel("v", (1, bk, d), kvmap, (b * kv, s_k, d)),
+            RefModel("out", (1, bq, d), qmap, (b * h, s_q, d), role="out"),
+        ),
+    )
+
+
+def _flash_bwd_grid_model(config, shapes=None):
+    if shapes is None:
+        shapes = ((2, 4, 4096, 128), (2, 4, 4096, 128),
+                  (2, 2, 4096, 128), (2, 2, 4096, 128))
+    b, h, s_q, d = shapes[1]
+    kv, s_k = shapes[2][1], shapes[2][2]
+    if h % kv:
+        return None
+    group = h // kv
+    bq = min(config["block_q"], s_q)
+    bk = min(config["block_k"], s_k)
+    if s_q % bq or s_k % bk:
+        return None
+    q_steps, k_steps = s_q // bq, s_k // bk
+    qmap = lambda bh, qi, ki: (bh, qi, 0)
+    lmap = lambda bh, qi, ki: (bh, qi)
+    kvmap = lambda bh, qi, ki: ((bh // h) * kv + (bh % h) // group, ki, 0)
+    q_dims, kv_dims = (b * h, s_q, d), (b * kv, s_k, d)
+    fwd_lse = GridModel(
+        "flash_attention_bwd", (b * h, q_steps, k_steps),
+        ("parallel", "parallel", "arbitrary"),
+        (
+            RefModel("q", (1, bq, d), qmap, q_dims),
+            RefModel("k", (1, bk, d), kvmap, kv_dims),
+            RefModel("v", (1, bk, d), kvmap, kv_dims),
+            RefModel("o", (1, bq, d), qmap, q_dims, role="out"),
+            RefModel("lse", (1, bq), lmap, (b * h, s_q), role="out"),
+        ),
+    )
+    dq_pass = GridModel(
+        "flash_attention_bwd", (b * h, q_steps, k_steps),
+        ("parallel", "parallel", "arbitrary"),
+        (
+            RefModel("q", (1, bq, d), qmap, q_dims),
+            RefModel("k", (1, bk, d), kvmap, kv_dims),
+            RefModel("v", (1, bk, d), kvmap, kv_dims),
+            RefModel("do", (1, bq, d), qmap, q_dims),
+            RefModel("lse", (1, bq), lmap, (b * h, s_q)),
+            RefModel("delta", (1, bq), lmap, (b * h, s_q)),
+            RefModel("dq", (1, bq, d), qmap, q_dims, role="out"),
+        ),
+    )
+    # dk/dv stream Q per K block: grid axes are (bh, ki, qi).
+    qmap_k = lambda bh, ki, qi: (bh, qi, 0)
+    lmap_k = lambda bh, ki, qi: (bh, qi)
+    kvmap_k = lambda bh, ki, qi: ((bh // h) * kv + (bh % h) // group, ki, 0)
+    dkv_map = lambda bh, ki, qi: (bh, ki, 0)
+    dkv_pass = GridModel(
+        "flash_attention_bwd", (b * h, k_steps, q_steps),
+        ("parallel", "parallel", "arbitrary"),
+        (
+            RefModel("q", (1, bq, d), qmap_k, q_dims),
+            RefModel("k", (1, bk, d), kvmap_k, kv_dims),
+            RefModel("v", (1, bk, d), kvmap_k, kv_dims),
+            RefModel("do", (1, bq, d), qmap_k, q_dims),
+            RefModel("lse", (1, bq), lmap_k, (b * h, s_q)),
+            RefModel("delta", (1, bq), lmap_k, (b * h, s_q)),
+            RefModel("dk", (1, bk, d), dkv_map, (b * h, s_k, d), role="out"),
+            RefModel("dv", (1, bk, d), dkv_map, (b * h, s_k, d), role="out"),
+        ),
+    )
+    return (fwd_lse, dq_pass, dkv_pass)
+
+
+register_grid_model("flash_attention", _flash_grid_model,
+                    space=ATTENTION_SPACE)
+register_grid_model("flash_attention_bwd", _flash_bwd_grid_model,
+                    space=ATTENTION_SPACE)

@@ -172,3 +172,34 @@ def matmul(x, w, *, bm: int, bn: int, bk: int, interpret: Optional[bool] = None)
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
     return matmul_pallas(x, w, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Abstract grid model — the statically-checkable mirror of matmul_pallas's
+# clamp/pad/grid arithmetic (see core/gridmodel.py). Nominal shapes are a
+# production-scale gemm so the legality verdict reflects real tiled axes.
+# ---------------------------------------------------------------------------
+from ..core.gridmodel import GridModel, RefModel, register_grid_model
+
+
+def _matmul_grid_model(config, shapes=None):
+    if shapes is None:
+        shapes = ((4096, 4096), (4096, 4096))
+    (m, k), n = shapes[0], shapes[1][1]
+    bm = min(config["bm"], m)
+    bn = min(config["bn"], n)
+    bk = min(config["bk"], k)
+    mp, kp, np_ = m + (-m) % bm, k + (-k) % bk, n + (-n) % bn
+    grid = (mp // bm, np_ // bn, kp // bk)
+    return GridModel(
+        "matmul", grid, ("parallel", "parallel", "arbitrary"),
+        (
+            RefModel("x", (bm, bk), lambda i, j, kk: (i, kk), (mp, kp)),
+            RefModel("w", (bk, bn), lambda i, j, kk: (kk, j), (kp, np_)),
+            RefModel("out", (bm, bn), lambda i, j, kk: (i, j), (mp, np_),
+                     role="out"),
+        ),
+    )
+
+
+register_grid_model("matmul", _matmul_grid_model, space=MATMUL_SPACE)

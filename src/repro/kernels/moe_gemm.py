@@ -150,3 +150,41 @@ def expert_gemm(x, w, *, bc: int, bn: int, bk: int,
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
     return expert_gemm_pallas(x, w, bc=bc, bn=bn, bk=bk, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Abstract grid model (static legality; see core/gridmodel.py). Experts ride
+# the outer grid axis; the k axis carries the accumulator scratch and is
+# declared "arbitrary" — that is what makes the out ref (invariant along kk)
+# race-free. Backward expert_gemm dispatches reuse this model with
+# transposed operands, so one registration covers fwd and bwd keys.
+# ---------------------------------------------------------------------------
+from ..core.gridmodel import GridModel, RefModel, register_grid_model
+
+
+def _expert_gemm_grid_model(config, shapes=None):
+    if shapes is None:
+        shapes = ((4, 4096, 4096), (4, 4096, 2048))
+    e, c, k = shapes[0]
+    n = shapes[1][2]
+    bc = min(config["bc"], c)
+    bn = min(config["bn"], n)
+    bk = min(config["bk"], k)
+    cp, kp, np_ = c + (-c) % bc, k + (-k) % bk, n + (-n) % bn
+    grid = (e, cp // bc, np_ // bn, kp // bk)
+    xmap = lambda ie, i, j, kk: (ie, i, kk)
+    wmap = lambda ie, i, j, kk: (ie, kk, j)
+    omap = lambda ie, i, j, kk: (ie, i, j)
+    return GridModel(
+        "expert_gemm", grid,
+        ("parallel", "parallel", "parallel", "arbitrary"),
+        (
+            RefModel("x", (1, bc, bk), xmap, (e, cp, kp)),
+            RefModel("w", (1, bk, bn), wmap, (e, kp, np_)),
+            RefModel("out", (1, bc, bn), omap, (e, cp, np_), role="out"),
+        ),
+    )
+
+
+register_grid_model("expert_gemm", _expert_gemm_grid_model,
+                    space=EXPERT_GEMM_SPACE)

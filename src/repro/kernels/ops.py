@@ -125,6 +125,45 @@ collector* — ``repro.obs.collect(...)`` scoped the same contextvar way as
 instrumentation site starts with one ``if not collector.enabled`` branch,
 so a tuned kernel-mode step pays no measurable cost (<2%, asserted by
 ``benchmarks/obs_overhead.py`` in CI; <5% with default sampling enabled).
+
+Static analysis (``repro.analysis``)
+------------------------------------
+
+The dispatch contract is now *machine-checked* without compiling anything
+— ``python -m repro.analysis check --strict`` runs in CI and fails the
+build on violations:
+
+* **Dispatch-completeness lint** — raw FLOP sites in ``repro.models``
+  (``jnp.einsum`` / ``@`` / ``jax.nn.softmax`` / ``jax.lax.scan``) must
+  either route through the registry or carry an explicit pragma::
+
+      # repro: allow-raw(<reason — single line, no parentheses>)
+
+  Same-line covers that line; a pragma on its own line covers the whole
+  statement that starts below it (so one above a ``def`` blesses the
+  function body). Adding a new model? Either ``repro.dispatch(...)`` the
+  contraction or annotate *why* it stays raw — the lint makes "forgot to
+  dispatch" a CI failure instead of a silent heuristic-tier fallback.
+* **Kernel legality** — every Pallas tunable registers an abstract grid
+  model (``repro.core.gridmodel.register_grid_model``): grid shape,
+  BlockSpec blocks, index maps, and dimension semantics as pure functions
+  of the config. The checker abstractly evaluates the FULL config space
+  per platform fingerprint for write-write races across parallel grid
+  axes, index-map out-of-bounds, and TPU sublane/lane tiling (dtype-aware:
+  8 rows f32, 16 bf16, 128 lanes). Adding a new kernel without a model is
+  a contracts warning; adding one WITH a model gets static pruning for
+  free: ``ParamSpace.legal_configs(platform)`` feeds the tuner's pre-pass
+  (illegal configs marked pruned, zero measurement budget spent) and
+  ``campaign plan`` stamps per-kernel pruned counts into the manifest
+  (``campaign status`` prints them).
+* **Registry contracts + artifact checks** — ``vjp="dispatch"`` tunables
+  must dispatch a registered ``*_bwd`` sibling (or the forward kernel for
+  transposed-operand gradients) with an oracle; planner rosters must be
+  registry-covered. ``python -m repro.campaign check --db ... --manifest
+  ...`` extends this to shipped artifacts: the stale single-arg-dtype keys
+  and pre-backward-plane manifests described above are now *detected*, not
+  just documented (stale ``int32`` softmax_xent keys are an error; missing
+  backward rosters and expert-capacity bucket drift are flagged).
 """
 from __future__ import annotations
 

@@ -221,3 +221,55 @@ def rmsnorm_bwd(ct, x, weight, *, block_rows: int, eps: float = 1e-6,
         interpret = jax.devices()[0].platform != "tpu"
     return rmsnorm_bwd_pallas(ct, x, weight, block_rows=block_rows, eps=eps,
                               interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Abstract grid models (static legality; see core/gridmodel.py). Both kernels
+# tune over RMSNORM_SPACE, so a config is legal only if legal under both —
+# the bwd model is also the race detector's shipped ground truth: dw maps
+# every grid point to block (0, 0), which is only safe because the row axis
+# is declared "arbitrary" (sequential).
+# ---------------------------------------------------------------------------
+from ..core.gridmodel import GridModel, RefModel, register_grid_model
+
+
+def _rmsnorm_grid_model(config, shapes=None):
+    if shapes is None:
+        shapes = ((8192, 4096), (4096,))
+    rows, d = shapes[0]
+    br = min(config["block_rows"], rows)
+    rp = rows + (-rows) % br
+    row = lambda i: (i, 0)
+    w0 = lambda i: (0, 0)
+    return GridModel(
+        "rmsnorm", (rp // br,), ("parallel",),
+        (
+            RefModel("x", (br, d), row, (rp, d)),
+            RefModel("w", (1, d), w0, (1, d)),
+            RefModel("out", (br, d), row, (rp, d), role="out"),
+        ),
+    )
+
+
+def _rmsnorm_bwd_grid_model(config, shapes=None):
+    if shapes is None:
+        shapes = ((8192, 4096), (8192, 4096), (4096,))
+    rows, d = shapes[1]
+    br = min(config["block_rows"], rows)
+    rp = rows + (-rows) % br
+    row = lambda i: (i, 0)
+    w0 = lambda i: (0, 0)
+    return GridModel(
+        "rmsnorm_bwd", (rp // br,), ("arbitrary",),
+        (
+            RefModel("ct", (br, d), row, (rp, d)),
+            RefModel("x", (br, d), row, (rp, d)),
+            RefModel("w", (1, d), w0, (1, d)),
+            RefModel("dx", (br, d), row, (rp, d), role="out"),
+            RefModel("dw", (1, d), w0, (1, d), role="out"),
+        ),
+    )
+
+
+register_grid_model("rmsnorm", _rmsnorm_grid_model, space=RMSNORM_SPACE)
+register_grid_model("rmsnorm_bwd", _rmsnorm_bwd_grid_model, space=RMSNORM_SPACE)

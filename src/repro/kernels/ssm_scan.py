@@ -475,3 +475,84 @@ def ssm_update_bwd(ct_y, ct_h, xc, dt, B, C, A, h, *, block_d: int):
         jnp.concatenate(gA, axis=0),
         jnp.concatenate(gh, axis=1),
     )
+
+
+# ---------------------------------------------------------------------------
+# Abstract grid models (static legality; see core/gridmodel.py). The scan's
+# sequential chunk axis carries the state scratch — the model declares it
+# "arbitrary", which is what keeps the hn carry race-free. The *_bwd spaces
+# are jnp-only (no pallas_call), so they register no model and
+# legal_configs() returns their full enumeration. Nominal shapes use a
+# production d_inner (2048), where the d-strip axis is genuinely tiled —
+# that is where TPU lane alignment prunes block_d below 128 (ROADMAP item
+# 1's "chosen for CPU interpret correctness, not lane alignment").
+# ---------------------------------------------------------------------------
+from ..core.gridmodel import GridModel, RefModel, register_grid_model
+
+
+def _ssm_scan_grid_model(config, shapes=None):
+    if shapes is None:
+        shapes = ((4, 2048, 2048), (4, 2048, 2048), (4, 2048, 16),
+                  (4, 2048, 16), (2048, 16), (4, 2048, 16))
+    b, s, di = shapes[0]
+    ds = shapes[4][1]
+    chunk = min(config["chunk"], s)
+    block_d = min(config["block_d"], di)
+    sp = s + (-s) % chunk
+    dip = di + (-di) % block_d
+    grid = (b, dip // block_d, sp // chunk)
+    xmap = lambda ib, id_, ic: (ib, ic, id_)
+    bmap = lambda ib, id_, ic: (ib, ic, 0)
+    amap = lambda ib, id_, ic: (id_, 0)
+    hmap = lambda ib, id_, ic: (ib, id_, 0)
+    return GridModel(
+        "ssm_scan", grid, ("parallel", "parallel", "arbitrary"),
+        (
+            RefModel("xc", (1, chunk, block_d), xmap, (b, sp, dip)),
+            RefModel("dt", (1, chunk, block_d), xmap, (b, sp, dip)),
+            RefModel("B", (1, chunk, ds), bmap, (b, sp, ds)),
+            RefModel("C", (1, chunk, ds), bmap, (b, sp, ds)),
+            RefModel("A", (block_d, ds), amap, (dip, ds)),
+            RefModel("h0", (1, block_d, ds), hmap, (b, dip, ds)),
+            RefModel("y", (1, chunk, block_d), xmap, (b, sp, dip),
+                     role="out"),
+            RefModel("hn", (1, block_d, ds), hmap, (b, dip, ds),
+                     role="out"),
+        ),
+    )
+
+
+def _ssm_update_grid_model(config, shapes=None):
+    if shapes is None:
+        shapes = ((1024, 2048), (1024, 2048), (1024, 16), (1024, 16),
+                  (2048, 16), (1024, 2048, 16))
+    b, di = shapes[0]
+    ds = shapes[4][1]
+    block_b = min(config["block_b"], b)
+    block_d = min(config["block_d"], di)
+    bp = b + (-b) % block_b
+    dip = di + (-di) % block_d
+    grid = (bp // block_b, dip // block_d)
+    xy = lambda i, j: (i, j)
+    bmap = lambda i, j: (i, 0)
+    amap = lambda i, j: (j, 0)
+    hmap = lambda i, j: (i, j, 0)
+    return GridModel(
+        "ssm_update", grid, ("parallel", "parallel"),
+        (
+            RefModel("xc", (block_b, block_d), xy, (bp, dip)),
+            RefModel("dt", (block_b, block_d), xy, (bp, dip)),
+            RefModel("B", (block_b, ds), bmap, (bp, ds)),
+            RefModel("C", (block_b, ds), bmap, (bp, ds)),
+            RefModel("A", (block_d, ds), amap, (dip, ds)),
+            RefModel("h", (block_b, block_d, ds), hmap, (bp, dip, ds)),
+            RefModel("y", (block_b, block_d), xy, (bp, dip), role="out"),
+            RefModel("hn", (block_b, block_d, ds), hmap, (bp, dip, ds),
+                     role="out"),
+        ),
+    )
+
+
+register_grid_model("ssm_scan", _ssm_scan_grid_model, space=SSM_SCAN_SPACE)
+register_grid_model("ssm_update", _ssm_update_grid_model,
+                    space=SSM_UPDATE_SPACE)

@@ -288,3 +288,70 @@ def softmax_xent_bwd(ct, logits, labels, *, block_rows: int, block_v: int,
         ct, logits, labels, block_rows=block_rows, block_v=block_v,
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Abstract grid models (static legality; see core/gridmodel.py). The
+# backward realizes TWO pallas_calls — the online-lse pass (v axis carries
+# the (m, l) scratch: "arbitrary") and the d_logits pass (fully parallel) —
+# so its builder returns one model per pass; a config must be legal under
+# both, and under the forward (shared XENT_SPACE).
+# ---------------------------------------------------------------------------
+from ..core.gridmodel import GridModel, RefModel, register_grid_model
+
+
+def _xent_blocks(config, rows, vocab):
+    br = min(config["block_rows"], rows)
+    bv = min(config["block_v"], vocab)
+    return br, bv, rows + (-rows) % br, vocab + (-vocab) % bv
+
+
+def _xent_grid_model(config, shapes=None):
+    if shapes is None:
+        shapes = ((2048, 65536), (2048,))
+    rows, vocab = shapes[0]
+    br, bv, rp, vp = _xent_blocks(config, rows, vocab)
+    grid = (rp // br, vp // bv)
+    tile = lambda ri, vi: (ri, vi)
+    row = lambda ri, vi: (ri, 0)
+    return GridModel(
+        "softmax_xent", grid, ("parallel", "arbitrary"),
+        (
+            RefModel("logits", (br, bv), tile, (rp, vp)),
+            RefModel("labels", (br, 1), row, (rp, 1), dtype="int32"),
+            RefModel("loss", (br, 1), row, (rp, 1), role="out"),
+        ),
+    )
+
+
+def _xent_bwd_grid_model(config, shapes=None):
+    if shapes is None:
+        shapes = ((2048,), (2048, 65536), (2048,))
+    rows, vocab = shapes[1]
+    br, bv, rp, vp = _xent_blocks(config, rows, vocab)
+    grid = (rp // br, vp // bv)
+    tile = lambda ri, vi: (ri, vi)
+    row = lambda ri, vi: (ri, 0)
+    lse_pass = GridModel(
+        "softmax_xent_bwd", grid, ("parallel", "arbitrary"),
+        (
+            RefModel("logits", (br, bv), tile, (rp, vp)),
+            RefModel("lse", (br, 1), row, (rp, 1), role="out"),
+        ),
+    )
+    dl_pass = GridModel(
+        "softmax_xent_bwd", grid, ("parallel", "parallel"),
+        (
+            RefModel("logits", (br, bv), tile, (rp, vp)),
+            RefModel("labels", (br, 1), row, (rp, 1), dtype="int32"),
+            RefModel("ct", (br, 1), row, (rp, 1)),
+            RefModel("lse", (br, 1), row, (rp, 1)),
+            RefModel("dl", (br, bv), tile, (rp, vp), role="out"),
+        ),
+    )
+    return (lse_pass, dl_pass)
+
+
+register_grid_model("softmax_xent", _xent_grid_model, space=XENT_SPACE)
+register_grid_model("softmax_xent_bwd", _xent_bwd_grid_model,
+                    space=XENT_SPACE)

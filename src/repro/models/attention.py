@@ -54,6 +54,7 @@ def attention_init(
 # ---------------------------------------------------------------------------
 
 
+# repro: allow-raw(this IS the attn_chunks tunable body — the pure-XLA flash-equivalent reference; its q/k chunk sizes are the registry knobs)
 def chunked_attention(
     q: jax.Array,        # [b, h, s_q, d]
     k: jax.Array,        # [b, kv, s_k, d]
@@ -296,6 +297,7 @@ def attention_decode(
     qh = jnp.swapaxes(q, 1, 2)
     kh = jnp.swapaxes(ck, 1, 2)
     vh = jnp.swapaxes(cv, 1, 2)
+    # repro: allow-raw(single-token decode over the rolling window cache — [b,h,1,window] scores are cache-layout-bound, below any kernel tile floor)
     if window > 0:
         # Rolling cache: every slot is within the window by construction;
         # mask only the slots not yet written (pos < window), per row.

@@ -166,6 +166,7 @@ def _chunked_xent(lm_head, x, labels, mask, loss_chunk: int):
         cnt = cnt + jnp.sum(mm)
         return (tot, cnt), None
 
+    # repro: allow-raw(loss chunking loop — loss_chunk is the xent_chunk registry knob; the vocab matmul and xent inside are dispatch sites)
     (tot, cnt), _ = jax.lax.scan(
         body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xc, lc, mc)
     )

@@ -98,8 +98,9 @@ def _route(router_w, x2, top_k: int, valid: Optional[jax.Array] = None):
     """
     # Router projection stays a plain jnp matmul: [n, d] @ [d, e] with e a
     # handful of experts is far below the tuned-gemm tile floor.
+    # repro: allow-raw(router projection is [n, d] @ [d, e] with e a handful of experts — below the tuned-gemm tile floor)
     logits = x2.astype(jnp.float32) @ router_w          # [n, e]
-    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1)  # repro: allow-raw(router softmax over e experts — the fused kernel tiles vocab-scale axes, not e)
     weights, ids = jax.lax.top_k(probs, top_k)          # [n, k]
     weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
     # Switch-style load-balancing auxiliary loss.
@@ -150,6 +151,7 @@ def moe_apply(
         outs = _expert_ffn(p, jnp.broadcast_to(x2[None], (e, n, d)), ffn_kind)
         combine = jnp.zeros((n, e), jnp.float32)
         combine = combine.at[jnp.arange(n)[:, None], ids].add(weights)
+        # repro: allow-raw(dense oracle path — correctness baseline for the scatter dispatch, never the serving path)
         y = jnp.einsum("ne,end->nd", combine, outs.astype(jnp.float32))
         return y.reshape(b, s, d).astype(x.dtype), aux
 

@@ -217,7 +217,7 @@ def _mlstm_qkvg(p, x, n_heads):
     q = dispatch("matmul", xb, p["wq"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)
     kk = dispatch("matmul", xb, p["wk"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)
     v = dispatch("matmul", xb, p["wv"]).reshape(b, s, n_heads, hd).swapaxes(1, 2)
-    # gate projection is tiny ([di, 2h]) — stays a plain jnp matmul
+    # repro: allow-raw(gate projection is tiny — [di, 2h] with h a handful of heads, far below the tuned-gemm tile floor)
     gates = xb.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
     log_i, f_raw = jnp.split(gates, 2, axis=-1)                   # [b,s,h]
     log_f = jax.nn.log_sigmoid(f_raw)
@@ -247,6 +247,7 @@ def mlstm_forward(p: Params, x: jax.Array, *, n_heads: int, chunk: int = 64,
     lis = log_i.reshape(b, n_heads, nc, chunk).swapaxes(0, 2).swapaxes(1, 2)
     lfs = log_f.reshape(b, n_heads, nc, chunk).swapaxes(0, 2).swapaxes(1, 2)
 
+    # repro: allow-raw(mLSTM decay-masked score matmuls await the fused mlstm_scores tunable — ROADMAP item 1; plain-matmul records cannot carry the mask epilogue)
     def chunk_step(carry, inp):
         C, n, m = carry                       # [b,h,hd,hd], [b,h,hd], [b,h]
         qc, kc, vc, li, lf = inp              # [b,h,c,hd]x3, [b,h,c]x2
@@ -281,6 +282,7 @@ def mlstm_forward(p: Params, x: jax.Array, *, n_heads: int, chunk: int = 64,
     C0 = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
     n0 = jnp.zeros((b, n_heads, hd), jnp.float32)
     m0 = jnp.zeros((b, n_heads), jnp.float32)
+    # repro: allow-raw(inter-chunk state recurrence is sequential by construction; the in-chunk compute above is the tunable site)
     (CN, nN, mN), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qs, ks_, vs, lis, lfs))
     h = hs.swapaxes(1, 2).swapaxes(0, 2).reshape(b, n_heads, sp, hd)[:, :, :s]
     h = h.swapaxes(1, 2).reshape(b, s, di)
@@ -317,12 +319,14 @@ def mlstm_decode(p: Params, x: jax.Array, state, *, n_heads: int):
     m_new = jnp.maximum(lf + m, li)
     f_s = jnp.exp(lf + m - m_new)
     i_s = jnp.exp(li - m_new)
+    # repro: allow-raw(decode-step rank-1 state update — [b,h,hd,hd] outer product, bandwidth-bound with no tile knobs)
     C = f_s[..., None, None] * C + i_s[..., None, None] * jnp.einsum(
         "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
     n = f_s[..., None] * n + i_s[..., None] * k.astype(jnp.float32)
     qf = q.astype(jnp.float32) * (hd ** -0.5)
+    # repro: allow-raw(decode-step state readout — [b,h,hd] contractions, too small to tile)
     num = jnp.einsum("bhd,bhde->bhe", qf, C)
-    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))  # repro: allow-raw(decode-step state readout — [b,h,hd] contractions, too small to tile)
     h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
     h = h.reshape(b, 1, di)
     hn = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + 1e-6)
@@ -369,6 +373,7 @@ def _slstm_cell(p, xw, state, n_heads):
     d = state["h"].shape[-1]
     hd = d // n_heads
     hr = state["h"].reshape(b, n_heads, hd)
+    # repro: allow-raw(per-step block-diagonal recurrent gemm carries h — sequential dependence keeps it inside the scan body)
     rec = jnp.einsum("bnh,nhk->bnk", hr.astype(jnp.float32),
                      p["r"].astype(jnp.float32)).reshape(b, 4 * d)
     zf, if_, ff_, of_ = jnp.split(xw + rec + p["b"], 4, axis=-1)
@@ -406,6 +411,7 @@ def slstm_forward(p: Params, x: jax.Array, *, n_heads: int, unroll: int = 1,
         new = _slstm_cell(p, xw_t, state, n_heads)
         return new, new["h"]
 
+    # repro: allow-raw(scalar-memory LSTM recurrence is inherently sequential; the x@w and MLP gemms around it are dispatch sites)
     stateN, hs = jax.lax.scan(step, state0, xw.swapaxes(0, 1), unroll=unroll)
     h = hs.swapaxes(0, 1).astype(x.dtype)                       # [b,s,d]
     # post-MLP (GeGLU, pf=4/3)

@@ -95,6 +95,7 @@ def make_xent_tunable(lm_head_w):
     import jax.numpy as jnp
 
     def ref_fn(x, labels):
+        # repro: allow-raw(tuning reference oracle — deliberately unfused full-vocab matmul the chunked variant is gated against)
         logits = x.reshape(-1, x.shape[-1]) @ lm_head_w
         return ref.softmax_xent(logits, labels.reshape(-1)).mean()
 
