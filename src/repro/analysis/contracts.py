@@ -7,8 +7,11 @@ Cross-checks the three places a kernel must agree with itself:
 * every ``vjp="dispatch"`` tunable's backward plan actually routes through
   registered tunables: its ``bwd`` callable must dispatch either a matched
   ``<name>_bwd`` sibling or the forward tunable itself (matmul/expert_gemm
-  gradients reuse the forward kernel with transposed operands), and every
-  dispatch target it names must exist in the registry with an oracle;
+  gradients reuse the forward kernel with transposed operands) — unless the
+  spec declares ``bwd_via``, in which case the plan is verified against
+  those names instead (fused-epilogue tunables decompose their gradients
+  onto *other* kernels' dispatch sites) — and every dispatch target it
+  names must exist in the registry with an oracle;
 * the campaign planner's default roster (``planner.DEFAULT_KERNELS``) only
   names registered tunables — a roster typo silently plans zero jobs for
   that kernel.
@@ -74,7 +77,17 @@ def check_contracts(report: Optional[Report] = None) -> Report:
                 "would bypass the policy pipeline entirely",
             )
             continue
-        if f"{name}_bwd" not in targets and name not in targets:
+        via = tuple(getattr(spec, "bwd_via", ()) or ())
+        if via:
+            undeclared = [v for v in via if v not in targets]
+            if undeclared:
+                report.add(
+                    "contracts", "error", name,
+                    f"bwd_via declares {undeclared} but the bwd source never "
+                    "dispatches them — the declared decomposition has drifted "
+                    "from the plan",
+                )
+        elif f"{name}_bwd" not in targets and name not in targets:
             report.add(
                 "contracts", "error", name,
                 f"bwd dispatches {targets} but neither {name}_bwd nor the "

@@ -14,6 +14,11 @@ not a silent fresh start. Checks:
   never hit it;
 * records whose stored config is no longer valid in the tunable's current
   space — warn (the space evolved; dispatch would fall through this record);
+* pre-residual ``*_bwd`` keys: a backward record whose key carries fewer
+  operands than the tunable's current example call — recorded before the
+  residual contract made the forward's saved aux (flash o/lse, rmsnorm
+  inv-rms, xent lse) keyed dispatch args. The runtime will never ExactHit
+  it; it survives only as a warm-start seed — warn, re-plan + re-run;
 * manifest: the pre-backward-plane hazard (``@dp`` training scenarios, no
   ``*_bwd`` roster) — error, mirroring ``campaign run``'s refusal;
 * expert_gemm capacity drift: db records whose bucketed capacity dim no
@@ -35,6 +40,18 @@ def _load_raw_db(path: str) -> Optional[Dict[str, Any]]:
         return None
     with open(path) as f:
         return json.load(f)
+
+
+def _example_arg_count(tunable) -> Optional[int]:
+    """Arity of the tunable's example call (None when there is no example)."""
+    spec = tunable.dispatch
+    if spec is None or getattr(spec, "example", None) is None:
+        return None
+    try:
+        args, _kwargs = spec.example()
+        return len(args)
+    except Exception:                                 # pragma: no cover
+        return None
 
 
 def _example_promotes_float(tunable) -> Optional[bool]:
@@ -85,6 +102,7 @@ def check_db(
 
     seen_platforms = set()
     float_example_cache: Dict[str, Optional[bool]] = {}
+    arity_cache: Dict[str, Optional[int]] = {}
     for key, rec in sorted(records.items()):
         kernel, platform, shapes, dtype, _extra = split_key(key)
         if platform not in known_platforms and platform not in seen_platforms:
@@ -111,6 +129,19 @@ def check_db(
                     f"stale integer-dtype key ({dtype}) for a float-computing "
                     "kernel — recorded before keys used the promoted dtype; "
                     "the runtime will never hit it (re-tune rebuilds it)",
+                )
+        if kernel.endswith("_bwd"):
+            if kernel not in arity_cache:
+                arity_cache[kernel] = _example_arg_count(t)
+            want = arity_cache[kernel]
+            if want is not None and len(shapes) < want:
+                report.add(
+                    "db", "warn", key,
+                    f"{kernel} record keyed under a pre-residual signature "
+                    f"({len(shapes)} operands, current dispatch keys "
+                    f"{want}): the runtime will never ExactHit it — it is "
+                    "warm-start-only (transfer seeds still mine it); "
+                    "re-plan and re-run the backward roster",
                 )
         cfg = (rec or {}).get("config")
         if cfg is not None and not t.space.is_valid(cfg):

@@ -50,6 +50,11 @@ DEFAULT_KERNELS = (
     "softmax_xent_bwd",
     "ssm_scan_bwd",
     "ssm_update_bwd",
+    # Fused-epilogue candidates: tuning these keys is what opts a site into
+    # fusion — `runtime.fusion_wins` routes through the fused tunable only
+    # where the database banked a record for the exact key.
+    "matmul_bias_act",
+    "rmsnorm_matmul",
 )
 
 
@@ -276,8 +281,10 @@ def plan_training_jobs(
     ``dp_dims`` override backward dispatch uses — and every rmsnorm / xent /
     flash site derives its ``*_bwd`` tunable job (grad shapes follow the
     same Layout × mesh local-shape rules, cotangents take the forward
-    output's shape). A campaign run against this plan pre-tunes both what
-    the forward *and* the backward of the train step resolve.
+    output's shape, and the forward's saved residuals — flash o/lse,
+    rmsnorm inv-rms, xent lse — ride along as keyed operands per the
+    residual contract). A campaign run against this plan pre-tunes both
+    what the forward *and* the backward of the train step resolve.
 
     `mesh_axes` is the mesh's axis→size map (or a "DATAxMODEL" spec string);
     no live mesh is needed, so a dev host can plan for a 256-chip pod.
@@ -379,10 +386,24 @@ def plan_training_jobs(
         n_up = 2 if cfg.ffn_kind in ("swiglu", "geglu") else 1
         add_gemm(T, d, cfg.d_ff, n_up * n_ffn)
         add_gemm(T, cfg.d_ff, d, n_ffn)
-    # RMSNorm rows: per-layer norms + the final norm, fwd + fused bwd
-    # (cotangent is output-shaped: another [T, d] operand).
+        # Fused-epilogue candidate for the activation up-projection:
+        # `_act_matmul` keys matmul_bias_act with a zero bias and the
+        # activation in key_extra; a banked record here is what flips
+        # `fusion_wins` for the site (its backward decomposes onto the
+        # matmul jobs above, per bwd_via).
+        act = {"swiglu": "silu", "geglu": "gelu", "gelu": "gelu"}.get(
+            cfg.ffn_kind)
+        if act:
+            add("matmul_bias_act", [(T, d), (d, cfg.d_ff), (cfg.d_ff,)],
+                [f, f, f], n_ffn, extra=f"a{act}")
+    # RMSNorm rows: per-layer norms + the final norm, fwd + fused bwd.
+    # The bwd job carries the residual contract's operands: cotangent is
+    # output-shaped ([T, d]) and the forward's saved inv-rms rides along as
+    # a per-row f32 vector — residuals are dispatch args, so they are part
+    # of the db key (and promote the key dtype to f32).
     add("rmsnorm", [(T, d), (d,)], [f, f], n_norm + 1)
-    add("rmsnorm_bwd", [(T, d), (T, d), (d,)], [f, f, f], n_norm + 1)
+    add("rmsnorm_bwd", [(T, d), (T, d), (d,), (T,)], [f, f, f, "float32"],
+        n_norm + 1)
     # Chunked loss: each seq chunk runs one unembed gemm + one fused xent;
     # backward adds the unembed's transposed gemms and the fused d_logits
     # pass (per-row loss cotangent is fp32, like the loss output).
@@ -394,21 +415,24 @@ def plan_training_jobs(
         add("softmax_xent", [(rows, cfg.vocab_size), (rows,)], [f, "int32"],
             n_chunks)
         add("softmax_xent_bwd",
-            [(rows,), (rows, cfg.vocab_size), (rows,)],
-            ["float32", f, "int32"], n_chunks)
+            [(rows,), (rows, cfg.vocab_size), (rows,), (rows,)],
+            ["float32", f, "int32", "float32"], n_chunks)
     # Causal attention at the local batch, one job per distinct window
     # (dispatch keys flash_attention with extra=c{causal}w{window}) plus the
-    # fused backward site (cotangent leads with the q shape). No attn_chunks
-    # job: training never dispatches that tunable (the chunked path calls
-    # chunked_attention directly) — budget goes only to sites the step
-    # resolves.
+    # fused backward site: cotangent leads with the q shape, then the
+    # forward's saved residuals (o: q-shaped output, lse: per-row f32
+    # log-sum-exp) — the residual contract makes them dispatch args, so
+    # they key the bwd site. No attn_chunks job: training never dispatches
+    # that tunable (the chunked path calls chunked_attention directly) —
+    # budget goes only to sites the step resolves.
     b_att = max(1, min(b_loc, max_tokens // max(1, s)))
     q = (b_att, H, s, hd)
     kv = (b_att, KV, s, hd)
+    lse_s = (b_att, H, s)
     for w, n in sorted(windows.items()):
         add("flash_attention", [q, kv, kv], [f, f, f], n, extra=f"cTruew{w}")
-        add("flash_attention_bwd", [q, q, kv, kv], [f, f, f, f], n,
-            extra=f"cTruew{w}")
+        add("flash_attention_bwd", [q, q, kv, kv, q, lse_s],
+            [f, f, f, f, f, "float32"], n, extra=f"cTruew{w}")
 
     # --- SSM mixers ------------------------------------------------------
     # Mamba: four projection gemm sites (dt/out run in fp32, matching
@@ -610,6 +634,12 @@ def plan_serving_jobs(
                 counts["ffn"] * s, scen_d)
         add("matmul", [(B, d), (d, cfg.vocab_size)], [f, f], float(s), scen_d)
         add("rmsnorm", [(B, d), (d,)], [f, f], counts["norm"] * s, scen_d)
+        # Fused final-norm → unembed candidate for the decode hot loop
+        # (`rmsnorm_dense` in decode_step): a banked record opts the site
+        # into the rmsnorm_matmul fusion; otherwise it stays on the
+        # separate rmsnorm + matmul keys above.
+        add("rmsnorm_matmul", [(B, d), (d,), (d, cfg.vocab_size)], [f, f, f],
+            float(s), scen_d)
         # SSM decode state: one fused `ssm_update` per mamba layer per tick
         # (the decode-state rows), plus the per-tick projection gemms.
         if counts["mamba"] > 0:

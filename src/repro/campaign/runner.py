@@ -45,6 +45,14 @@ def materialize_args(job: TuningJob, seed: int = 0):
     condition their coefficient args instead — dt must be a small positive
     step and A a negative decay rate, or exp(dt·A) leaves the regime the
     selective scan ever traces and the measurement is of overflow handling.
+
+    Residual-threaded bwd jobs (rmsnorm_bwd, softmax_xent_bwd,
+    flash_attention_bwd) get residual operands *derived from their primal
+    args*, not sampled: an inv-rms or lse that is inconsistent with x /
+    logits / (q, k, v) puts the kernel outside the numeric regime training
+    ever hands it (e.g. exp(scores − lse) unbounded), and both the
+    correctness gate and the measurement would be of garbage. Jobs from
+    pre-residual manifests (shorter arg lists) keep the old behavior.
     """
     import jax.numpy as jnp
 
@@ -79,6 +87,30 @@ def materialize_args(job: TuningJob, seed: int = 0):
         elif job.kernel in attn_like:
             t = t * 0.3
         args.append(jnp.asarray(t, jnp.dtype(dtype)))
+    # Residual contract: derive residual operands from the primal args they
+    # were saved from (see docstring). Length guards keep pre-residual
+    # manifests loadable.
+    if job.kernel == "rmsnorm_bwd" and len(args) >= 4:
+        import jax
+
+        xf = args[1].astype(jnp.float32)
+        args[3] = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1) + 1e-6)
+    elif job.kernel == "softmax_xent_bwd" and len(args) >= 4:
+        import jax
+
+        args[3] = jax.nn.logsumexp(args[1].astype(jnp.float32), axis=-1)
+    elif job.kernel == "flash_attention_bwd" and len(args) >= 6:
+        from ..kernels import ref as _ref
+
+        # Measurement runs the variant and the tuning reference at the
+        # tunable's default kwargs (causal=True, window=0) — key_extra only
+        # namespaces the record — so the residuals must be derived at those
+        # same defaults or the provided lse disagrees with the measured
+        # score math and every config fails the correctness gate.
+        o, lse = _ref.attention_res(
+            args[1], args[2], args[3], causal=True, window=0)
+        args[4] = o.astype(args[4].dtype)
+        args[5] = lse
     return tuple(args)
 
 

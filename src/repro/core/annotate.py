@@ -43,7 +43,10 @@ class DispatchSpec:
 
     * ``reference`` — the fallback / reference-mode implementation, called as
       ``reference(*args, **call_kwargs)``. Defaults to the tunable's tuning
-      reference (``Tunable.reference``).
+      reference (``Tunable.reference``). Always primal-only: a tunable with
+      ``residuals > 0`` has a residual-emitting *tuning* reference (so the
+      correctness gate compares like structure), and must set this field to
+      the plain oracle explicitly.
     * ``key_extra`` — maps the *call kwargs* to the database key suffix
       (e.g. flash attention's ``f"c{causal}w{window}"``), so semantically
       different calls with identical shapes get distinct records.
@@ -79,12 +82,33 @@ class DispatchSpec:
         tuned kernels are trainable even when the Pallas kernel itself has
         no transpose rule (forward stays the tuned kernel; backward
         recomputes through the reference math).
-      * ``"none"`` — leaves the variant bare (backward-plane tunables use
-        this: their second derivative is never taken).
+      * ``"none"`` — leaves the variant bare (for tunables that are never
+        differentiated at all). Backward-plane tunables use ``"reference"``
+        instead, so ``jax.grad``-of-``jax.grad`` can differentiate *through*
+        a dispatched gradient site; the runtime additionally routes any
+        dispatch under second-order JVP nesting straight to the reference
+        implementation (``custom_vjp`` has no forward-mode rule).
     * ``bwd`` — the backward dispatch plan for ``vjp="dispatch"``: called
-      as ``bwd(ct, *canonical_args, **call_kwargs)``, returns one cotangent
-      per canonical positional arg (``None`` for non-differentiable args —
-      integer labels and the like).
+      as ``bwd(ct, *canonical_args, **call_kwargs)`` — or, with
+      ``residuals > 0``, as ``bwd(ct, *canonical_args, primal_out,
+      *aux, **call_kwargs)`` — returns one cotangent per canonical
+      positional arg (``None`` for non-differentiable args — integer
+      labels and the like).
+    * ``residuals`` — the *residual contract*: when > 0, the bound variant
+      (and the tuning reference) returns ``(primal, *aux)`` with exactly
+      this many auxiliary outputs — forward intermediates the backward
+      pass would otherwise recompute (flash attention's lse, rmsnorm's
+      inv-rms, softmax-xent's lse). Dispatch saves them into the
+      ``custom_vjp`` residuals alongside the canonical args and the
+      primal output, and hands all three to the backward plan; callers
+      only ever see the primal. Residuals stay *canonical* (the
+      ``canonicalize`` restore applies to the primal alone).
+    * ``bwd_via`` — the registered tunable names the backward plan
+      dispatches, for plans that decompose into *other* kernels' sites
+      (the fused-epilogue tunables lower their gradients onto plain
+      ``matmul`` / ``rmsnorm_bwd`` records rather than a dedicated
+      ``*_bwd`` sibling). The analysis contracts pass verifies these
+      against the plan's source instead of requiring a same-name sibling.
     """
 
     reference: Optional[Callable] = None
@@ -94,6 +118,8 @@ class DispatchSpec:
     data_parallel_args: Tuple[int, ...] = (0,)
     vjp: str = "reference"
     bwd: Optional[Callable] = None
+    residuals: int = 0
+    bwd_via: Tuple[str, ...] = ()
 
     def reference_for(self, tunable: "Tunable") -> Optional[Callable]:
         return self.reference if self.reference is not None else tunable.reference

@@ -688,6 +688,15 @@ class TunedRuntime:
         if not self.kernel_mode_active:
             self.telemetry.record(tunable.name, None, "reference")
             return _reference_call(tunable, spec, args, kwargs)
+        if _jvp_nesting(args) >= 2:
+            # Second-order autodiff (`jax.grad(jax.grad(...))`): the outer
+            # linearization re-traces the inner custom_vjp's forward with
+            # JVP tangents attached, and the raw Pallas call inside has no
+            # JVP rule. Differentiate through the reference implementation
+            # instead — first-order dispatch (depth 1) stays on the tuned
+            # kernel path, so training never takes this branch.
+            self.telemetry.record(tunable.name, None, "reference")
+            return _reference_call(tunable, spec, args, kwargs)
         if config is not None:
             self.telemetry.record(tunable.name, None, "override")
             cargs, restore = spec.canon(args)
@@ -698,6 +707,38 @@ class TunedRuntime:
         if res.config is None:
             return _reference_call(tunable, spec, args, kwargs)
         return restore(_kernel_call(self, tunable, spec, res.config, cargs, kwargs))
+
+    # -- fusion policy -------------------------------------------------------
+    def fusion_wins(self, tunable: Union[str, Tunable], *args, **kwargs) -> bool:
+        """Whether a fused-epilogue site should dispatch *fused* here.
+
+        The resolution-policy hook behind ``kernels/fused.py``: a model
+        layer asks "does the database say fusion wins for this call?"
+        before routing through a fused tunable instead of its unfused
+        ops. True iff the kernel path is active AND the active database
+        holds an exact record (with a still-valid config) for the
+        canonicalized call — i.e. the fused site would resolve ExactHit.
+        A campaign that measured the fused variant as a win banks that
+        record; sites it never tuned (or where fusion lost and the job
+        was dropped) keep their unfused dispatch chain, so e2e ExactHit
+        coverage is invariant under this hook. Pure lookup: no telemetry
+        rows, no cache mutation, no tuning.
+        """
+        if not self.kernel_mode_active:
+            return False
+        from .tuner import _args_key  # late: tuner imports this module's deps
+
+        try:
+            tunable = _as_tunable(tunable)
+        except KeyError:
+            return False
+        spec = tunable.dispatch or _DEFAULT_SPEC
+        cargs, _ = spec.canon(args)
+        db = self.db if self.db is not None else default_db()
+        platform = self.platform or _platform()
+        key = _args_key(tunable, cargs, platform, spec.extra_for(kwargs))
+        rec = db.lookup(key)
+        return rec is not None and tunable.space.is_valid(rec.config)
 
     def __repr__(self) -> str:
         db = "default" if self.db is None else (self.db.path or "memory")
@@ -730,37 +771,88 @@ def _kernel_call(runtime: "TunedRuntime", tunable: Tunable, spec: DispatchSpec,
       fwd-only-tuned baseline; also the fallback when a dispatch-vjp
       tunable runs under ``bwd_dispatch=False``).
     * ``"none"`` — the bare variant (backward-plane tunables themselves).
+
+    The *residual contract* (``spec.residuals > 0``) threads forward
+    intermediates into the backward plan: the variant returns
+    ``(primal, *aux)``; ``fwd`` saves ``(args, primal, aux)`` as the
+    ``custom_vjp`` residuals; the plan is called
+    ``bwd(ct, *args, primal, *aux, **kwargs)``; the caller only ever sees
+    the primal. With ``vjp="reference"`` the aux outputs are simply
+    discarded (the reference VJP recomputes everything, as before).
     """
     import jax
 
     variant = tunable.variant(**config)
     ref = spec.reference_for(tunable)
+    n_res = spec.residuals
     mode = spec.vjp
     if mode == "dispatch" and (spec.bwd is None or not runtime.bwd_dispatch):
         mode = "reference"
     if mode == "none" or (mode == "reference" and ref is None):
-        return variant(*cargs, **kwargs)
+        out = variant(*cargs, **kwargs)
+        return out[0] if n_res else out
 
     # kwargs (eps/causal/window/...) are schedule-or-semantics flags, never
     # differentiated: bind them by closure so custom_vjp sees arrays only.
     @jax.custom_vjp
     def run(*a):
-        return variant(*a, **kwargs)
+        out = variant(*a, **kwargs)
+        return out[0] if n_res else out
 
     def fwd(*a):
-        return variant(*a, **kwargs), a
+        out = variant(*a, **kwargs)
+        if n_res:
+            return out[0], (a, out[0], tuple(out[1:]))
+        return out, (a, None, ())
 
     if mode == "dispatch":
-        def bwd(a, ct):
+        def bwd(res, ct):
+            a, primal, aux = res
             with dispatch_phase("bwd"):
-                grads = spec.bwd(ct, *a, **kwargs)
+                if n_res:
+                    grads = spec.bwd(ct, *a, primal, *aux, **kwargs)
+                else:
+                    grads = spec.bwd(ct, *a, **kwargs)
             return _match_cotangents(grads, a)
     else:
-        def bwd(a, ct):
+        def bwd(res, ct):
+            a, _, _ = res
             return jax.vjp(lambda *p: ref(*p, **kwargs), *a)[1](ct)
 
     run.defvjp(fwd, bwd)
-    return run(*cargs)
+    try:
+        return run(*cargs)
+    except TypeError as e:
+        if "forward-mode" not in str(e):
+            raise
+        # `jax.jvp` / `jax.linearize` over a dispatch site: custom_vjp has
+        # no forward-mode rule. Fall back to the reference implementation
+        # (jvp-able jnp math) on the canonical args — the caller's restore
+        # still applies to our return value.
+        runtime.telemetry.record(tunable.name, None, "reference")
+        return ref(*cargs, **kwargs)
+
+
+def _jvp_nesting(args) -> int:
+    """Depth of forward-mode (JVP) tracer nesting across ``args``.
+
+    ``jax.grad`` linearizes through one JVP trace (depth 1 — the depth
+    ``custom_vjp`` handles); ``jax.grad(jax.grad(...))`` stacks a second
+    (depth 2 — the depth it cannot). Walking ``.primal`` is cheap and
+    version-stable: a ``JVPTracer``'s primal is the tracer of the
+    enclosing trace.
+    """
+    from jax.interpreters import ad
+
+    deepest = 0
+    for x in args:
+        d = 0
+        while isinstance(x, ad.JVPTracer) and d < 8:
+            d += 1
+            x = x.primal
+        if d > deepest:
+            deepest = d
+    return deepest
 
 
 def _match_cotangents(grads, primals) -> tuple:
@@ -873,6 +965,17 @@ def dispatch(tunable: Union[str, Tunable], *args,
              config: Optional[Config] = None, **kwargs):
     """Dispatch through whichever runtime is active at the call."""
     return current_runtime().dispatch(tunable, *args, config=config, **kwargs)
+
+
+def fusion_wins(tunable: Union[str, Tunable], *args, **kwargs) -> bool:
+    """Whether the active runtime's database says fusion wins here.
+
+    See :meth:`TunedRuntime.fusion_wins` — the resolution-policy hook the
+    model layer consults before routing a site through a fused-epilogue
+    tunable (``matmul_bias_act`` / ``rmsnorm_matmul``) instead of its
+    unfused dispatch chain.
+    """
+    return current_runtime().fusion_wins(tunable, *args, **kwargs)
 
 
 def entry_point(name: str) -> Callable:

@@ -4,10 +4,14 @@ Modules:
   matmul.py    — blocked MXU matmul, tunable (bm, bn, bk); backward =
                  transposed-operand matmul dispatches
   attention.py — flash attention (causal/SWA/GQA), tunable (block_q, block_k)
-                 + flash_attention_bwd (recompute-(o,lse), blocked dq/dkv)
+                 + flash_attention_bwd (residual-threaded (o,lse), blocked
+                 dq/dkv — two passes, no recompute)
   rmsnorm.py   — fused RMSNorm, tunable block_rows + fused rmsnorm_bwd
   xent.py      — fused large-vocab cross entropy, tunable (block_rows,
                  block_v) + vocab-streamed softmax_xent_bwd
+  fused.py     — fused-epilogue tunables: matmul_bias_act (gemm+bias+
+                 gelu/silu) and rmsnorm_matmul (norm+gemm); gradients
+                 decompose onto matmul/rmsnorm records (bwd_via)
   ssm_scan.py  — Mamba selective scan: Pallas chunked scan (chunk, block_d)
                  + fused single-step decode update, each with a chunk/block-
                  windowed bwd tunable
@@ -24,6 +28,14 @@ from .attention import (
     flash_attention_bwd,
     flash_attention_bwd_pallas,
     flash_attention_pallas,
+)
+from .fused import (
+    FUSED_MATMUL_SPACE,
+    RMSNORM_MATMUL_SPACE,
+    matmul_bias_act,
+    matmul_bias_act_pallas,
+    rmsnorm_matmul,
+    rmsnorm_matmul_pallas,
 )
 from .matmul import MATMUL_SPACE, matmul, matmul_pallas
 from .moe_gemm import EXPERT_GEMM_SPACE, expert_gemm, expert_gemm_pallas

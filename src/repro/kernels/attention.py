@@ -31,7 +31,7 @@ _NEG_INF = -1e30  # avoid nan from (-inf) - (-inf) in fully-masked rows
 
 
 def _flash_kernel(
-    q_ref, k_ref, v_ref, o_ref,
+    q_ref, k_ref, v_ref, o_ref, lse_ref,
     m_scr, l_scr, acc_scr,
     *,
     scale: float,
@@ -42,6 +42,9 @@ def _flash_kernel(
     k_steps: int,
     q_offset: int,
 ):
+    """Forward flash kernel; emits per-row logsumexp alongside the output —
+    the residual contract hands it to the backward plan, which no longer
+    re-runs this schedule to recover it."""
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -97,6 +100,7 @@ def _flash_kernel(
     def _done():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        lse_ref[0] = (m_scr[...] + jnp.log(denom))[:, 0]
 
 
 def flash_attention_pallas(
@@ -110,7 +114,8 @@ def flash_attention_pallas(
     window: int = 0,
     scale: Optional[float] = None,
     interpret: bool = False,
-) -> jax.Array:
+    return_residuals: bool = False,
+):
     b, h, s_q, d = q.shape
     _, kv, s_k, _ = k.shape
     assert h % kv == 0, (h, kv)
@@ -134,7 +139,7 @@ def flash_attention_pallas(
     kr = k.reshape(b * kv, s_k, d)
     vr = v.reshape(b * kv, s_k, d)
 
-    out = pl.pallas_call(
+    out, lse = pl.pallas_call(
         functools.partial(
             _flash_kernel,
             scale=scale,
@@ -151,8 +156,14 @@ def flash_attention_pallas(
             pl.BlockSpec((1, block_k, d), kv_index),
             pl.BlockSpec((1, block_k, d), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * h, s_q, d), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s_q, d), q.dtype),
+            jax.ShapeDtypeStruct((b * h, s_q), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -163,6 +174,8 @@ def flash_attention_pallas(
         ),
         interpret=interpret,
     )(qr, kr, vr)
+    if return_residuals:
+        return out.reshape(b, h, s_q, d), lse.reshape(b, h, s_q)
     return out.reshape(b, h, s_q, d)
 
 
@@ -205,21 +218,23 @@ def _attn_example():
     return (mk(1, 4, 128, 16), mk(1, 2, 128, 16), mk(1, 2, 128, 16)), {"causal": True}
 
 
-def _flash_bwd_plan(ct, q, k, v, **kwargs):
+def _flash_bwd_plan(ct, q, k, v, o, lse, **kwargs):
     """Backward plan for the fwd tunable: one fused bwd dispatch site
-    (dq/dk/dv together — they share the recomputed (o, lse) pass)."""
+    (dq/dk/dv together). The residual contract hands it the forward output
+    and per-query logsumexp, so no recompute pass is needed."""
     from ..core.runtime import dispatch
 
-    return dispatch("flash_attention_bwd", ct, q, k, v, **kwargs)
+    return dispatch("flash_attention_bwd", ct, q, k, v, o, lse, **kwargs)
 
 
 @tunable(
     "flash_attention",
     space=ATTENTION_SPACE,
-    reference=functools.partial(ref.attention, causal=True),
+    # Tuning reference emits the same (out, lse) structure as the variant.
+    reference=functools.partial(ref.attention_res, causal=True),
     heuristic=_attn_heuristic,
     dispatch=DispatchSpec(
-        # Reference takes the same (causal, window, scale) call kwargs.
+        # Deployment reference is primal-only (same call kwargs).
         reference=ref.attention,
         # Same shapes, different masking semantics => distinct db records.
         key_extra=lambda kw: f"c{kw.get('causal', True)}w{kw.get('window', 0)}",
@@ -228,6 +243,7 @@ def _flash_bwd_plan(ct, q, k, v, **kwargs):
         data_parallel_args=(0, 1, 2),
         vjp="dispatch",
         bwd=_flash_bwd_plan,
+        residuals=1,  # per-query logsumexp, threaded to the bwd plan
     ),
 )
 def flash_attention(
@@ -240,79 +256,14 @@ def flash_attention(
     return flash_attention_pallas(
         q, k, v, block_q=block_q, block_k=block_k,
         causal=causal, window=window, scale=scale, interpret=interpret,
+        return_residuals=True,
     )
 
 
 # ---------------------------------------------------------------------------
-# Flash attention backward: recompute (o, lse), then blocked dq and dk/dv
+# Flash attention backward: residual-threaded (o, lse) from the forward,
+# then blocked dq and dk/dv — two Pallas passes, no recompute pass.
 # ---------------------------------------------------------------------------
-
-
-def _flash_fwd_lse_kernel(
-    q_ref, k_ref, v_ref, o_ref, lse_ref,
-    m_scr, l_scr, acc_scr,
-    *,
-    scale: float,
-    causal: bool,
-    window: int,
-    block_q: int,
-    block_k: int,
-    k_steps: int,
-    q_offset: int,
-):
-    """The forward kernel, additionally emitting per-row logsumexp — the
-    residual the backward kernels need to rebuild softmax blocks exactly."""
-    qi = pl.program_id(1)
-    ki = pl.program_id(2)
-
-    @pl.when(ki == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    q_hi = (qi + 1) * block_q - 1 + q_offset
-    q_lo = qi * block_q + q_offset
-    k_lo = ki * block_k
-    k_hi = (ki + 1) * block_k - 1
-    live = jnp.bool_(True)
-    if causal:
-        live &= k_lo <= q_hi
-    if window > 0:
-        live &= k_hi > q_lo - window
-
-    @pl.when(live)
-    def _body():
-        q = q_ref[0].astype(jnp.float32)
-        k = k_ref[0].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale
-        if causal or window > 0:
-            q_ids = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-            k_ids = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-            mask = jnp.bool_(True)
-            if causal:
-                mask &= q_ids >= k_ids
-            if window > 0:
-                mask &= (q_ids - k_ids) < window
-            s = jnp.where(mask, s, _NEG_INF)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
-        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        m_scr[...] = m_new
-
-    @pl.when(ki == k_steps - 1)
-    def _done():
-        denom = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
-        lse_ref[0] = (m_scr[...] + jnp.log(denom))[:, 0]
 
 
 def _flash_bwd_dq_kernel(
@@ -443,10 +394,12 @@ def _flash_bwd_dkv_kernel(
 
 
 def flash_attention_bwd_pallas(
-    ct: jax.Array,  # [b, h, s_q, d] — cotangent of the attention output
+    ct: jax.Array,   # [b, h, s_q, d] — cotangent of the attention output
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
+    o: jax.Array,    # [b, h, s_q, d] — residual: the forward output
+    lse: jax.Array,  # [b, h, s_q]    — residual: per-query logsumexp
     *,
     block_q: int,
     block_k: int,
@@ -455,11 +408,12 @@ def flash_attention_bwd_pallas(
     scale: Optional[float] = None,
     interpret: bool = False,
 ):
-    """(dq, dk, dv) via the standard flash backward: recompute (o, lse) with
-    the forward schedule, form delta = rowsum(do·o), then one k-streaming
-    pass for dq and one q-streaming pass for dk/dv. Nothing [s_q, s_k]-sized
-    ever touches HBM. GQA: dk/dv are computed per q-head and group-summed
-    into the kv heads afterwards.
+    """(dq, dk, dv) via the residual-threaded flash backward: (o, lse) come
+    from the forward pass (no recompute), delta = rowsum(do·o) is one cheap
+    elementwise reduction, then one k-streaming pass for dq and one
+    q-streaming pass for dk/dv — exactly two Pallas calls. Nothing
+    [s_q, s_k]-sized ever touches HBM. GQA: dk/dv are computed per q-head
+    and group-summed into the kv heads afterwards.
     """
     b, h, s_q, d = q.shape
     _, kv, s_k, _ = k.shape
@@ -493,36 +447,12 @@ def flash_attention_bwd_pallas(
         block_q=block_q, block_k=block_k, q_offset=q_offset,
     )
 
-    # 1. recompute o + lse under the same block schedule as the forward
-    o, lse = pl.pallas_call(
-        functools.partial(_flash_fwd_lse_kernel, k_steps=k_steps, **common),
-        grid=(b * h, q_steps, k_steps),
-        in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, block_k, d), kv_index_q),
-            pl.BlockSpec((1, block_k, d), kv_index_q),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b * h, s_q, d), q.dtype),
-            jax.ShapeDtypeStruct((b * h, s_q), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, d), jnp.float32),
-        ],
-        compiler_params=_compat.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(qr, kr, vr)
-    delta = jnp.sum(dor.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    # delta = rowsum(do·o) from the residual-threaded forward output
+    o_r = o.reshape(b * h, s_q, d)
+    lse_r = lse.astype(jnp.float32).reshape(b * h, s_q)
+    delta = jnp.sum(dor.astype(jnp.float32) * o_r.astype(jnp.float32), axis=-1)
 
-    # 2. dq: stream K/V blocks per Q block (k grid dim carries the acc)
+    # 1. dq: stream K/V blocks per Q block (k grid dim carries the acc)
     dq = pl.pallas_call(
         functools.partial(_flash_bwd_dq_kernel, k_steps=k_steps, **common),
         grid=(b * h, q_steps, k_steps),
@@ -541,9 +471,9 @@ def flash_attention_bwd_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(qr, kr, vr, dor, lse, delta)
+    )(qr, kr, vr, dor, lse_r, delta)
 
-    # 3. dk/dv: stream Q blocks per K block (q grid dim carries the accs),
+    # 2. dk/dv: stream Q blocks per K block (q grid dim carries the accs),
     # per q-head; group-sum into kv heads below.
     dk_h, dv_h = pl.pallas_call(
         functools.partial(_flash_bwd_dkv_kernel, q_steps=q_steps, **common),
@@ -572,13 +502,13 @@ def flash_attention_bwd_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(qr, kr, vr, dor, lse, delta)
+    )(qr, kr, vr, dor, lse_r, delta)
     dk = dk_h.reshape(b, kv, group, s_k, d).sum(axis=2).astype(k.dtype)
     dv = dv_h.reshape(b, kv, group, s_k, d).sum(axis=2).astype(v.dtype)
     return dq.reshape(b, h, s_q, d), dk, dv
 
 
-def _attn_bwd_heuristic(ct, q, k, v):
+def _attn_bwd_heuristic(ct, q, k, v, o, lse):
     return _attn_heuristic(q, k, v)
 
 
@@ -587,10 +517,9 @@ def _attn_bwd_example():
 
     rs = np.random.RandomState(1)
     mk = lambda *s: jnp.asarray(rs.randn(*s) * 0.3, jnp.float32)
-    return (
-        mk(1, 4, 128, 16),              # ct (output-shaped)
-        mk(1, 4, 128, 16), mk(1, 2, 128, 16), mk(1, 2, 128, 16),
-    ), {"causal": True}
+    q, k, v = mk(1, 4, 128, 16), mk(1, 2, 128, 16), mk(1, 2, 128, 16)
+    o, lse = ref.attention_res(q, k, v, causal=True)
+    return (mk(1, 4, 128, 16), q, k, v, o, lse), {"causal": True}
 
 
 @tunable(
@@ -601,20 +530,21 @@ def _attn_bwd_example():
     dispatch=DispatchSpec(
         key_extra=lambda kw: f"c{kw.get('causal', True)}w{kw.get('window', 0)}",
         example=_attn_bwd_example,
-        # ct, q, k, v all lead with the batch dim; no second-order grads.
-        data_parallel_args=(0, 1, 2, 3),
-        vjp="none",
+        # ct, q, k, v, o, lse all lead with the batch dim.
+        data_parallel_args=(0, 1, 2, 3, 4, 5),
+        # Reference VJP so grad-of-grad differentiates through this site.
+        vjp="reference",
     ),
 )
 def flash_attention_bwd(
-    ct, q, k, v, *, block_q: int, block_k: int,
+    ct, q, k, v, o, lse, *, block_q: int, block_k: int,
     causal: bool = True, window: int = 0,
     scale: Optional[float] = None, interpret: Optional[bool] = None,
 ):
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
     return flash_attention_bwd_pallas(
-        ct, q, k, v, block_q=block_q, block_k=block_k,
+        ct, q, k, v, o, lse, block_q=block_q, block_k=block_k,
         causal=causal, window=window, scale=scale, interpret=interpret,
     )
 
@@ -623,9 +553,9 @@ def flash_attention_bwd(
 # Abstract grid models (static legality; see core/gridmodel.py). The
 # forward asserts block divisibility instead of padding, so the builders
 # return None (= kernel rejects the shapes) when s_q/s_k don't divide. The
-# backward realizes THREE pallas_calls — (o, lse) recompute, dq, dk/dv —
-# one model each; both tunables share ATTENTION_SPACE, so a config must be
-# legal under all four models.
+# backward realizes TWO pallas_calls — dq and dk/dv; (o, lse) arrive as
+# residuals from the forward — one model each; both tunables share
+# ATTENTION_SPACE, so a config must be legal under all three models.
 # ---------------------------------------------------------------------------
 from ..core.gridmodel import GridModel, RefModel, register_grid_model
 
@@ -644,6 +574,7 @@ def _flash_grid_model(config, shapes=None):
         return None
     grid = (b * h, s_q // bq, s_k // bk)
     qmap = lambda bh, qi, ki: (bh, qi, 0)
+    lmap = lambda bh, qi, ki: (bh, qi)
     kvmap = lambda bh, qi, ki: ((bh // h) * kv + (bh % h) // group, ki, 0)
     return GridModel(
         "flash_attention", grid, ("parallel", "parallel", "arbitrary"),
@@ -652,6 +583,7 @@ def _flash_grid_model(config, shapes=None):
             RefModel("k", (1, bk, d), kvmap, (b * kv, s_k, d)),
             RefModel("v", (1, bk, d), kvmap, (b * kv, s_k, d)),
             RefModel("out", (1, bq, d), qmap, (b * h, s_q, d), role="out"),
+            RefModel("lse", (1, bq), lmap, (b * h, s_q), role="out"),
         ),
     )
 
@@ -659,7 +591,8 @@ def _flash_grid_model(config, shapes=None):
 def _flash_bwd_grid_model(config, shapes=None):
     if shapes is None:
         shapes = ((2, 4, 4096, 128), (2, 4, 4096, 128),
-                  (2, 2, 4096, 128), (2, 2, 4096, 128))
+                  (2, 2, 4096, 128), (2, 2, 4096, 128),
+                  (2, 4, 4096, 128), (2, 4, 4096))
     b, h, s_q, d = shapes[1]
     kv, s_k = shapes[2][1], shapes[2][2]
     if h % kv:
@@ -674,17 +607,6 @@ def _flash_bwd_grid_model(config, shapes=None):
     lmap = lambda bh, qi, ki: (bh, qi)
     kvmap = lambda bh, qi, ki: ((bh // h) * kv + (bh % h) // group, ki, 0)
     q_dims, kv_dims = (b * h, s_q, d), (b * kv, s_k, d)
-    fwd_lse = GridModel(
-        "flash_attention_bwd", (b * h, q_steps, k_steps),
-        ("parallel", "parallel", "arbitrary"),
-        (
-            RefModel("q", (1, bq, d), qmap, q_dims),
-            RefModel("k", (1, bk, d), kvmap, kv_dims),
-            RefModel("v", (1, bk, d), kvmap, kv_dims),
-            RefModel("o", (1, bq, d), qmap, q_dims, role="out"),
-            RefModel("lse", (1, bq), lmap, (b * h, s_q), role="out"),
-        ),
-    )
     dq_pass = GridModel(
         "flash_attention_bwd", (b * h, q_steps, k_steps),
         ("parallel", "parallel", "arbitrary"),
@@ -717,7 +639,7 @@ def _flash_bwd_grid_model(config, shapes=None):
             RefModel("dv", (1, bk, d), dkv_map, (b * h, s_k, d), role="out"),
         ),
     )
-    return (fwd_lse, dq_pass, dkv_pass)
+    return (dq_pass, dkv_pass)
 
 
 register_grid_model("flash_attention", _flash_grid_model,

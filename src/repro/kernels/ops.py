@@ -53,6 +53,56 @@ Database-key semantics (what a record must look like to hit):
   ``repro.runtime(bwd_dispatch=False)`` to restore the old reference-VJP
   recompute (fwd-only tuning) while you do.
 
+Residual contract (``DispatchSpec.residuals``)
+----------------------------------------------
+
+Forward tunables may return auxiliary outputs alongside the primal —
+forward intermediates the backward pass would otherwise recompute:
+
+===================  ==============================  =======================
+tunable              residual                        consumed by
+===================  ==============================  =======================
+``flash_attention``  per-query logsumexp             ``flash_attention_bwd``
+                     ``[b, h, s_q]`` f32             (with the primal ``o``
+                                                     for delta rows)
+``rmsnorm``          per-row inverse rms ``[rows]``  ``rmsnorm_bwd``
+``softmax_xent``     per-row logsumexp ``[rows]``    ``softmax_xent_bwd``
+===================  ==============================  =======================
+
+With ``residuals=N`` the bound variant (and the *tuning* reference — the
+``ref.*_res`` oracles) returns ``(primal, *aux)``; dispatch saves the
+canonical args, the primal, and the aux into the ``custom_vjp`` residuals
+and calls the backward plan as ``bwd(ct, *args, primal, *aux, **kwargs)``.
+Callers only ever see the primal; the *deployment* reference stays
+primal-only. The payoff is structural: ``flash_attention_bwd`` dropped its
+(o, lse) recompute pass — two Pallas calls instead of three — and the
+rmsnorm/xent backward kernels consume their residual instead of a
+re-reduction over the inputs.
+
+**Migration hazard (residual keys)**: the residual args are *part of the
+backward db key* (an extra shape, and f32 residuals promote the key dtype
+of a bf16 site). ``*_bwd`` records banked before the residual contract are
+keyed on the old pre-residual signature — they never ExactHit a
+residual-threaded gradient site, only warm-start re-tunes.
+``python -m repro.campaign check`` flags such records as warm-start-only;
+re-plan (``campaign plan --train-mesh ...``) and re-run to bank current
+keys.
+
+Fusion opt-in (``runtime.fusion_wins``)
+---------------------------------------
+
+The fused-epilogue tunables (``matmul_bias_act``, ``rmsnorm_matmul``)
+extend the database-key story with a *resolution-policy hook*: model sites
+call ``repro.core.runtime.fusion_wins("matmul_bias_act", x, w, b, ...)``
+and route through the fused kernel only when kernel mode is active AND the
+database holds a valid record for that exact fused key — i.e. a campaign
+measured the fusion and banked it. No record, no fusion: the site keeps
+its unfused ``matmul``/``rmsnorm`` dispatches, so exact-hit coverage is
+invariant under the routing and fusion can never *introduce* a
+heuristic-tier site. Their gradients decompose onto plain ``matmul`` /
+``rmsnorm`` / ``rmsnorm_bwd`` records (``DispatchSpec.bwd_via`` declares
+the decomposition; the contracts pass verifies it).
+
 Arch coverage — which tunables each model family dispatches
 ------------------------------------------------------------
 
@@ -66,6 +116,10 @@ family       dispatch sites (beyond the shared matmul/rmsnorm/softmax_xent)
 ===========  =================================================================
 attention    ``flash_attention`` (+ ``flash_attention_bwd``); QKV/out/FFN
              projections as ``matmul``
+fused        ``matmul_bias_act`` (dense-with-bias; ffn gelu/silu epilogues)
+             and ``rmsnorm_matmul`` (final-norm → unembed) — *opt-in* per
+             site via ``fusion_wins`` (tuned record required); gradients
+             decompose onto matmul/rmsnorm/rmsnorm_bwd records (bwd_via)
 mamba (SSM)  ``ssm_scan`` chunked selective scan for train/prefill
              (+ ``ssm_scan_bwd``), ``ssm_update`` fused single-step state
              update for decode (+ ``ssm_update_bwd``); in/x/dt/out
@@ -158,8 +212,9 @@ build on violations:
   (``campaign status`` prints them).
 * **Registry contracts + artifact checks** — ``vjp="dispatch"`` tunables
   must dispatch a registered ``*_bwd`` sibling (or the forward kernel for
-  transposed-operand gradients) with an oracle; planner rosters must be
-  registry-covered. ``python -m repro.campaign check --db ... --manifest
+  transposed-operand gradients) with an oracle — or declare their
+  decomposition via ``DispatchSpec.bwd_via``, verified against the plan's
+  source; planner rosters must be registry-covered. ``python -m repro.campaign check --db ... --manifest
   ...`` extends this to shipped artifacts: the stale single-arg-dtype keys
   and pre-backward-plane manifests described above are now *detected*, not
   just documented (stale ``int32`` softmax_xent keys are an error; missing
@@ -172,6 +227,8 @@ from __future__ import annotations
 from . import ref  # noqa: F401  (re-exported: the reference oracles)
 from .attention import flash_attention as _flash_tunable  # noqa: F401
 from .attention import flash_attention_bwd as _flash_bwd_tunable  # noqa: F401
+from .fused import matmul_bias_act as _mba_tunable  # noqa: F401
+from .fused import rmsnorm_matmul as _rmm_tunable  # noqa: F401
 from .matmul import matmul as _matmul_tunable  # noqa: F401
 from .moe_gemm import expert_gemm as _expert_gemm_tunable  # noqa: F401
 from .rmsnorm import rmsnorm as _rmsnorm_tunable  # noqa: F401

@@ -112,6 +112,89 @@ def expert_gemm(x: jax.Array, w: jax.Array) -> jax.Array:
     ).astype(x.dtype)
 
 
+def matmul_bias_act(x: jax.Array, w: jax.Array, b: jax.Array,
+                    act: str = "none") -> jax.Array:
+    """Fused-epilogue GEMM: ([m, k] @ [k, n] + b) through an activation.
+
+    ``act`` ∈ {"none", "gelu", "silu"} — the epilogues the fused tunable
+    offers (dense-with-bias projections and the ffn gate/up activations).
+    """
+    h = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "silu":
+        h = jax.nn.silu(h)
+    elif act != "none":
+        raise ValueError(f"unknown fused activation {act!r}")
+    return h.astype(x.dtype)
+
+
+def rmsnorm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array,
+                   eps: float = 1e-6) -> jax.Array:
+    """Fused norm+projection: ``rmsnorm(x, scale) @ w`` (fp32 accumulation)."""
+    return matmul(rmsnorm(x, scale, eps), w)
+
+
+# ---------------------------------------------------------------------------
+# Residual-emitting forward oracles — the tuning references of the residual-
+# contract tunables (DispatchSpec.residuals > 0). Each returns
+# ``(primal, *aux)`` with the same aux the Pallas variant emits, so the
+# correctness gate compares like structure; each derives the aux from the
+# same primal math (never a second code path). The plain oracles above stay
+# the *deployment* references (reference-mode dispatch returns primals only).
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_res(x: jax.Array, weight: jax.Array, eps: float = 1e-6):
+    """:func:`rmsnorm` + its per-row inverse rms residual ([rows] fp32)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    out = (xf * r).astype(x.dtype) * weight
+    return out, r[..., 0]
+
+
+def attention_res(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    window: int = 0,
+):
+    """:func:`attention` + its per-query logsumexp residual ([b, h, s_q] fp32)."""
+    b, h, s_q, d = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0, (h, kv)
+    scale = scale if scale is not None else d ** -0.5
+    group = h // kv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s_k = k.shape[2]
+    if causal or window:
+        q_idx = jnp.arange(s_q)[:, None] + (s_k - s_q)
+        k_idx = jnp.arange(s_k)[None, :]
+        mask = jnp.ones((s_q, s_k), dtype=bool)
+        if causal:
+            mask &= q_idx >= k_idx
+        if window:
+            mask &= (q_idx - k_idx) < window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    lse = jax.nn.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lse[..., None])
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+    return out, lse
+
+
+def softmax_xent_res(logits: jax.Array, labels: jax.Array):
+    """:func:`softmax_xent` + its per-row logsumexp residual ([r] fp32)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - label_logit, lse
+
+
 # ---------------------------------------------------------------------------
 # Backward oracles — the reference plane of the tuned backward dispatch
 # sites. Each is the VJP of its forward oracle (so fwd/bwd reference pairs
@@ -122,8 +205,14 @@ def expert_gemm(x: jax.Array, w: jax.Array) -> jax.Array:
 
 
 def rmsnorm_bwd(ct: jax.Array, x: jax.Array, weight: jax.Array,
-                eps: float = 1e-6):
-    """VJP of :func:`rmsnorm`: (d_x, d_weight)."""
+                invrms: Optional[jax.Array] = None, eps: float = 1e-6):
+    """VJP of :func:`rmsnorm`: (d_x, d_weight).
+
+    ``invrms`` is the residual-threaded inverse rms the *kernel* consumes;
+    the oracle stays the VJP of the forward oracle (it re-derives everything
+    from x), so fwd/bwd reference pairs cannot drift apart.
+    """
+    del invrms
     _, vjp = jax.vjp(lambda xx, ww: rmsnorm(xx, ww, eps), x, weight)
     return vjp(ct)
 
@@ -133,11 +222,18 @@ def attention_bwd(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
+    o: Optional[jax.Array] = None,    # residual: the forward output
+    lse: Optional[jax.Array] = None,  # residual: per-query logsumexp
     causal: bool = True,
     scale: Optional[float] = None,
     window: int = 0,
 ):
-    """VJP of :func:`attention`: (d_q, d_k, d_v)."""
+    """VJP of :func:`attention`: (d_q, d_k, d_v).
+
+    ``o``/``lse`` are the residuals the *kernel* consumes (delta rows and
+    the softmax reconstruction); the oracle recomputes from (q, k, v).
+    """
+    del o, lse
     _, vjp = jax.vjp(
         lambda qq, kk, vv: attention(qq, kk, vv, causal=causal, scale=scale,
                                      window=window),
@@ -146,11 +242,14 @@ def attention_bwd(
     return vjp(ct)
 
 
-def softmax_xent_bwd(ct: jax.Array, logits: jax.Array, labels: jax.Array) -> jax.Array:
+def softmax_xent_bwd(ct: jax.Array, logits: jax.Array, labels: jax.Array,
+                     lse: Optional[jax.Array] = None) -> jax.Array:
     """VJP of :func:`softmax_xent` w.r.t. logits: (softmax - onehot) · ct.
 
     ``ct`` is the per-row loss cotangent [r]; labels carry no gradient.
+    ``lse`` is the residual the *kernel* consumes; the oracle recomputes.
     """
+    del lse
     _, vjp = jax.vjp(lambda ll: softmax_xent(ll, labels), logits)
     return vjp(ct)[0]
 

@@ -22,12 +22,12 @@ from ..core.platform import TPU_V5E
 from . import ref
 
 
-def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, r_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
     var = jnp.mean(x * x, axis=-1, keepdims=True)
-    o_ref[...] = ((x * jax.lax.rsqrt(var + eps)) * w_ref[...].astype(jnp.float32)).astype(
-        o_ref.dtype
-    )
+    r = jax.lax.rsqrt(var + eps)
+    o_ref[...] = ((x * r) * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+    r_ref[...] = r
 
 
 def rmsnorm_pallas(
@@ -37,25 +37,40 @@ def rmsnorm_pallas(
     block_rows: int,
     eps: float = 1e-6,
     interpret: bool = False,
-) -> jax.Array:
+    return_residuals: bool = False,
+):
+    """Fused rmsnorm; ``return_residuals=True`` additionally yields the
+    per-row inverse rms ([rows] fp32) — the residual the backward kernel
+    consumes instead of re-deriving it (see the dispatch residual contract).
+    """
     rows, d = x.shape
     block_rows = min(block_rows, rows)
     pad = (-rows) % block_rows
     xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
     grid = (xp.shape[0] // block_rows,)
-    out = pl.pallas_call(
+    out, invrms = pl.pallas_call(
         functools.partial(_rmsnorm_kernel, eps=eps),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
             pl.BlockSpec((1, d), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xp.shape, x.dtype),
+            jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.float32),
+        ],
         compiler_params=_compat.CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xp, weight[None, :])
-    return out[:rows] if pad else out
+    if pad:
+        out = out[:rows]
+    if return_residuals:
+        return out, invrms[:rows, 0]
+    return out
 
 
 RMSNORM_SPACE = ParamSpace(
@@ -101,25 +116,33 @@ def _rmsnorm_example():
     ), {}
 
 
-def _rmsnorm_bwd_plan(ct, x, weight, **kwargs):
-    """Backward plan for the fwd tunable: one fused bwd dispatch site."""
+def _rmsnorm_bwd_plan(ct, x, weight, y, invrms, **kwargs):
+    """Backward plan for the fwd tunable: one fused bwd dispatch site.
+
+    Residual contract: called with the forward's canonical args, the primal
+    output and the saved inverse-rms rows — the bwd kernel consumes invrms
+    instead of re-deriving it (one fewer reduction over x).
+    """
     from ..core.runtime import dispatch
 
-    return dispatch("rmsnorm_bwd", ct, x, weight, **kwargs)
+    del y  # the rmsnorm gradient needs x and invrms, not the output
+    return dispatch("rmsnorm_bwd", ct, x, weight, invrms, **kwargs)
 
 
 @tunable(
     "rmsnorm",
     space=RMSNORM_SPACE,
-    reference=ref.rmsnorm,
+    reference=ref.rmsnorm_res,
     heuristic=_rmsnorm_heuristic,
-    dispatch=DispatchSpec(canonicalize=_rmsnorm_canon, example=_rmsnorm_example,
-                          vjp="dispatch", bwd=_rmsnorm_bwd_plan),
+    dispatch=DispatchSpec(reference=ref.rmsnorm,
+                          canonicalize=_rmsnorm_canon, example=_rmsnorm_example,
+                          vjp="dispatch", bwd=_rmsnorm_bwd_plan, residuals=1),
 )
 def rmsnorm(x, weight, *, block_rows: int, eps: float = 1e-6, interpret: Optional[bool] = None):
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
-    return rmsnorm_pallas(x, weight, block_rows=block_rows, eps=eps, interpret=interpret)
+    return rmsnorm_pallas(x, weight, block_rows=block_rows, eps=eps,
+                          interpret=interpret, return_residuals=True)
 
 
 # ---------------------------------------------------------------------------
@@ -127,8 +150,8 @@ def rmsnorm(x, weight, *, block_rows: int, eps: float = 1e-6, interpret: Optiona
 # ---------------------------------------------------------------------------
 
 
-def _rmsnorm_bwd_kernel(ct_ref, x_ref, w_ref, dx_ref, dw_ref, dw_scr,
-                        *, eps: float, d: int, r_steps: int):
+def _rmsnorm_bwd_kernel(ct_ref, x_ref, w_ref, r_ref, dx_ref, dw_ref, dw_scr,
+                        *, d: int, r_steps: int):
     ri = pl.program_id(0)
 
     @pl.when(ri == 0)
@@ -138,10 +161,10 @@ def _rmsnorm_bwd_kernel(ct_ref, x_ref, w_ref, dx_ref, dw_ref, dw_scr,
     x = x_ref[...].astype(jnp.float32)             # [block_rows, d]
     ct = ct_ref[...].astype(jnp.float32)
     w = w_ref[...].astype(jnp.float32)             # [1, d]
-    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    r = r_ref[...]                                 # [block_rows, 1] fp32
     g = ct * w                                     # upstream × scale
-    # dx_j = g_j·r − x_j·r³·mean_i(g_i·x_i); padded rows are all-zero, so
-    # their g (and hence dx / dw contribution) vanishes.
+    # dx_j = g_j·r − x_j·r³·mean_i(g_i·x_i); padded rows carry r = 0 (the
+    # residual pad value), so their g·r and dw contribution vanish.
     dot = jnp.sum(g * x, axis=-1, keepdims=True)
     dx_ref[...] = (g * r - x * (r ** 3) * (dot / d)).astype(dx_ref.dtype)
     dw_scr[...] += jnp.sum(ct * (x * r), axis=0, keepdims=True)
@@ -155,25 +178,36 @@ def rmsnorm_bwd_pallas(
     ct: jax.Array,      # [rows, d] — cotangent of the rmsnorm output
     x: jax.Array,       # [rows, d]
     weight: jax.Array,  # [d]
+    invrms: jax.Array,  # [rows] fp32 — the forward's saved inverse rms
     *,
     block_rows: int,
     eps: float = 1e-6,
     interpret: bool = False,
 ):
+    """Fused (d_x, d_weight) given the residual-threaded inverse rms.
+
+    Pre-residual-contract, this kernel re-derived ``rsqrt(mean(x²)+eps)``
+    per row; the forward now hands it over, so the bwd pass is pure
+    elementwise+reduction work on (ct, x, invrms). ``eps`` is accepted for
+    key/reference symmetry but unused — the residual already encodes it.
+    """
+    del eps
     rows, d = x.shape
     block_rows = min(block_rows, rows)
     pad = (-rows) % block_rows
     if pad:
         ct = jnp.pad(ct, ((0, pad), (0, 0)))
         x = jnp.pad(x, ((0, pad), (0, 0)))
+        invrms = jnp.pad(invrms, (0, pad))
     r_steps = x.shape[0] // block_rows
     dx, dw = pl.pallas_call(
-        functools.partial(_rmsnorm_bwd_kernel, eps=eps, d=d, r_steps=r_steps),
+        functools.partial(_rmsnorm_bwd_kernel, d=d, r_steps=r_steps),
         grid=(r_steps,),
         in_specs=[
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
             pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
@@ -187,11 +221,11 @@ def rmsnorm_bwd_pallas(
         # the row grid carries the d_weight accumulator: sequential
         compiler_params=_compat.CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
-    )(ct, x, weight[None, :])
+    )(ct, x, weight[None, :], invrms.astype(jnp.float32)[:, None])
     return (dx[:rows] if pad else dx), dw[0]
 
 
-def _rmsnorm_bwd_heuristic(ct, x, weight):
+def _rmsnorm_bwd_heuristic(ct, x, weight, invrms):
     return _rmsnorm_heuristic(x, weight)
 
 
@@ -199,10 +233,15 @@ def _rmsnorm_bwd_example():
     import numpy as np
 
     rs = np.random.RandomState(1)
+    x = jnp.asarray(rs.randn(16, 32), jnp.float32)
+    # The invrms residual must be consistent with x — the oracle recomputes
+    # it from x while the kernel trusts the handed-in rows.
+    invrms = jax.lax.rsqrt(jnp.mean(x * x, axis=-1) + 1e-6)
     return (
         jnp.asarray(rs.randn(16, 32), jnp.float32),   # ct
-        jnp.asarray(rs.randn(16, 32), jnp.float32),   # x
+        x,                                            # x
         jnp.asarray(rs.randn(32), jnp.float32),       # weight
+        invrms,                                       # invrms residual
     ), {}
 
 
@@ -211,16 +250,18 @@ def _rmsnorm_bwd_example():
     space=RMSNORM_SPACE,
     reference=ref.rmsnorm_bwd,
     heuristic=_rmsnorm_bwd_heuristic,
-    # ct and x are token-row-sharded; no second-order grads (vjp="none").
+    # ct, x and invrms are token-row-sharded. vjp="reference" (not "none"):
+    # the oracle is plain differentiable jnp, so grad-of-grad can
+    # differentiate *through* this gradient site.
     dispatch=DispatchSpec(example=_rmsnorm_bwd_example,
-                          data_parallel_args=(0, 1), vjp="none"),
+                          data_parallel_args=(0, 1, 3), vjp="reference"),
 )
-def rmsnorm_bwd(ct, x, weight, *, block_rows: int, eps: float = 1e-6,
+def rmsnorm_bwd(ct, x, weight, invrms, *, block_rows: int, eps: float = 1e-6,
                 interpret: Optional[bool] = None):
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
-    return rmsnorm_bwd_pallas(ct, x, weight, block_rows=block_rows, eps=eps,
-                              interpret=interpret)
+    return rmsnorm_bwd_pallas(ct, x, weight, invrms, block_rows=block_rows,
+                              eps=eps, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -247,13 +288,14 @@ def _rmsnorm_grid_model(config, shapes=None):
             RefModel("x", (br, d), row, (rp, d)),
             RefModel("w", (1, d), w0, (1, d)),
             RefModel("out", (br, d), row, (rp, d), role="out"),
+            RefModel("invrms", (br, 1), row, (rp, 1), role="out"),
         ),
     )
 
 
 def _rmsnorm_bwd_grid_model(config, shapes=None):
     if shapes is None:
-        shapes = ((8192, 4096), (8192, 4096), (4096,))
+        shapes = ((8192, 4096), (8192, 4096), (4096,), (8192,))
     rows, d = shapes[1]
     br = min(config["block_rows"], rows)
     rp = rows + (-rows) % br
@@ -265,6 +307,7 @@ def _rmsnorm_bwd_grid_model(config, shapes=None):
             RefModel("ct", (br, d), row, (rp, d)),
             RefModel("x", (br, d), row, (rp, d)),
             RefModel("w", (1, d), w0, (1, d)),
+            RefModel("invrms", (br, 1), row, (rp, 1)),
             RefModel("dx", (br, d), row, (rp, d), role="out"),
             RefModel("dw", (1, d), w0, (1, d), role="out"),
         ),

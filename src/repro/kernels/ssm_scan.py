@@ -280,7 +280,8 @@ def _ssm_scan_bwd_example():
     heuristic=_ssm_scan_bwd_heuristic,
     dispatch=DispatchSpec(example=_ssm_scan_bwd_example,
                           data_parallel_args=(0, 1, 2, 3, 4, 5, 7),
-                          vjp="none"),
+                          # Reference VJP: grad-of-grad differentiates through.
+                          vjp="reference"),
 )
 def ssm_scan_bwd(ct_y, ct_h, xc, dt, B, C, A, h0, *, chunk: int):
     """VJP of the scan with the remat window as the knob: differentiates the
@@ -445,7 +446,8 @@ def _ssm_update_bwd_example():
     heuristic=_ssm_update_bwd_heuristic,
     dispatch=DispatchSpec(example=_ssm_update_bwd_example,
                           data_parallel_args=(0, 1, 2, 3, 4, 5, 7),
-                          vjp="none"),
+                          # Reference VJP: grad-of-grad differentiates through.
+                          vjp="reference"),
 )
 def ssm_update_bwd(ct_y, ct_h, xc, dt, B, C, A, h, *, block_d: int):
     """Blocked VJP of the decode update: d_inner is sliced into block_d

@@ -27,7 +27,7 @@ _NEG_INF = -1e30
 
 
 def _xent_kernel(
-    logits_ref, labels_ref, loss_ref,
+    logits_ref, labels_ref, loss_ref, lse_ref,
     m_scr, l_scr, ll_scr,
     *,
     block_v: int,
@@ -59,6 +59,7 @@ def _xent_kernel(
     def _done():
         lse = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
         loss_ref[...] = (lse - ll_scr[...]).astype(loss_ref.dtype)
+        lse_ref[...] = lse
 
 
 def softmax_xent_pallas(
@@ -68,7 +69,12 @@ def softmax_xent_pallas(
     block_rows: int,
     block_v: int,
     interpret: bool = False,
-) -> jax.Array:
+    return_residuals: bool = False,
+):
+    """Online-lse cross entropy; ``return_residuals=True`` additionally
+    yields the per-row logsumexp ([rows] fp32) the backward kernel consumes
+    instead of re-streaming the logits (the dispatch residual contract).
+    """
     rows, vocab = logits.shape
     block_rows = min(block_rows, rows)
     block_v = min(block_v, vocab)
@@ -83,15 +89,21 @@ def softmax_xent_pallas(
     v_steps = vp // block_v
     grid = (rp // block_rows, v_steps)
 
-    loss = pl.pallas_call(
+    loss, lse = pl.pallas_call(
         functools.partial(_xent_kernel, block_v=block_v, v_steps=v_steps),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, block_v), lambda ri, vi: (ri, vi)),
             pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
         ],
-        out_specs=pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
-        out_shape=jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
+            pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_rows, 1), jnp.float32),
             pltpu.VMEM((block_rows, 1), jnp.float32),
@@ -102,6 +114,8 @@ def softmax_xent_pallas(
         ),
         interpret=interpret,
     )(logits, labels.astype(jnp.int32)[:, None])
+    if return_residuals:
+        return loss[:rows, 0], lse[:rows, 0]
     return loss[:rows, 0]
 
 
@@ -135,54 +149,44 @@ def _xent_example():
     ), {}
 
 
-def _xent_bwd_plan(ct, logits, labels, **kwargs):
+def _xent_bwd_plan(ct, logits, labels, loss, lse, **kwargs):
     """Backward plan: d_logits is one fused bwd dispatch site; labels carry
-    no gradient (None → float0 cotangent)."""
+    no gradient (None → float0 cotangent).
+
+    Residual contract: the forward's per-row logsumexp rides in as ``lse``,
+    so the bwd kernel skips the online-lse re-streaming pass entirely.
+    """
     from ..core.runtime import dispatch
 
-    return dispatch("softmax_xent_bwd", ct, logits, labels, **kwargs), None
+    del loss  # d_logits needs the lse residual, not the loss values
+    return dispatch("softmax_xent_bwd", ct, logits, labels, lse, **kwargs), None
 
 
 @tunable(
     "softmax_xent",
     space=XENT_SPACE,
-    reference=ref.softmax_xent,
+    reference=ref.softmax_xent_res,
     heuristic=_xent_heuristic,
     # logits AND labels lead with the token-row dim (both batch-sharded).
-    dispatch=DispatchSpec(example=_xent_example, data_parallel_args=(0, 1),
-                          vjp="dispatch", bwd=_xent_bwd_plan),
+    dispatch=DispatchSpec(reference=ref.softmax_xent,
+                          example=_xent_example, data_parallel_args=(0, 1),
+                          vjp="dispatch", bwd=_xent_bwd_plan, residuals=1),
 )
 def softmax_xent(logits, labels, *, block_rows: int, block_v: int, interpret: Optional[bool] = None):
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
     return softmax_xent_pallas(
-        logits, labels, block_rows=block_rows, block_v=block_v, interpret=interpret
+        logits, labels, block_rows=block_rows, block_v=block_v,
+        interpret=interpret, return_residuals=True,
     )
 
 
 # ---------------------------------------------------------------------------
-# Backward: d_logits = (softmax − onehot(label)) · ct, vocab-streamed
+# Backward: d_logits = (softmax − onehot(label)) · ct, vocab-streamed.
+# The forward's residual contract threads its per-row logsumexp in, so the
+# old online-lse re-streaming pass is gone: ONE pallas_call, one read of the
+# logits + one write of d_logits.
 # ---------------------------------------------------------------------------
-
-
-def _xent_lse_kernel(logits_ref, lse_ref, m_scr, l_scr, *, v_steps: int):
-    vi = pl.program_id(1)
-
-    @pl.when(vi == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-
-    x = logits_ref[...].astype(jnp.float32)
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, x.max(axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    l_scr[...] = l_scr[...] * alpha + jnp.exp(x - m_new).sum(axis=-1, keepdims=True)
-    m_scr[...] = m_new
-
-    @pl.when(vi == v_steps - 1)
-    def _done():
-        lse_ref[...] = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
 
 
 def _xent_bwd_kernel(logits_ref, labels_ref, ct_ref, lse_ref, dl_ref, *, block_v: int):
@@ -198,14 +202,15 @@ def softmax_xent_bwd_pallas(
     ct: jax.Array,      # [rows] — per-row loss cotangent (fp32)
     logits: jax.Array,  # [rows, vocab]
     labels: jax.Array,  # [rows] int32
+    lse: jax.Array,     # [rows] fp32 — the forward's saved logsumexp
     *,
     block_rows: int,
     block_v: int,
     interpret: bool = False,
 ) -> jax.Array:
-    """Two streamed passes over the logits: an online-logsumexp pass (the
-    forward's (m, l) trick) and the d_logits pass — HBM traffic is two reads
-    + one write, never a [rows, vocab] fp32 softmax materialization."""
+    """One streamed pass over the logits given the residual-threaded lse —
+    HBM traffic is one read + one write, never a [rows, vocab] fp32 softmax
+    materialization and (post residual contract) never a second lse pass."""
     rows, vocab = logits.shape
     block_rows = min(block_rows, rows)
     block_v = min(block_v, vocab)
@@ -215,27 +220,14 @@ def softmax_xent_bwd_pallas(
         logits = jnp.pad(logits, ((0, pad_r), (0, pad_v)), constant_values=_NEG_INF)
         labels = jnp.pad(labels, (0, pad_r))
         ct = jnp.pad(ct, (0, pad_r))
+        # Padded rows: lse = 0 with all-(-1e30) logits → p ≈ 0, ct = 0.
+        lse = jnp.pad(lse, (0, pad_r))
     rp, vp = logits.shape
     v_steps = vp // block_v
     grid = (rp // block_rows, v_steps)
     labels2 = labels.astype(jnp.int32)[:, None]
     ct2 = ct.astype(jnp.float32)[:, None]
-
-    lse = pl.pallas_call(
-        functools.partial(_xent_lse_kernel, v_steps=v_steps),
-        grid=grid,
-        in_specs=[pl.BlockSpec((block_rows, block_v), lambda ri, vi: (ri, vi))],
-        out_specs=pl.BlockSpec((block_rows, 1), lambda ri, vi: (ri, 0)),
-        out_shape=jax.ShapeDtypeStruct((rp, 1), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((block_rows, 1), jnp.float32),
-            pltpu.VMEM((block_rows, 1), jnp.float32),
-        ],
-        compiler_params=_compat.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(logits)
+    lse2 = lse.astype(jnp.float32)[:, None]
 
     dl = pl.pallas_call(
         functools.partial(_xent_bwd_kernel, block_v=block_v),
@@ -252,11 +244,11 @@ def softmax_xent_bwd_pallas(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
-    )(logits, labels2, ct2, lse)
+    )(logits, labels2, ct2, lse2)
     return dl[:rows, :vocab]
 
 
-def _xent_bwd_heuristic(ct, logits, labels):
+def _xent_bwd_heuristic(ct, logits, labels, lse):
     return _xent_heuristic(logits, labels)
 
 
@@ -264,10 +256,15 @@ def _xent_bwd_example():
     import numpy as np
 
     rs = np.random.RandomState(1)
+    logits = jnp.asarray(rs.randn(16, 640) * 2, jnp.float32)
+    # The lse residual must be consistent with the logits — the oracle
+    # recomputes it while the kernel trusts the handed-in rows.
+    lse = jax.nn.logsumexp(logits, axis=-1)
     return (
         jnp.asarray(rs.randn(16), jnp.float32),                 # ct
-        jnp.asarray(rs.randn(16, 640) * 2, jnp.float32),        # logits
+        logits,                                                 # logits
         jnp.asarray(rs.randint(0, 640, 16), jnp.int32),         # labels
+        lse,                                                    # lse residual
     ), {}
 
 
@@ -276,26 +273,28 @@ def _xent_bwd_example():
     space=XENT_SPACE,
     reference=ref.softmax_xent_bwd,
     heuristic=_xent_bwd_heuristic,
-    # ct, logits, labels all lead with the token-row dim; no 2nd-order grads.
+    # ct, logits, labels, lse all lead with the token-row dim.
+    # vjp="reference" (not "none"): the oracle is differentiable jnp, so
+    # grad-of-grad can differentiate through this gradient site.
     dispatch=DispatchSpec(example=_xent_bwd_example,
-                          data_parallel_args=(0, 1, 2), vjp="none"),
+                          data_parallel_args=(0, 1, 2, 3), vjp="reference"),
 )
-def softmax_xent_bwd(ct, logits, labels, *, block_rows: int, block_v: int,
+def softmax_xent_bwd(ct, logits, labels, lse, *, block_rows: int, block_v: int,
                      interpret: Optional[bool] = None):
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
     return softmax_xent_bwd_pallas(
-        ct, logits, labels, block_rows=block_rows, block_v=block_v,
+        ct, logits, labels, lse, block_rows=block_rows, block_v=block_v,
         interpret=interpret,
     )
 
 
 # ---------------------------------------------------------------------------
 # Abstract grid models (static legality; see core/gridmodel.py). The
-# backward realizes TWO pallas_calls — the online-lse pass (v axis carries
-# the (m, l) scratch: "arbitrary") and the d_logits pass (fully parallel) —
-# so its builder returns one model per pass; a config must be legal under
-# both, and under the forward (shared XENT_SPACE).
+# backward realizes ONE pallas_call now that the forward's residual contract
+# threads the lse in (the old online-lse re-streaming pass is gone); the
+# forward carries the (m, l) scratch on its v axis ("arbitrary") and emits
+# the lse residual alongside the loss. Both tune over the shared XENT_SPACE.
 # ---------------------------------------------------------------------------
 from ..core.gridmodel import GridModel, RefModel, register_grid_model
 
@@ -320,26 +319,20 @@ def _xent_grid_model(config, shapes=None):
             RefModel("logits", (br, bv), tile, (rp, vp)),
             RefModel("labels", (br, 1), row, (rp, 1), dtype="int32"),
             RefModel("loss", (br, 1), row, (rp, 1), role="out"),
+            RefModel("lse", (br, 1), row, (rp, 1), role="out"),
         ),
     )
 
 
 def _xent_bwd_grid_model(config, shapes=None):
     if shapes is None:
-        shapes = ((2048,), (2048, 65536), (2048,))
+        shapes = ((2048,), (2048, 65536), (2048,), (2048,))
     rows, vocab = shapes[1]
     br, bv, rp, vp = _xent_blocks(config, rows, vocab)
     grid = (rp // br, vp // bv)
     tile = lambda ri, vi: (ri, vi)
     row = lambda ri, vi: (ri, 0)
-    lse_pass = GridModel(
-        "softmax_xent_bwd", grid, ("parallel", "arbitrary"),
-        (
-            RefModel("logits", (br, bv), tile, (rp, vp)),
-            RefModel("lse", (br, 1), row, (rp, 1), role="out"),
-        ),
-    )
-    dl_pass = GridModel(
+    return GridModel(
         "softmax_xent_bwd", grid, ("parallel", "parallel"),
         (
             RefModel("logits", (br, bv), tile, (rp, vp)),
@@ -349,7 +342,6 @@ def _xent_bwd_grid_model(config, shapes=None):
             RefModel("dl", (br, bv), tile, (rp, vp), role="out"),
         ),
     )
-    return (lse_pass, dl_pass)
 
 
 register_grid_model("softmax_xent", _xent_grid_model, space=XENT_SPACE)

@@ -14,7 +14,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.runtime import dispatch
+from ..core.runtime import dispatch, fusion_wins
 
 Params = Dict[str, Any]
 Axes = Dict[str, Any]
@@ -41,7 +41,12 @@ def dense(p: Params, x: jax.Array) -> jax.Array:
     # Projection gemms go through the dispatch runtime: a tuned matmul record
     # (or the heuristic default) serves the site, and reference mode lowers
     # to plain jnp.dot. The dispatch spec's canonicalization flattens leading
-    # dims, so call sites stay rank-generic.
+    # dims, so call sites stay rank-generic. Biased projections fuse the
+    # bias add into the gemm epilogue — but only where the database banked a
+    # winning fused record (fusion_wins); everywhere else the unfused matmul
+    # path (and its records) is untouched.
+    if "b" in p and fusion_wins("matmul_bias_act", x, p["w"], p["b"]):
+        return dispatch("matmul_bias_act", x, p["w"], p["b"])
     y = dispatch("matmul", x, p["w"])
     if "b" in p:
         y = y + p["b"]
@@ -56,6 +61,19 @@ def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
     # The dispatch spec's canonicalization owns the flatten-to-rows/reshape
     # dance, so call sites stay rank-generic.
     return dispatch("rmsnorm", x, p["scale"], eps=eps)
+
+
+def rmsnorm_dense(pn: Params, pd: Params, x: jax.Array,
+                  eps: float = 1e-6) -> jax.Array:
+    """rmsnorm(x) projected through a dense layer — the norm→gemm producer/
+    consumer pair (final-norm → unembed). Fuses into ``rmsnorm_matmul``
+    where the database banked a winning record for this site; the unfused
+    path keeps the separate rmsnorm + matmul dispatches (and their
+    records)."""
+    if "b" not in pd and fusion_wins("rmsnorm_matmul", x, pn["scale"], pd["w"],
+                                     eps=eps):
+        return dispatch("rmsnorm_matmul", x, pn["scale"], pd["w"], eps=eps)
+    return dense(pd, rmsnorm(pn, x, eps))
 
 
 # ---------------------------------------------------------------------------
@@ -85,14 +103,25 @@ def ffn_init(rng, d: int, ff: int, kind: str, dtype) -> Tuple[Params, Axes]:
     return p, a
 
 
+def _act_matmul(x: jax.Array, w: jax.Array, act: str) -> jax.Array:
+    """act(x @ w) — fused into the gemm epilogue where the database banked a
+    winning ``matmul_bias_act`` record for this site (zero bias), else the
+    plain matmul dispatch followed by the jnp activation."""
+    zb = jnp.zeros((w.shape[-1],), x.dtype)
+    if fusion_wins("matmul_bias_act", x, w, zb, act=act):
+        return dispatch("matmul_bias_act", x, w, zb, act=act)
+    y = dispatch("matmul", x, w)
+    return jax.nn.silu(y) if act == "silu" else jax.nn.gelu(y)
+
+
 def ffn_apply(p: Params, x: jax.Array, kind: str) -> jax.Array:
     mm = lambda a, w: dispatch("matmul", a, w)
     if kind == "swiglu":
-        return mm(jax.nn.silu(mm(x, p["wg"])) * mm(x, p["wu"]), p["wd"])
+        return mm(_act_matmul(x, p["wg"], "silu") * mm(x, p["wu"]), p["wd"])
     if kind == "geglu":
-        return mm(jax.nn.gelu(mm(x, p["wg"])) * mm(x, p["wu"]), p["wd"])
+        return mm(_act_matmul(x, p["wg"], "gelu") * mm(x, p["wu"]), p["wd"])
     if kind == "gelu":
-        return mm(jax.nn.gelu(mm(x, p["wu"])), p["wd"])
+        return mm(_act_matmul(x, p["wu"], "gelu"), p["wd"])
     if kind == "relu2":
         h = jax.nn.relu(mm(x, p["wu"]))
         return mm(h * h, p["wd"])

@@ -28,6 +28,7 @@ from .layers import (
     embedding_init,
     norm_init,
     rmsnorm,
+    rmsnorm_dense,
     unembed,
     unembed_init,
 )
@@ -223,8 +224,11 @@ def decode_step(params, tokens, caches, pos, cfg: ArchConfig, run: tf.RunConfig)
     x, _, caches = tf.stack_apply(
         params["segments"], x, cfg, run, mode="decode", caches=caches, pos=pos
     )
-    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = unembed(params["lm_head"], x[:, 0])
+    # Final-norm → unembed is the rmsnorm_matmul fusion site (rmsnorm is
+    # row-wise, so norm-then-slice == slice-then-norm on the single decode
+    # position).
+    logits = rmsnorm_dense(params["final_norm"], params["lm_head"], x[:, 0],
+                           cfg.norm_eps)
     return logits, caches
 
 

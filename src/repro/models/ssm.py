@@ -116,15 +116,16 @@ def _mamba_out(p, y, xc, z, out_dtype):
     return dispatch("matmul", g, p["out_proj"].astype(jnp.float32)).astype(out_dtype)
 
 
-def mamba_forward(p: Params, x: jax.Array, *, chunk: int = 32,
+def mamba_forward(p: Params, x: jax.Array, *,
                   return_state: bool = False, scan_fn=None):
     """x: [b, s, d]. Returns y or (y, state) with state=(h, conv_tail).
 
     The scan is the ``ssm_scan`` dispatch site; its chunk/block schedule
-    comes from the tuned runtime, so the ``chunk`` parameter here is inert
-    (kept for call-site compatibility). The model-level ``mamba_chunk``
-    tunable instead passes ``scan_fn`` (same (xc, dt, B, C, A, h0) contract)
-    to pin an explicit chunk schedule for wall-clock measurement.
+    comes from the tuned runtime (the old ``chunk`` parameter was inert
+    after the dispatch rewire and is removed). The model-level
+    ``mamba_chunk`` tunable instead passes ``scan_fn`` (same
+    (xc, dt, B, C, A, h0) contract) to pin an explicit chunk schedule for
+    wall-clock measurement.
     Zero-padded tails inside the kernel are identity steps (dt = 0 =>
     dA = 1, dBx = 0), so the returned state is exactly h at step s-1 for
     any sequence length.

@@ -138,9 +138,9 @@ def _mixer_apply(p, x, spec: LayerSpec, cfg: ArchConfig, run: RunConfig,
 
     if spec.mixer == "mamba":
         if mode == "train":
-            return ssm.mamba_forward(p, x, chunk=run.mamba_chunk), None
+            return ssm.mamba_forward(p, x), None
         if mode == "prefill":
-            return ssm.mamba_forward(p, x, chunk=run.mamba_chunk, return_state=True)
+            return ssm.mamba_forward(p, x, return_state=True)
         return ssm.mamba_decode(p, x, cache)
 
     if spec.mixer == "mlstm":

@@ -66,10 +66,10 @@ MAMBA_CHUNK_SPACE = ParamSpace([PowerOfTwoParam("chunk", 4, 512)])
 def make_mamba_tunable(params):
     """Binds mamba params (closure) so the tunable signature is (x, *, chunk).
 
-    ``mamba_forward``'s own chunk arg is inert now that the scan is the
-    ``ssm_scan`` dispatch site, so the knob pins an explicit chunked-scan
-    schedule through the ``scan_fn`` hook — same measurement protocol as
-    before the dispatch rewire.
+    ``mamba_forward`` no longer takes a chunk arg (it was inert after the
+    dispatch rewire and has been removed), so the knob pins an explicit
+    chunked-scan schedule through the ``scan_fn`` hook — same measurement
+    protocol as before the dispatch rewire.
     """
     from ..kernels.ssm_scan import ssm_scan_chunked
 

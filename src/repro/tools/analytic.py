@@ -240,7 +240,8 @@ def site_roofline_seconds(
         mem = 2.0 * rows * d * dt                    # one read + one write
     elif kernel == "rmsnorm_bwd":
         rows, d = sh[0]                              # ct leads, x-shaped
-        flops = 8.0 * rows * d                       # two reductions + dx combine
+        # saved inv-rms residual: no norm recompute, one reduction + dx combine
+        flops = 6.0 * rows * d
         mem = 3.0 * rows * d * dt                    # ct + x read, dx write
     elif kernel == "softmax_xent":
         rows, vocab = sh[0]
@@ -248,17 +249,29 @@ def site_roofline_seconds(
         mem = rows * vocab * dt                      # single streamed read
     elif kernel == "softmax_xent_bwd":
         rows, vocab = sh[1]                          # ct[rows] leads; logits 2nd
-        flops = 8.0 * rows * vocab                   # lse pass + (p − onehot)·ct
-        mem = 3.0 * rows * vocab * dt                # two logits reads + dl write
+        # saved lse residual: (p − onehot)·ct in a single logits pass
+        flops = 5.0 * rows * vocab
+        mem = 2.0 * rows * vocab * dt                # one logits read + dl write
     elif kernel in ("flash_attention", "attn_chunks"):
         b, h, s, hd = sh[0]
         flops = 2.0 * 2.0 * b * h * s * (s / 2.0) * hd   # qk^T + p@v, causal half
         mem = (sum(_prod(x) for x in sh) + _prod(sh[0])) * dt  # q,k,v read + o write
     elif kernel == "flash_attention_bwd":
         b, h, s, hd = sh[0]                          # ct leads, q-shaped
-        # recompute fwd + dq pass (2 gemms) + dkv pass (4 gemms): ~2.5× fwd
-        flops = 5.0 * 2.0 * b * h * s * (s / 2.0) * hd
-        mem = (3.0 * sum(_prod(x) for x in sh[1:]) + 4.0 * _prod(sh[0])) * dt
+        # residual-threaded: dq + dkv passes rebuild p from the saved lse —
+        # the forward-recompute pass is gone: ~2× fwd
+        flops = 4.0 * 2.0 * b * h * s * (s / 2.0) * hd
+        mem = (2.0 * sum(_prod(x) for x in sh[1:4]) + 4.0 * _prod(sh[0])) * dt
+    elif kernel == "matmul_bias_act" and len(sh) >= 2 and len(sh[0]) == 2:
+        m, k = sh[0]                                 # gemm + fused epilogue:
+        n = sh[1][1]                                 # bias add + activation
+        flops = 2.0 * m * k * n + 4.0 * m * n
+        mem = (m * k + k * n + n + m * n) * dt       # no [m, n] round-trip
+    elif kernel == "rmsnorm_matmul" and len(sh) >= 3 and len(sh[2]) == 2:
+        rows, d = sh[0]                              # fused norm epilogue on
+        n = sh[2][1]                                 # the gemm's x operand
+        flops = 2.0 * rows * d * n + 4.0 * rows * d
+        mem = (rows * d + d + d * n + rows * n) * dt  # x read once, no xn trip
     elif kernel == "expert_gemm" and len(sh) >= 2 and len(sh[0]) == 3:
         e, c, k = sh[0]                              # grouped matmul roofline
         n = sh[1][2]

@@ -196,6 +196,27 @@ def test_db_check_flags_invalid_stored_config(tmp_path):
     assert any("no longer valid" in f.message for f in report.warnings())
 
 
+def test_db_check_flags_pre_residual_bwd_key(tmp_path):
+    """A *_bwd record keyed before the residual contract (fewer operands
+    than the tunable's current example call) is warm-start-only: flagged."""
+    from repro.analysis.db_check import check_db
+
+    q, kv = (2, 4, 128, 16), (2, 2, 128, 16)
+    stale = make_key(
+        "flash_attention_bwd", "tpu-v5e", (q, q, kv, kv), "float32", "cTruew0"
+    )
+    good = make_key(
+        "flash_attention_bwd", "tpu-v5e",
+        (q, q, kv, kv, q, (2, 4, 128)), "float32", "cTruew0",
+    )
+    db = tmp_path / "db.json"
+    _write_db(db, {stale: {"objective": 1.0}, good: {"objective": 1.0}})
+    report = check_db(str(db))
+    flagged = [f for f in report.warnings() if f.location == stale]
+    assert len(flagged) == 1 and "pre-residual" in flagged[0].message
+    assert not [f for f in report.warnings() if f.location == good]
+
+
 def _capacity_manifest(tmp_path, capacity=1024, scenarios=("mixtral/train_4k@dp16",)):
     from repro.campaign.planner import TuningJob
     from repro.campaign.scheduler import CampaignManifest

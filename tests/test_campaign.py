@@ -481,14 +481,19 @@ def test_plan_training_jobs_backward_roster():
     # unembed gradients at loss-chunk rows (loss_chunk=32 → 128 local rows)
     assert ((128, cfg.vocab_size), (cfg.vocab_size, d)) in mm
     assert ((d, 128), (128, cfg.vocab_size)) in mm
-    # fused bwd tunables, cotangent-led shapes
+    # fused bwd tunables: cotangent-led shapes + the forward's saved
+    # residuals as trailing keyed operands (residual contract)
     norm_bwd = {j.arg_shapes for j in by_kernel["rmsnorm_bwd"]}
-    assert ((256, d), (256, d), (d,)) in norm_bwd
+    assert ((256, d), (256, d), (d,), (256,)) in norm_bwd  # + inv-rms rows
     xent_bwd = [j for j in by_kernel["softmax_xent_bwd"]][0]
-    assert xent_bwd.arg_shapes == ((128,), (128, cfg.vocab_size), (128,))
-    assert xent_bwd.arg_dtypes == ("float32", "float32", "int32")
+    assert xent_bwd.arg_shapes == (
+        (128,), (128, cfg.vocab_size), (128,), (128,))     # + lse rows
+    assert xent_bwd.arg_dtypes == ("float32", "float32", "int32", "float32")
     attn_bwd = [j for j in by_kernel["flash_attention_bwd"]][0]
     assert attn_bwd.arg_shapes[0] == (4, H, 64, hd)      # ct is q-shaped
+    assert attn_bwd.arg_shapes[4] == (4, H, 64, hd)      # o residual
+    assert attn_bwd.arg_shapes[5] == (4, H, 64)          # lse residual
+    assert attn_bwd.arg_dtypes[5] == "float32"
     assert attn_bwd.key_extra == "cTruew0"
     # per-window parity: every flash fwd job has a matching bwd job
     fwd_extras = {j.key_extra for j in by_kernel["flash_attention"]}

@@ -23,7 +23,8 @@ def test_rmsnorm_bwd(rs, rows, d, br):
     """Fused (dx, dw) kernel vs the VJP oracle, incl. the row-padding path."""
     x, w = _rand(rs, (rows, d)), _rand(rs, (d,))
     ct = _rand(rs, (rows, d))
-    dx, dw = rmsnorm_bwd_pallas(ct, x, w, block_rows=br, interpret=True)
+    _, invrms = ref.rmsnorm_res(x, w)
+    dx, dw = rmsnorm_bwd_pallas(ct, x, w, invrms, block_rows=br, interpret=True)
     dx_r, dw_r = ref.rmsnorm_bwd(ct, x, w)
     np.testing.assert_allclose(dx, dx_r, rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(dw, dw_r, rtol=1e-5, atol=1e-4)
@@ -35,8 +36,9 @@ def test_xent_bwd(rs, rows, v, br, bv):
     logits = _rand(rs, (rows, v), scale=2.0)
     labels = jnp.asarray(rs.randint(0, v, rows), jnp.int32)
     ct = _rand(rs, (rows,))
-    dl = softmax_xent_bwd_pallas(ct, logits, labels, block_rows=br, block_v=bv,
-                                 interpret=True)
+    _, lse = ref.softmax_xent_res(logits, labels)
+    dl = softmax_xent_bwd_pallas(ct, logits, labels, lse, block_rows=br,
+                                 block_v=bv, interpret=True)
     np.testing.assert_allclose(dl, ref.softmax_xent_bwd(ct, logits, labels),
                                rtol=1e-5, atol=1e-5)
 
@@ -49,9 +51,10 @@ def test_flash_attention_bwd(rs, causal, window):
     k = _rand(rs, (b, kv, s, d), scale=0.3)
     v = _rand(rs, (b, kv, s, d))
     ct = _rand(rs, (b, h, s, d))
+    o, lse = ref.attention_res(q, k, v, causal=causal, window=window)
     dq, dk, dv = flash_attention_bwd_pallas(
-        ct, q, k, v, block_q=64, block_k=64, causal=causal, window=window,
-        interpret=True,
+        ct, q, k, v, o, lse, block_q=64, block_k=64, causal=causal,
+        window=window, interpret=True,
     )
     dq_r, dk_r, dv_r = ref.attention_bwd(ct, q, k, v, causal=causal, window=window)
     np.testing.assert_allclose(dq, dq_r, rtol=2e-4, atol=2e-4)
@@ -67,8 +70,9 @@ def test_flash_attention_bwd_blocks(rs, block_q, block_k):
     k = _rand(rs, (b, kv, s, d), scale=0.3)
     v = _rand(rs, (b, kv, s, d))
     ct = _rand(rs, (b, h, s, d))
+    o, lse = ref.attention_res(q, k, v, causal=True)
     grads = flash_attention_bwd_pallas(
-        ct, q, k, v, block_q=block_q, block_k=block_k, causal=True,
+        ct, q, k, v, o, lse, block_q=block_q, block_k=block_k, causal=True,
         interpret=True,
     )
     want = ref.attention_bwd(ct, q, k, v, causal=True)

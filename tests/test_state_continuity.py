@@ -27,9 +27,14 @@ def _x(seed=1, s=S):
 def test_mamba_prefill_state_continuity(s_prefix, chunk):
     p, _ = ssm.mamba_init(jax.random.PRNGKey(0), D, jnp.float32)
     x = _x()
-    y_full = ssm.mamba_forward(p, x, chunk=chunk)
+    import functools
+
+    from repro.kernels.ssm_scan import ssm_scan_chunked
+
+    scan_fn = functools.partial(ssm_scan_chunked, chunk=chunk)
+    y_full = ssm.mamba_forward(p, x, scan_fn=scan_fn)
     y_pre, state = ssm.mamba_forward(
-        p, x[:, :s_prefix], chunk=chunk, return_state=True
+        p, x[:, :s_prefix], scan_fn=scan_fn, return_state=True
     )
     ys = [y_pre]
     for t in range(s_prefix, S):

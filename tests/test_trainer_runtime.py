@@ -321,9 +321,11 @@ def test_bwd_db_keys_match_training_planner():
         key_dw = _args_key(matmul_tunable, (x.T, ct), platform,
                            dp_dims={0: 1, 1: 0})
         ct_n = jnp.zeros((T_global, d), jnp.float32)
+        # the saved inv-rms residual rides along as a keyed operand
+        inv_rms = jnp.zeros((T_global,), jnp.float32)
         key_norm = _args_key(
             rmsnorm_bwd_tunable,
-            (ct_n, x, jnp.zeros((d,), jnp.float32)), platform,
+            (ct_n, x, jnp.zeros((d,), jnp.float32), inv_rms), platform,
         )
     assert key_dx in planned, key_dx
     assert key_dw in planned, key_dw
