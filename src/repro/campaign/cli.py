@@ -124,6 +124,8 @@ def cmd_run(args) -> int:
             evaluator=WallClockEvaluator(repeats=args.repeats, warmup=1),
             max_jobs=args.max_jobs,
             warm_start=not args.no_warm_start,
+            job_timeout=args.job_timeout,
+            max_attempts=args.max_attempts,
         )
     print(json.dumps(summary, indent=1, sort_keys=True))
     if args.metrics_out:
@@ -168,8 +170,8 @@ def cmd_status(args) -> int:
             line += f"  {speed:.2f}x in {j.evaluations} evals"
             if j.seeded:
                 line += " (warm)"
-        elif j.status == "failed":
-            line += f"  ERROR {j.error[:60]}"
+        elif j.status in ("failed", "poisoned"):
+            line += f"  ERROR after {j.attempts or 1} attempt(s): {j.error[:60]}"
         print(line)
     # Sustained-performance accounting: the campaign run's own dispatches
     # (banked in the manifest) plus any deployment snapshots the operator
@@ -260,6 +262,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="wall-clock evaluator repeats")
     pr.add_argument("--no-warm-start", action="store_true",
                     help="disable transfer seeding (cold-search control)")
+    pr.add_argument("--job-timeout", type=float, default=None,
+                    help="wall-clock bound per tuning attempt in seconds "
+                         "(a stuck compile counts as a failed attempt)")
+    pr.add_argument("--max-attempts", type=int, default=1,
+                    help="attempts per job before it is quarantined as "
+                         "poisoned (persisted; resume skips poisoned jobs)")
     pr.add_argument("--allow-missing-bwd", action="store_true",
                     help="run a training manifest that has no backward "
                          "roster (pre-backward-plane plan) instead of "

@@ -79,7 +79,9 @@ class TuningJob:
     priority: float = 0.0                         # analytic seconds at stake per step
     budget: int = 0                               # allocated search evaluations
     # runner-updated (persisted in the manifest → resumability)
-    status: str = "pending"                       # pending | done | failed
+    status: str = "pending"                       # pending | done | poisoned
+    #                                               ("failed" in old manifests)
+    attempts: int = 0                             # attempts consumed (across resumes)
     evaluations: int = 0
     best_objective: float = 0.0
     default_objective: float = 0.0

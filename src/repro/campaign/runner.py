@@ -14,6 +14,8 @@ pairs with the generic code for zero-tuning serve-time specialization.
 from __future__ import annotations
 
 import logging
+import signal
+import threading
 import time
 import zlib
 from typing import Callable, Dict, Optional
@@ -28,6 +30,7 @@ from ..core.search import CoordinateDescent, SearchAlgorithm
 from ..core.tuner import autotune, promoted_dtype
 from ..obs.collect import current_collector as _obs_collector
 from ..obs.trace import span as _obs_span
+from ..testing.faults import fault_point as _fault_point
 from .planner import TuningJob, _register_tunables
 from .scheduler import CampaignManifest
 from .transfer import compute_covers, warm_start_configs
@@ -114,6 +117,60 @@ def materialize_args(job: TuningJob, seed: int = 0):
     return tuple(args)
 
 
+def _sigterm_to_interrupt(signum, frame):
+    # Fleet schedulers send SIGTERM; route it through the same manifest-flush
+    # path as Ctrl-C so a preempted campaign resumes exactly.
+    raise KeyboardInterrupt("SIGTERM")
+
+
+def _run_one_attempt(job, tunable, seeds, search, evaluator, db, arg_seed,
+                     campaign_rt, job_timeout):
+    """One tuning attempt, optionally bounded by a wall-clock timeout.
+
+    With a timeout the attempt runs on a daemon thread: Python cannot cancel
+    a stuck compile, so on expiry the thread is *abandoned* (daemon ⇒ it
+    cannot block process exit) and the attempt counts as failed — exactly
+    the stuck-job containment a fleet needs. BaseExceptions from the job
+    body (KeyboardInterrupt raised by a callback, injected crashes) are
+    re-raised in the caller's thread so interrupt handling stays uniform.
+    """
+
+    def body():
+        _fault_point(f"campaign.job:{job.kernel}", attempt=job.attempts)
+        args = materialize_args(job, seed=arg_seed)
+        with campaign_rt, _obs_span(
+            "campaign.job", kernel=job.kernel, budget=job.budget
+        ):
+            return autotune(
+                tunable, args,
+                search=search, evaluator=evaluator, db=db,
+                key_extra=job.key_extra, seed_configs=seeds,
+            )
+
+    if job_timeout is None:
+        return body()
+    box: Dict[str, object] = {}
+
+    def run():
+        try:
+            box["res"] = body()
+        except BaseException as e:  # noqa: BLE001 — relayed to the caller
+            box["exc"] = e
+
+    t = threading.Thread(
+        target=run, daemon=True, name=f"campaign-job-{job.kernel}"
+    )
+    t.start()
+    t.join(job_timeout)
+    if t.is_alive():
+        raise TimeoutError(
+            f"job {job.kernel} exceeded --job-timeout {job_timeout:g}s"
+        )
+    if "exc" in box:
+        raise box["exc"]  # type: ignore[misc]
+    return box["res"]
+
+
 def run_campaign(
     manifest: CampaignManifest,
     db: TuningDatabase,
@@ -122,6 +179,8 @@ def run_campaign(
     max_jobs: Optional[int] = None,
     warm_start: bool = True,
     arg_seed: int = 0,
+    job_timeout: Optional[float] = None,
+    max_attempts: int = 1,
 ) -> Dict:
     """Execute pending jobs best-first; returns the updated summary.
 
@@ -130,80 +189,131 @@ def run_campaign(
     `search_factory` lets callers swap the per-job strategy; the default is
     coordinate descent at the job's allocated budget, the workhorse for tile
     spaces.
+
+    Fault containment: each job gets up to `max_attempts` tries (counted in
+    ``job.attempts``, persisted — the budget spans resumes) and, with
+    `job_timeout`, a wall-clock bound per attempt. A job that exhausts its
+    attempts is quarantined as ``status="poisoned"`` (error recorded;
+    ``pending()`` skips it, so resume never re-runs a poison pill; a later
+    re-plan resets it). KeyboardInterrupt/SIGTERM flush the manifest — with
+    the in-flight job still pending and its attempt count banked — and bank
+    telemetry before re-raising, so an interrupted campaign resumes exactly.
     """
     _register_tunables()
     evaluator = evaluator or WallClockEvaluator(repeats=3, warmup=1)
+    max_attempts = max(1, int(max_attempts))
     ran = 0
     # Scoped runtime for the whole campaign: any kernel dispatch nested
     # inside variant/reference evaluation resolves against the campaign db
     # without mutating the process default (no cross-talk with a serving
     # engine or test running in the same process).
     campaign_rt = TunedRuntime(db=db, name="campaign")
-    for job in manifest.pending():
-        if max_jobs is not None and ran >= max_jobs:
-            break
-        ran += 1
-        tunable = get_tunable(job.kernel)
-        seeds = []
-        if warm_start:
-            seeds = warm_start_configs(
-                db, job.kernel, manifest.platform, job.arg_shapes,
-                promoted_dtype(job.arg_dtypes), job.key_extra,
-                space=tunable.space,
-            )
-        search = (
-            search_factory(job) if search_factory
-            else CoordinateDescent(budget=job.budget, restarts=2)
-        )
-        col = _obs_collector()
-        t_job = time.perf_counter()
+    prev_sigterm = None
+    if threading.current_thread() is threading.main_thread():
         try:
-            args = materialize_args(job, seed=arg_seed)
-            with campaign_rt, _obs_span(
-                "campaign.job", kernel=job.kernel, budget=job.budget
-            ):
-                res = autotune(
-                    tunable, args,
-                    search=search, evaluator=evaluator, db=db,
-                    key_extra=job.key_extra, seed_configs=seeds,
+            prev_sigterm = signal.signal(signal.SIGTERM, _sigterm_to_interrupt)
+        except (ValueError, OSError):  # pragma: no cover — exotic hosts
+            prev_sigterm = None
+    interrupted = False
+    try:
+        for job in manifest.pending():
+            if max_jobs is not None and ran >= max_jobs:
+                break
+            ran += 1
+            tunable = get_tunable(job.kernel)
+            seeds = []
+            if warm_start:
+                seeds = warm_start_configs(
+                    db, job.kernel, manifest.platform, job.arg_shapes,
+                    promoted_dtype(job.arg_dtypes), job.key_extra,
+                    space=tunable.space,
                 )
-            job.status = "done"
-            job.evaluations = res.evaluations
-            job.best_objective = res.best_objective
-            job.default_objective = res.default_objective
-            job.seeded = bool(seeds)
-            job.error = ""
-            if col.enabled:
-                # tune wall-time + best-vs-heuristic speedup per job, tagged
-                # by kernel family (bounded cardinality).
-                col.observe("campaign.job_s", time.perf_counter() - t_job,
-                            kernel=job.kernel)
-                if res.best_objective > 0 and res.default_objective > 0:
-                    col.observe("campaign.speedup",
-                                res.default_objective / res.best_objective,
+            col = _obs_collector()
+            t_job = time.perf_counter()
+            while True:
+                job.attempts += 1
+                # Fresh strategy per attempt: a search instance carries
+                # consumed-budget state, so a retry must not inherit it.
+                search = (
+                    search_factory(job) if search_factory
+                    else CoordinateDescent(budget=job.budget, restarts=2)
+                )
+                try:
+                    res = _run_one_attempt(
+                        job, tunable, seeds, search, evaluator, db,
+                        arg_seed, campaign_rt, job_timeout,
+                    )
+                except KeyboardInterrupt:
+                    raise      # handled by the outer flush path
+                except Exception as e:  # a failed job must not sink the campaign
+                    job.error = f"{type(e).__name__}: {e}"
+                    if job.attempts < max_attempts:
+                        log.warning(
+                            "job %s %s attempt %d/%d failed (%s); retrying",
+                            job.kernel, job.arg_shapes, job.attempts,
+                            max_attempts, job.error,
+                        )
+                        manifest.save()      # attempt count survives a kill
+                        continue
+                    job.status = "poisoned"
+                    if col.enabled:
+                        col.counter("campaign.jobs", status="poisoned")
+                    col.warn_once(
+                        "campaign.job_poisoned", key=job.db_key(manifest.platform),
+                        kernel=job.kernel, attempts=job.attempts, error=job.error,
+                    )
+                    log.warning(
+                        "job %s %s poisoned after %d attempt(s): %s",
+                        job.kernel, job.arg_shapes, job.attempts, job.error,
+                    )
+                    break
+                job.status = "done"
+                job.evaluations = res.evaluations
+                job.best_objective = res.best_objective
+                job.default_objective = res.default_objective
+                job.seeded = bool(seeds)
+                job.error = ""
+                if col.enabled:
+                    # tune wall-time + best-vs-heuristic speedup per job,
+                    # tagged by kernel family (bounded cardinality).
+                    col.observe("campaign.job_s", time.perf_counter() - t_job,
                                 kernel=job.kernel)
-                col.counter("campaign.jobs", status="done")
-            log.info(
-                "job %s %s: %.3g -> %.3g (%d evals%s)",
-                job.kernel, job.arg_shapes, res.default_objective,
-                res.best_objective, res.evaluations,
-                ", seeded" if seeds else "",
-            )
-        except Exception as e:  # a failed job must not sink the campaign
-            job.status = "failed"
-            job.error = f"{type(e).__name__}: {e}"
-            if col.enabled:
-                col.counter("campaign.jobs", status="failed")
-            log.warning("job %s %s failed: %s", job.kernel, job.arg_shapes, job.error)
-        manifest.save()                      # resume point after every job
-    # Bank the campaign runtime's dispatch accounting in the manifest so
-    # `campaign status` can show it alongside any deployment telemetry —
-    # merged with earlier invocations' counts, so a resumed campaign keeps
-    # the whole run's accounting.
-    manifest.meta["telemetry"] = _merge_snapshots(
-        manifest.meta.get("telemetry"), campaign_rt.telemetry.snapshot()
-    )
-    manifest.save()
+                    if res.best_objective > 0 and res.default_objective > 0:
+                        col.observe("campaign.speedup",
+                                    res.default_objective / res.best_objective,
+                                    kernel=job.kernel)
+                    col.counter("campaign.jobs", status="done")
+                log.info(
+                    "job %s %s: %.3g -> %.3g (%d evals%s)",
+                    job.kernel, job.arg_shapes, res.default_objective,
+                    res.best_objective, res.evaluations,
+                    ", seeded" if seeds else "",
+                )
+                break
+            manifest.save()                  # resume point after every job
+    except KeyboardInterrupt:
+        # The in-flight job keeps status="pending" (status flips only on
+        # completion) and its incremented attempt count — the finally block
+        # persists both, so resume picks up exactly where the interrupt hit.
+        interrupted = True
+        log.warning(
+            "campaign interrupted; manifest flushed with in-flight job "
+            "pending (%d job(s) completed this invocation)", max(0, ran - 1),
+        )
+        raise
+    finally:
+        if prev_sigterm is not None:
+            signal.signal(signal.SIGTERM, prev_sigterm)
+        # Bank the campaign runtime's dispatch accounting in the manifest so
+        # `campaign status` can show it alongside any deployment telemetry —
+        # merged with earlier invocations' counts, so a resumed (or
+        # interrupted) campaign keeps the whole run's accounting.
+        manifest.meta["telemetry"] = _merge_snapshots(
+            manifest.meta.get("telemetry"), campaign_rt.telemetry.snapshot()
+        )
+        if interrupted:
+            manifest.meta["interrupted"] = time.time()
+        manifest.save()
     return manifest.summary()
 
 

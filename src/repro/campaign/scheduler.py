@@ -200,7 +200,12 @@ class CampaignManifest:
         return out
 
     def counts(self) -> Dict[str, int]:
-        out: Dict[str, int] = {"pending": 0, "done": 0, "failed": 0, "deferred": 0}
+        # "poisoned": exhausted its retry budget (runner max_attempts) —
+        # quarantined; pending() skips it, `campaign status` reports it.
+        # "failed" survives for manifests written before retry support.
+        out: Dict[str, int] = {
+            "pending": 0, "done": 0, "failed": 0, "poisoned": 0, "deferred": 0,
+        }
         for j in self.jobs:
             if j.status == "pending" and j.budget == 0:
                 out["deferred"] += 1

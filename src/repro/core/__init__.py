@@ -99,3 +99,5 @@ from .runtime import (
     dispatch_phase,
     entry_point,
 )
+from .runtime import DispatchFault, HealthBook  # guarded execution
+from .bgtune import BackgroundTune, BackgroundTuner, background_policy

@@ -25,6 +25,10 @@ import threading
 import time
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
+# Stdlib-only import (no cycle): the named fault site "db.load:<path>" lets
+# the chaos suite inject torn/corrupt reads deterministically.
+from ..testing.faults import fault_point as _fault_point
+
 log = logging.getLogger("repro.database")
 
 SCHEMA_VERSION = 2
@@ -149,8 +153,24 @@ class TuningDatabase:
 
     # -- io -----------------------------------------------------------------
     def _load(self) -> None:
-        with open(self.path) as f:
-            blob = json.load(f)
+        # A torn/corrupt file must degrade, not crash: our own writers are
+        # atomic (write-to-temp + rename), but an external copy, a partial
+        # scp, or a dying disk can still hand us garbage — and a tuning db
+        # is always recoverable by re-tuning. Same contract as the schema
+        # check below: warn, start empty.
+        try:
+            _fault_point(f"db.load:{self.path}")
+            with open(self.path) as f:
+                blob = json.load(f)
+        except (ValueError, OSError) as e:
+            log.warning(
+                "tuning db %s unreadable (%s: %s); starting with empty "
+                "records (a fresh tuning pass will rebuild them)",
+                self.path, type(e).__name__, e,
+            )
+            self._records = {}
+            self._covers = {}
+            return
         if blob.get("schema", 0) != SCHEMA_VERSION:
             # Old schema: start fresh rather than misread stale records.
             log.warning(

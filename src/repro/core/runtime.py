@@ -90,11 +90,18 @@ from .params import Config
 from .platform import detect_platform, platform_override
 
 # Import order is safe: repro.obs's collector/tracing layers are
-# stdlib-only (obs.drift, which does import core modules, is lazy).
+# stdlib-only (obs.drift, which does import core modules, is lazy), and so
+# is the fault-injection harness (one bool check when no plan is active).
 from ..obs.collect import current_collector as _obs_collector
 from ..obs.trace import span as _obs_span
+from ..testing.faults import fault_point as _fault_point
 
 _MODES = ("kernel", "reference", "auto")
+
+
+class DispatchFault(RuntimeError):
+    """A guarded dispatch's own fault signal (e.g. a failed non-finite
+    probe) — raised and caught inside the guard, quarantining the bucket."""
 
 _platform_name: Optional[str] = None
 
@@ -112,7 +119,9 @@ def _platform() -> str:
     return _platform_name
 
 # Resolution tiers, in the order the default pipeline consults them.
-TIERS = ("override", "exact", "tune", "cover", "heuristic", "reference")
+# "bgtune" is the BackgroundTune tier (repro.core.bgtune): a miss served by
+# the heuristic config while an async tuner works the bucket toward "exact".
+TIERS = ("override", "exact", "tune", "bgtune", "cover", "heuristic", "reference")
 
 # Dispatch phases: forward sites, gradient sites (dispatches made while a
 # backward dispatch plan is executing), and optimizer-update sites (the
@@ -179,10 +188,23 @@ class Resolution:
     ``config=None`` means "execute the reference implementation" (the
     terminal :class:`Reference` tier); otherwise the config is bound as a
     kernel variant.
+
+    ``key`` is the database key the resolution answered (``None`` only for
+    tiers that never compute one — reference mode, ``config=`` overrides).
+    ``cache=False`` keeps the resolution out of the runtime's resolution
+    cache, so the next resolve re-runs the pipeline — how the BackgroundTune
+    tier stays hot-swappable (every resolve re-consults ExactHit until the
+    promoted record lands) and how quarantined buckets re-probe. ``probe``
+    marks a resolution whose first guarded execution should be validated
+    (exception guard + optional non-finite check) before the health book
+    clears it.
     """
 
     config: Optional[Config]
     tier: str
+    key: Optional[str] = None
+    cache: bool = True
+    probe: bool = False
 
 
 class ResolutionPolicy:
@@ -279,6 +301,83 @@ class Reference(ResolutionPolicy):
 
 def default_policy() -> Tuple[ResolutionPolicy, ...]:
     return (ExactHit(), TuneNow(), CoverSet(), Heuristic(), Reference())
+
+
+# ---------------------------------------------------------------------------
+# Health book (guarded execution)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Health:
+    level: str              # "record" (this db record) | "kernel" (any variant)
+    fails: int = 0
+    until: float = 0.0      # monotonic stamp the quarantine lapses (probe due)
+    backoff: float = 0.0    # current re-probe interval
+
+
+class HealthBook:
+    """Per-runtime quarantine ledger for faulting kernel executions.
+
+    Keyed like the resolution cache (full db keys). Two quarantine levels:
+    ``"record"`` — the stored/measured config for this bucket faulted, but
+    the kernel itself may be fine (resolution skips the db-record tiers and
+    serves the heuristic); ``"kernel"`` — the heuristic config faulted too,
+    so no variant is trusted for this bucket (resolution goes straight to
+    reference). Entries re-probe after an exponential backoff (capped), so
+    a transient fault — or a record fixed by a re-tune — heals without a
+    restart; a persistent fault re-quarantines with a longer interval.
+    Bounded: past ``capacity`` entries the oldest-lapsing are dropped (a
+    dropped entry just means one extra probe).
+    """
+
+    def __init__(self, base_s: float = 5.0, max_s: float = 300.0,
+                 capacity: int = 1024):
+        self.base_s = float(base_s)
+        self.max_s = float(max_s)
+        self.capacity = int(capacity)
+        self._lock = threading.Lock()
+        self._entries: Dict[str, _Health] = {}
+
+    def consult(self, key: str) -> Optional[Tuple[str, str]]:
+        """None when healthy; ("probe"|"blocked", level) when quarantined."""
+        with self._lock:
+            h = self._entries.get(key)
+            if h is None:
+                return None
+            state = "probe" if time.monotonic() >= h.until else "blocked"
+            return state, h.level
+
+    def quarantine(self, key: str, level: str) -> _Health:
+        with self._lock:
+            h = self._entries.get(key)
+            if h is None:
+                h = self._entries[key] = _Health(level=level)
+            elif level == "kernel":
+                h.level = "kernel"      # escalate; never de-escalate here
+            h.fails += 1
+            h.backoff = min(self.max_s, self.base_s * (2 ** (h.fails - 1)))
+            h.until = time.monotonic() + h.backoff
+            while len(self._entries) > self.capacity:
+                victim = min(self._entries, key=lambda k: self._entries[k].until)
+                del self._entries[victim]
+            return h
+
+    def record_ok(self, key: str) -> None:
+        with self._lock:
+            self._entries.pop(key, None)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def snapshot(self) -> Dict[str, Dict[str, Any]]:
+        now = time.monotonic()
+        with self._lock:
+            return {
+                k: {"level": h.level, "fails": h.fails,
+                    "backoff_s": h.backoff, "probe_in_s": max(0.0, h.until - now)}
+                for k, h in self._entries.items()
+            }
 
 
 # ---------------------------------------------------------------------------
@@ -460,6 +559,8 @@ class TunedRuntime:
         cache_capacity: Union[int, object] = _INHERIT,
         cache_ttl: Union[float, None, object] = _INHERIT,
         bwd_dispatch: Union[bool, object] = _INHERIT,
+        guard: Union[bool, object] = _INHERIT,
+        guard_nonfinite: Union[bool, object] = _INHERIT,
         name: str = "",
         _is_root: bool = False,
     ):
@@ -498,6 +599,22 @@ class TunedRuntime:
             bwd_dispatch if bwd_dispatch is not _INHERIT
             else (parent.bwd_dispatch if parent else True)
         )
+        # Guarded execution: a faulting kernel variant quarantines its db key
+        # in the health book and the dispatch falls through to heuristic /
+        # reference instead of raising. guard=False restores raise-through
+        # (debugging a kernel wants the traceback, not a silent downgrade).
+        self.guard = bool(
+            guard if guard is not _INHERIT else (parent.guard if parent else True)
+        )
+        # Opt-in: on a bucket's first (probe) resolution, a concrete kernel
+        # output containing non-finite values counts as a fault. Off by
+        # default — under jit the output is a tracer and unobservable, and
+        # legitimate kernels can emit inf masks.
+        self.guard_nonfinite = bool(
+            guard_nonfinite if guard_nonfinite is not _INHERIT
+            else (parent.guard_nonfinite if parent else False)
+        )
+        self.health = HealthBook()
         self.name = name or ("default" if _is_root else f"runtime@{id(self):x}")
         self.telemetry = Telemetry()
         # key -> (db it was resolved against, Resolution, monotonic stamp),
@@ -549,6 +666,10 @@ class TunedRuntime:
     def clear_cache(self) -> None:
         with self._cache_lock:
             self._cache.clear()
+
+    def _cache_evict(self, key: str) -> None:
+        with self._cache_lock:
+            self._cache.pop(key, None)
 
     @property
     def cache_size(self) -> int:
@@ -613,30 +734,71 @@ class TunedRuntime:
         col = _obs_collector()
         t0 = time.perf_counter() if col.enabled else 0.0
         key = _args_key(tunable, args, platform, key_extra, dp_dims=dp_dims)
-        hit = self._cache_get(key, db)
-        if hit is not None:
-            self.telemetry.record(tunable.name, key, hit.tier, cached=True)
-            if col.enabled:
-                col.observe(
-                    "dispatch.resolve_s", time.perf_counter() - t0,
-                    tier=hit.tier, phase=_phase_ctx.get(), cached="hit",
-                )
-            return hit
+        # Health first: a quarantined bucket must not serve its cached (or
+        # freshly re-resolved) faulting config. "blocked" short-circuits to
+        # the degraded tier; "probe" (backoff lapsed) re-runs the pipeline
+        # uncached with probe=True so the guard re-validates before the
+        # health book clears the entry.
+        probe = False
+        skip_record_tiers = False
+        if self.guard:
+            h = self.health.consult(key)
+            if h is not None:
+                state, level = h
+                if state == "probe":
+                    probe = True
+                elif level == "kernel":
+                    res = Resolution(None, "reference", key=key, cache=False)
+                    self.telemetry.record(tunable.name, key, res.tier)
+                    if col.enabled:
+                        col.observe(
+                            "dispatch.resolve_s", time.perf_counter() - t0,
+                            tier=res.tier, phase=_phase_ctx.get(), cached="miss",
+                        )
+                    return res
+                else:
+                    skip_record_tiers = True
+        if not (probe or skip_record_tiers):
+            hit = self._cache_get(key, db)
+            if hit is not None:
+                self.telemetry.record(tunable.name, key, hit.tier, cached=True)
+                if col.enabled:
+                    col.observe(
+                        "dispatch.resolve_s", time.perf_counter() - t0,
+                        tier=hit.tier, phase=_phase_ctx.get(), cached="hit",
+                    )
+                return hit
         req = ResolutionRequest(
             tunable=tunable, args=tuple(args), key=key, key_extra=key_extra,
             db=db, platform=platform, runtime=self,
             allow_tune=self.allow_tune if allow_tune is None else bool(allow_tune),
             tune_kwargs={**self.tune_kwargs, **(tune_kwargs or {})},
         )
+        pipeline = self.policy
+        if skip_record_tiers:
+            # Record-level quarantine: the stored/measured config for this
+            # bucket faulted — resolve among the non-db tiers only.
+            pipeline = tuple(
+                p for p in pipeline if p.name not in ("exact", "tune", "cover")
+            )
         res: Optional[Resolution] = None
-        for pol in self.policy:
+        for pol in pipeline:
             res = pol.resolve(req)
             if res is not None:
                 break
         if res is None:
             # An exhausted custom pipeline falls back to reference execution.
             res = Resolution(None, "reference")
-        self._cache_put(key, db, res)
+        res.key = key
+        if probe or skip_record_tiers:
+            res.cache = False
+            res.probe = probe
+        elif self.guard and self.guard_nonfinite and res.config is not None:
+            # First-resolve warmup probe: the guarded dispatch validates this
+            # execution's output; the cached copy is a plain resolution.
+            res = dataclasses.replace(res, probe=True)
+        if res.cache:
+            self._cache_put(key, db, dataclasses.replace(res, probe=False))
         self.telemetry.record(tunable.name, key, res.tier)
         if col.enabled:
             # Per-tier resolution latency: a 'tune' row is a full search, an
@@ -698,6 +860,8 @@ class TunedRuntime:
             self.telemetry.record(tunable.name, None, "reference")
             return _reference_call(tunable, spec, args, kwargs)
         if config is not None:
+            # Explicit config= stays unguarded: the caller pinned a variant
+            # by hand (tests, benchmarks) and wants the real traceback.
             self.telemetry.record(tunable.name, None, "override")
             cargs, restore = spec.canon(args)
             return restore(_kernel_call(self, tunable, spec, config, cargs, kwargs))
@@ -706,7 +870,75 @@ class TunedRuntime:
                            dp_dims=dp_dims)
         if res.config is None:
             return _reference_call(tunable, spec, args, kwargs)
-        return restore(_kernel_call(self, tunable, spec, res.config, cargs, kwargs))
+        if not self.guard:
+            _fault_point(f"dispatch.kernel:{tunable.name}", tier=res.tier)
+            return restore(_kernel_call(self, tunable, spec, res.config, cargs, kwargs))
+        return self._guarded_call(tunable, spec, res, args, cargs, restore, kwargs)
+
+    def _guarded_call(self, tunable, spec, res, args, cargs, restore, kwargs):
+        """Execute a resolved kernel variant behind the fault guard.
+
+        On exception (or a failed non-finite probe) the bucket's db key is
+        quarantined in the health book and execution falls through the
+        remaining tiers — heuristic config first (when the faulting tier was
+        a stored/measured record and the heuristic differs), reference
+        terminally — so a miscompiled variant or poisoned record degrades a
+        site instead of taking down the run. Exceptions at trace time are
+        caught the same as concrete-execution ones (dispatch under jit runs
+        at trace time); KeyboardInterrupt/SystemExit still propagate. The
+        fall-through execution records an extra telemetry row under the
+        tier that actually served, so a gate can see both the resolution
+        and the degradation.
+        """
+        key = res.key
+        try:
+            rule = _fault_point(f"dispatch.kernel:{tunable.name}", tier=res.tier)
+            out = _kernel_call(self, tunable, spec, res.config, cargs, kwargs)
+            if rule is not None and rule.kind == "nan":
+                out = _nan_corrupt(out)
+            if res.probe:
+                if self.guard_nonfinite and _has_nonfinite(out):
+                    raise DispatchFault(
+                        f"non-finite output from {tunable.name} during "
+                        "first-resolve probe"
+                    )
+                self.health.record_ok(key)
+            return restore(out)
+        except Exception as e:
+            level = (
+                "record" if res.tier in ("exact", "tune", "cover") else "kernel"
+            )
+            self._note_quarantine(tunable, key, res.tier, level, e)
+        if level == "record":
+            hcfg = tunable.default_config(*cargs)
+            if hcfg != res.config:
+                try:
+                    _fault_point(f"dispatch.kernel:{tunable.name}", tier="heuristic")
+                    out = _kernel_call(self, tunable, spec, hcfg, cargs, kwargs)
+                    self.telemetry.record(tunable.name, key, "heuristic")
+                    return restore(out)
+                except Exception as e2:
+                    self._note_quarantine(tunable, key, "heuristic", "kernel", e2)
+            else:
+                # The heuristic IS the faulting config; retrying is pointless.
+                self.health.quarantine(key, "kernel")
+        self.telemetry.record(tunable.name, key, "reference")
+        return _reference_call(tunable, spec, args, kwargs)
+
+    def _note_quarantine(self, tunable, key, tier, level, exc) -> None:
+        self.health.quarantine(key, level)
+        self._cache_evict(key)
+        col = _obs_collector()
+        if col.enabled:
+            col.counter(
+                "dispatch.quarantine", kernel=tunable.name, tier=tier, level=level
+            )
+        # Fires even when metric collection is off: a silently-degraded site
+        # is exactly the hazard warn_once exists for.
+        col.warn_once(
+            "dispatch.quarantine", key=f"{key}|{level}", kernel=tunable.name,
+            tier=tier, level=level, error=f"{type(exc).__name__}: {exc}",
+        )
 
     # -- fusion policy -------------------------------------------------------
     def fusion_wins(self, tunable: Union[str, Tunable], *args, **kwargs) -> bool:
@@ -884,6 +1116,42 @@ def _match_cotangents(grads, primals) -> tuple:
     return tuple(out)
 
 
+def _has_nonfinite(out) -> bool:
+    """True when a *concrete* output contains NaN/inf float values.
+
+    Traced outputs (dispatch under jit) are unobservable here and count as
+    finite — the probe is a warmup-time check, not a jit-time one.
+    """
+    import jax
+    import numpy as np
+
+    for leaf in jax.tree_util.tree_leaves(out):
+        if isinstance(leaf, jax.core.Tracer):
+            return False
+        try:
+            a = np.asarray(leaf)
+        except Exception:
+            continue
+        if a.dtype.kind == "f" and not np.isfinite(a).all():
+            return True
+    return False
+
+
+def _nan_corrupt(out):
+    """Replace concrete float outputs with NaNs (fault kind="nan")."""
+    import jax
+    import jax.numpy as jnp
+
+    def corrupt(x):
+        if isinstance(x, jax.core.Tracer) or not hasattr(x, "dtype"):
+            return x
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.full_like(x, jnp.nan)
+        return x
+
+    return jax.tree_util.tree_map(corrupt, out)
+
+
 def _reference_call(tunable: Tunable, spec: DispatchSpec, args, kwargs):
     ref = spec.reference_for(tunable)
     if ref is None:
@@ -950,6 +1218,8 @@ def runtime(
     cache_capacity: Union[int, object] = _INHERIT,
     cache_ttl: Union[float, None, object] = _INHERIT,
     bwd_dispatch: Union[bool, object] = _INHERIT,
+    guard: Union[bool, object] = _INHERIT,
+    guard_nonfinite: Union[bool, object] = _INHERIT,
     name: str = "",
 ) -> TunedRuntime:
     """Create a scoped dispatch runtime (use as ``with repro.runtime(...)``)."""
@@ -957,7 +1227,8 @@ def runtime(
         db=db, mode=mode, policy=policy, allow_tune=allow_tune,
         tune_kwargs=tune_kwargs, platform=platform,
         cache_capacity=cache_capacity, cache_ttl=cache_ttl,
-        bwd_dispatch=bwd_dispatch, name=name,
+        bwd_dispatch=bwd_dispatch, guard=guard,
+        guard_nonfinite=guard_nonfinite, name=name,
     )
 
 

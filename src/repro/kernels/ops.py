@@ -219,6 +219,50 @@ build on violations:
   and pre-backward-plane manifests described above are now *detected*, not
   just documented (stale ``int32`` softmax_xent keys are an error; missing
   backward rosters and expert-capacity bucket drift are flagged).
+
+Fault isolation (guarded dispatch, ``BackgroundTune``)
+------------------------------------------------------
+
+The ops-era wrappers executed the chosen variant bare: a record that
+miscompiled on a new driver, or a kernel that faulted on one host,
+raised straight through the train/serve step. Kernel-mode dispatch is
+now **guarded by default** — a variant that throws (at trace time or
+concretely) quarantines its database key in the runtime's
+:class:`~repro.core.runtime.HealthBook` and the call falls through the
+remaining tiers (heuristic config if it differs from the faulting one,
+reference terminally), so one poisoned record degrades one bucket
+instead of taking down the run. Quarantine has two levels: ``record``
+(the stored config is bad — db tiers are skipped for that key) and
+``kernel`` (the kernel itself cannot execute — straight to reference);
+entries back off exponentially and re-probe when the backoff lapses, so
+a fixed driver heals without a restart. Observability:
+``dispatch.quarantine`` counter + a ``warn_once`` event per (key, level),
+both exercised by ``tests/test_chaos.py``.
+
+Migration notes:
+
+* ``repro.runtime(guard=False)`` restores the old raise-through
+  behavior (real tracebacks — debugging, benchmarks). An explicit
+  ``config=`` override is always unguarded: the caller pinned a variant
+  by hand and wants the traceback.
+* ``repro.runtime(guard_nonfinite=True)`` additionally validates each
+  bucket's FIRST resolution for NaN/Inf output (then caches a plain
+  resolution) — the poisoned-record drill for silent corruption.
+* The old "miss tunes inline" serving posture
+  (``allow_tune=True`` + TuneNow) blocks a request on a full search.
+  Use :func:`repro.core.background_policy` instead: misses answer with
+  the heuristic config immediately (tier ``"bgtune"``, uncached) while
+  a :class:`~repro.core.BackgroundTuner` worker tunes off-path and
+  ``db.put``s the winner under the request's own key — the next resolve
+  ExactHits, converging live traffic to 100% ExactHit with zero
+  request-path stalls (ROADMAP item 2; ``tests/test_bgtune.py`` gates
+  the convergence and the never-blocks latency bound).
+* Deterministic failure drills live in :mod:`repro.testing.faults`
+  (``FaultPlan`` / ``fault_point``) — the named sites
+  (``dispatch.kernel:*``, ``bgtune.worker:*``, ``campaign.job:*``,
+  ``db.load:*``, ``checkpoint.write:*``, ``train.step:*``) are compiled
+  into the shipped library so staging environments can run the same
+  seeded chaos scenarios CI does.
 """
 from __future__ import annotations
 

@@ -84,6 +84,10 @@ class Request:
     admitted_step: int = -1
     finished_step: int = -1
     slot: int = -1
+    # admission backpressure (structured shed response): submit() refused
+    # this request because the engine queue was at EngineConfig.max_queue.
+    shed: bool = False
+    shed_reason: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +95,9 @@ class EngineConfig:
     max_batch: int = 8              # slot-pool width (= the one decode jit key)
     max_seq: int = 256              # per-slot cache capacity (prefill + decode)
     min_prefill_bucket: int = 16    # smallest admission-prefill seq bucket
+    max_queue: int = 0              # bounded admission queue (0 = unbounded):
+    #                                 past this depth submit() sheds instead of
+    #                                 queueing — backpressure, not OOM
 
 
 def _sample_one(logits_row: np.ndarray, req: Request, rng) -> int:
@@ -159,6 +166,16 @@ class ServingEngine:
         self._slots: List[Optional[_Slot]] = [None] * ecfg.max_batch
         self.queue: List[Request] = []
         self._order = 0
+        # Graceful degradation: a fault escaping a prefill/decode call (one
+        # the dispatch guard could not absorb — e.g. an unguarded runtime, or
+        # a failure outside any dispatch site) flips the engine onto separate
+        # reference-path jits; sticky until reset_degraded(). Lazy: the
+        # fallback jits and their pinned reference-mode runtime are only
+        # built on first fault.
+        self.degraded = False
+        self._ref_rt: Optional[TunedRuntime] = None
+        self._prefill_ref = None
+        self._decode_ref = None
         self.reset_stats()
 
     # ----------------------------------------------------------------- stats
@@ -170,14 +187,87 @@ class ServingEngine:
             "slot_steps_active": 0,   # slot·steps that produced a kept token
             "slot_steps_idle": 0,     # slot·steps burned on empty slots
             "tokens_out": 0,
+            "requests_shed": 0,       # submissions refused at max_queue
+            "degraded_calls": 0,      # prefill/decode calls served by the
+            #                           reference fallback after a fault
         }
 
     def _scope(self):
         """The engine's runtime scope (no-op when no runtime is pinned)."""
         return self.runtime if self.runtime is not None else contextlib.nullcontext()
 
+    # --------------------------------------------------------- degraded path
+    def reset_degraded(self) -> None:
+        """Re-arm the kernel path after an operator fixed the fault."""
+        self.degraded = False
+
+    def _note_degraded(self, site: str, exc: Exception) -> None:
+        self.degraded = True
+        col = _obs_collector()
+        if col.enabled:
+            col.counter("serve.degraded", site=site)
+        # warn_once fires even with metrics off — a silently-degraded engine
+        # is the hazard class this plane exists for.
+        col.warn_once(
+            "serve.degraded", key=site, site=site,
+            error=f"{type(exc).__name__}: {exc}",
+        )
+
+    def _ref_scope(self):
+        """Pinned reference-mode runtime for the fallback jits (lazy).
+
+        jit specializes on shapes, not on ambient contextvars — the fallback
+        needs its OWN jit objects, traced under a reference-mode scope, or it
+        would reuse the kernel-path executable and re-fault identically.
+        """
+        if self._ref_rt is None:
+            with self._scope():
+                # Construction-time inheritance picks up the engine runtime's
+                # db/platform; only the mode flips.
+                self._ref_rt = TunedRuntime(mode="reference", name="engine-degraded")
+        return self._ref_rt
+
+    def _run_prefill(self, toks, L):
+        if not self.degraded:
+            try:
+                with self._scope(), _obs_span("serve.admit.prefill"):
+                    return self._prefill(self.params, toks, L)
+            except Exception as e:  # fault mid-admission: demote, complete
+                self._note_degraded("prefill", e)
+        self.stats["degraded_calls"] += 1
+        if self._prefill_ref is None:
+            cfg, run, ecfg = self.cfg, self.run, self.ecfg
+            self._prefill_ref = jax.jit(
+                lambda p, t, n: lm.prefill(
+                    p, {"tokens": t}, cfg, run, cache_len=ecfg.max_seq, true_len=n
+                )
+            )
+        with self._scope(), self._ref_scope():
+            return self._prefill_ref(self.params, toks, L)
+
+    def _run_decode(self, tokens, pos):
+        if not self.degraded:
+            try:
+                with self._scope():
+                    return self._decode(self.params, tokens, self._caches, pos)
+            except Exception as e:  # fault mid-tick: demote, complete the tick
+                self._note_degraded("decode", e)
+        self.stats["degraded_calls"] += 1
+        if self._decode_ref is None:
+            cfg, run = self.cfg, self.run
+            self._decode_ref = jax.jit(
+                lambda p, t, c, q: lm.decode_step(p, t, c, q, cfg, run)
+            )
+        # self._caches is only reassigned from a call that RETURNED, so the
+        # retry reruns the identical inputs — completed requests stay
+        # bit-identical to a fault-free run (the equivalence contract).
+        with self._scope(), self._ref_scope():
+            return self._decode_ref(self.params, tokens, self._caches, pos)
+
     # ----------------------------------------------------------------- queue
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request; returns False (with a structured shed response
+        on the request) when admission backpressure refuses it."""
         L = len(req.prompt)
         if not 1 <= L < self.ecfg.max_seq:
             raise ValueError(
@@ -185,9 +275,21 @@ class ServingEngine:
             )
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.ecfg.max_queue > 0 and len(self.queue) >= self.ecfg.max_queue:
+            req.shed = True
+            req.shed_reason = (
+                f"queue_full: depth {len(self.queue)} at "
+                f"max_queue={self.ecfg.max_queue}"
+            )
+            self.stats["requests_shed"] += 1
+            col = _obs_collector()
+            if col.enabled:
+                col.counter("serve.shed", reason="queue_full")
+            return False
         req._order = self._order          # submission order, for serve()'s return
         self._order += 1
         self.queue.append(req)
+        return True
 
     def _bucket_len(self, prompt_len: int) -> int:
         if self._has_ssm:
@@ -204,9 +306,9 @@ class ServingEngine:
         sb = self._bucket_len(L)
         toks = np.zeros((1, sb), np.int32)
         toks[0, :L] = req.prompt
-        with self._scope(), _obs_span("serve.admit", slot=slot, prompt_len=L):
-            logits, cache = self._prefill(
-                self.params, jnp.asarray(toks), jnp.asarray(L, jnp.int32)
+        with _obs_span("serve.admit", slot=slot, prompt_len=L):
+            logits, cache = self._run_prefill(
+                jnp.asarray(toks), jnp.asarray(L, jnp.int32)
             )
         self.stats["prefill_calls"] += 1
         self.stats["prefill_tokens"] += sb
@@ -281,10 +383,9 @@ class ServingEngine:
                 if s is not None:
                     tokens[i, 0] = s.cur
                     pos[i] = s.pos
-            with self._scope():
-                logits, self._caches = self._decode(
-                    self.params, jnp.asarray(tokens), self._caches, jnp.asarray(pos)
-                )
+            logits, self._caches = self._run_decode(
+                jnp.asarray(tokens), jnp.asarray(pos)
+            )
             n_act = active()
             self.stats["decode_steps"] += 1
             self.stats["slot_steps_active"] += n_act

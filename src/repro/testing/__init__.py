@@ -1,0 +1,13 @@
+"""Test-support substrate shipped with the library (not only under tests/):
+the deterministic fault-injection harness lives here so the chaos CI leg,
+external integration suites, and staging environments can all drive the
+same seeded failure scenarios against a real process.
+"""
+from .faults import (  # noqa: F401
+    FaultPlan,
+    FaultRule,
+    InjectedFault,
+    InjectedWorkerCrash,
+    active_plan,
+    fault_point,
+)

@@ -21,6 +21,7 @@ Fault-tolerance properties:
 from __future__ import annotations
 
 import json
+import logging
 import os
 import re
 import shutil
@@ -31,6 +32,10 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from ..testing.faults import fault_point as _fault_point
+
+log = logging.getLogger("repro.checkpoint")
 
 _COMMIT_MARK = "_COMMITTED"
 _STEP_RE = re.compile(r"^step_(\d{9})$")
@@ -48,7 +53,12 @@ class Checkpointer:
         self.directory = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        # Writer-thread failure, relayed to the training thread. Guarded by
+        # a lock (writer sets, trainer reads-and-clears) and re-raised from
+        # wait() — which save()/save_async() call first — so a failed async
+        # write can never be silently treated as a committed recovery point.
         self._error: Optional[BaseException] = None
+        self._err_lock = threading.Lock()
         os.makedirs(directory, exist_ok=True)
 
     # -- save -----------------------------------------------------------------
@@ -66,8 +76,14 @@ class Checkpointer:
         def work():
             try:
                 self._write(step, host_tree)
-            except BaseException as e:  # surfaced on next wait()
-                self._error = e
+            except BaseException as e:  # surfaced on next wait()/save*
+                with self._err_lock:
+                    self._error = e
+                log.warning(
+                    "async checkpoint write for step %d failed: %s: %s "
+                    "(will re-raise on the training thread)",
+                    step, type(e).__name__, e,
+                )
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -76,11 +92,15 @@ class Checkpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self._error is not None:
+        with self._err_lock:
             e, self._error = self._error, None
+        if e is not None:
             raise RuntimeError(f"async checkpoint failed: {e}") from e
 
     def _write(self, step: int, host_tree) -> str:
+        # Named site for the chaos suite: inject ENOSPC-class write failures
+        # deterministically (plan.install() — this runs on the writer thread).
+        _fault_point(f"checkpoint.write:{step}", step=step)
         paths, leaves, treedef = _flatten_with_paths(host_tree)
         final = os.path.join(self.directory, f"step_{step:09d}")
         stage = tempfile.mkdtemp(prefix=".tmp-", dir=self.directory)

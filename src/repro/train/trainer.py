@@ -42,6 +42,7 @@ from ..models import lm
 from ..models.transformer import RunConfig
 from ..obs.collect import current_collector as _obs_collector
 from ..obs.trace import span as _obs_span
+from ..testing.faults import fault_point as _fault_point
 from ..optim import adamw
 from . import checkpoint as ckpt_mod
 from .resilience import RestartPolicy, StragglerMonitor, run_with_recovery
@@ -307,6 +308,10 @@ class Trainer:
         def step_fn(step: int) -> Dict:
             if fail_hook is not None:
                 fail_hook(step)
+            # Named chaos site: a FaultPlan can fail chosen steps without the
+            # caller wiring a fail_hook (recovery drills exercise the same
+            # run_with_recovery path either way).
+            _fault_point(f"train.step:{step}", step=step)
             return self.run_one_step()
 
         def restore_fn() -> int:

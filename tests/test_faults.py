@@ -1,0 +1,154 @@
+"""Unit tests for the deterministic fault-injection harness itself.
+
+The chaos suites lean on this harness for their guarantees, so its own
+contract — determinism under a seed, site/ctx matching, after/times/p
+gating, scoping and global install — is pinned here first.
+"""
+import threading
+
+import pytest
+
+from repro.testing import (
+    FaultPlan,
+    FaultRule,
+    InjectedFault,
+    InjectedWorkerCrash,
+    active_plan,
+    fault_point,
+)
+
+
+def test_no_plan_is_inert():
+    assert active_plan() is None
+    assert fault_point("dispatch.kernel:matmul", tier="exact") is None
+
+
+def test_error_kind_raises_and_records():
+    plan = FaultPlan([FaultRule(site="a.b:*", kind="error", message="boom")])
+    with plan:
+        with pytest.raises(InjectedFault, match="boom"):
+            fault_point("a.b:matmul")
+        # non-matching site passes through
+        assert fault_point("other.site") is None
+    assert plan.fired == [("a.b:matmul", "error", 0)]
+    assert plan.count("a.b:*") == 1
+    assert plan.count("a.b:*", kind="nan") == 0
+    # plan exited: inert again
+    assert fault_point("a.b:matmul") is None
+
+
+def test_crash_kind_is_base_exception():
+    with FaultPlan([FaultRule(site="w:*", kind="crash")]):
+        with pytest.raises(InjectedWorkerCrash):
+            fault_point("w:job")
+        # the whole point: except Exception must NOT absorb it
+        with pytest.raises(InjectedWorkerCrash):
+            try:
+                fault_point("w:job")
+            except Exception:  # noqa: BLE001
+                pytest.fail("crash kind must escape `except Exception`")
+
+
+def test_torn_kind_raises_plain_valueerror():
+    # mimics what json.load raises on a half-written file, so real
+    # corruption handlers catch it without knowing about the harness
+    with FaultPlan([FaultRule(site="db.load:*", kind="torn")]):
+        with pytest.raises(ValueError):
+            fault_point("db.load:/tmp/x.json")
+
+
+def test_nan_kind_returned_to_site():
+    with FaultPlan([FaultRule(site="k:*", kind="nan")]) as plan:
+        rule = fault_point("k:x")
+    assert rule is not None and rule.kind == "nan"
+    assert plan.count(kind="nan") == 1
+
+
+def test_latency_kind_sleeps():
+    import time
+
+    with FaultPlan([FaultRule(site="slow:*", kind="latency", delay_s=0.05)]):
+        t0 = time.monotonic()
+        rule = fault_point("slow:step")
+        assert time.monotonic() - t0 >= 0.05
+        assert rule.kind == "latency"
+
+
+def test_after_and_times_gating():
+    # skip the first 2 eligible calls, then fire exactly twice
+    plan = FaultPlan([FaultRule(site="s", kind="error", after=2, times=2)])
+    with plan:
+        outcomes = []
+        for _ in range(6):
+            try:
+                fault_point("s")
+                outcomes.append("ok")
+            except InjectedFault:
+                outcomes.append("fault")
+    assert outcomes == ["ok", "ok", "fault", "fault", "ok", "ok"]
+
+
+def test_probability_is_seeded_deterministic():
+    def run(seed):
+        fired = []
+        with FaultPlan([FaultRule(site="p", kind="error", p=0.5)], seed=seed) as plan:
+            for _ in range(32):
+                try:
+                    fault_point("p")
+                    fired.append(0)
+                except InjectedFault:
+                    fired.append(1)
+            assert len(plan.fired) == sum(fired)
+        return fired
+
+    a, b = run(7), run(7)
+    assert a == b, "same seed must reproduce the same firing sequence"
+    assert 0 < sum(a) < 32, "p=0.5 should fire sometimes, not always"
+    assert run(8) != a, "different seed should differ (vanishingly unlikely tie)"
+
+
+def test_when_ctx_narrowing():
+    rule = FaultRule(site="dispatch.kernel:*", when={"tier": "exact"})
+    with FaultPlan([rule]):
+        assert fault_point("dispatch.kernel:matmul", tier="heuristic") is None
+        with pytest.raises(InjectedFault):
+            fault_point("dispatch.kernel:matmul", tier="exact")
+
+
+def test_nested_plans_innermost_wins():
+    outer = FaultPlan([FaultRule(site="x", kind="error")], name="outer")
+    inner = FaultPlan([], name="inner")
+    with outer:
+        with inner:
+            # inner plan has no rules; it shadows the outer one
+            assert active_plan() is inner
+            assert fault_point("x") is None
+        with pytest.raises(InjectedFault):
+            fault_point("x")
+
+
+def test_install_reaches_fresh_threads():
+    plan = FaultPlan([FaultRule(site="worker:*", kind="error")])
+    plan.install()
+    try:
+        box = {}
+
+        def work():
+            try:
+                fault_point("worker:job")
+                box["out"] = "ok"
+            except InjectedFault:
+                box["out"] = "fault"
+
+        t = threading.Thread(target=work)
+        t.start()
+        t.join()
+        assert box["out"] == "fault", "worker threads must see installed plans"
+    finally:
+        plan.uninstall()
+    assert active_plan() is None
+
+
+def test_bad_kind_rejected():
+    with pytest.raises(ValueError, match="fault kind"):
+        FaultRule(site="x", kind="segfault")
